@@ -1,0 +1,70 @@
+"""Paper Figure 16: overall throughput comparison across execution paths.
+
+Two complementary views (no TPU in this container):
+  * MODEL: predicted GStencils/s on TPU v5e for the vector path
+    (direct/fused_direct) and matrix path (banded fused_matmul), from the
+    enhanced-roofline model with our scheme's structural sparsity;
+  * WALL: measured us/call of the CPU-runnable jnp execution paths
+    (reference rolls vs conv lowering) -- honest CPU numbers, labeled as
+    such, per the "one per paper table" harness contract.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import perfmodel as pm
+from repro.stencil import StencilSpec, make_weights
+from repro.stencil.reference import apply_stencil_steps, apply_stencil_conv
+
+PATTERNS = ["Box-2D1R", "Star-2D1R", "Box-2D3R", "Box-2D7R", "Box-3D1R"]
+
+
+def _gstencils(spec, t, hw, backend) -> float:
+    w = pm.StencilWorkload(spec, t, 4)
+    if backend == "vector":
+        p = pm.perf_vector(w, hw)
+    else:
+        s = pm.sparsity_banded(spec.radius * t, 128)
+        p = pm.perf_matrix(w, hw, s)
+    # GStencils/s = updates/s; one update = one (point, step); t amortized
+    return p.stencil_throughput(w) * t / 1e9
+
+
+def _wall_us(fn, *args, iters=3):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run() -> list[str]:
+    out = ["fig16.pattern,t,model_vec_GSt/s,model_mat_GSt/s,model_winner,"
+           "cpu_rolls_us,cpu_conv_us"]
+    for name in PATTERNS:
+        spec = StencilSpec.from_name(name)
+        t = 4 if spec.dim == 2 else 2
+        gv = _gstencils(spec, t, pm.TPU_V5E_BF16, "vector")
+        gm = _gstencils(spec, t, pm.TPU_V5E_BF16, "matrix")
+        winner = "vector" if gv >= gm else "matrix"
+        # CPU wall-clock of the two oracle lowerings (small grid)
+        n = 256 if spec.dim == 2 else 48
+        x = jnp.asarray(np.random.default_rng(0)
+                        .normal(size=(n,) * spec.dim).astype(np.float32))
+        w = jnp.asarray(make_weights(spec, seed=0))
+        f1 = jax.jit(lambda x: apply_stencil_steps(x, w, t))
+        f2 = jax.jit(lambda x: apply_stencil_conv(x, w))
+        us1 = _wall_us(f1, x)
+        us2 = _wall_us(f2, x)
+        out.append(f"fig16.{name},{t},{gv:.1f},{gm:.1f},{winner},"
+                   f"{us1:.0f},{us2:.0f}")
+    return out
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,29 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` style CSV lines; each sub-benchmark
+documents its own columns in the header line it emits."""
+from __future__ import annotations
+
+import time
+import traceback
+
+
+def main() -> None:
+    from benchmarks import table2, table3, table4, fig10, fig16, halo, scaling
+
+    for mod in (table2, table3, table4, fig10, fig16, halo, scaling):
+        t0 = time.perf_counter()
+        try:
+            lines = mod.run()
+            dt = (time.perf_counter() - t0) * 1e6
+            for line in lines:
+                print(line)
+            print(f"bench.{mod.__name__.split('.')[-1]}.total,"
+                  f"{dt:.0f},us_wall")
+        except Exception as e:
+            traceback.print_exc()
+            print(f"bench.{mod.__name__.split('.')[-1]}.FAILED,0,{e}")
+
+
+if __name__ == "__main__":
+    main()

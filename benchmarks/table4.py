@@ -1,0 +1,39 @@
+"""Paper Table 4: dense vs sparse Tensor Cores (Box-2D1R, t=7, float).
+
+Reproduces the ridge shift (81 -> 161), the bottleneck flip
+(compute -> memory) and the predicted gain; the paper measures 3.06x
+wall-clock (their dense baseline sits below its roofline).  Also evaluates
+the TPU analogue question from DESIGN.md §8: does the int8 MXU ceiling
+(394 TOPS) re-open the sweet spot on v5e the way SpTCs do on A100?"""
+from __future__ import annotations
+
+from repro.core import perfmodel as pm
+from repro.stencil import StencilSpec
+
+
+def run() -> list[str]:
+    out = ["table4.unit,I,ridge,bottleneck,P_actual_TFLOPs,gain"]
+    spec = StencilSpec("box", 2, 1)
+    w = pm.StencilWorkload(spec, 7, 4)
+    dense = pm.perf_matrix(w, pm.A100_FLOAT, 0.47)
+    sparse = pm.perf_sparse_matrix(w, pm.A100_FLOAT, 0.47)
+    out.append(f"table4.A100-dense-TC,{dense.intensity:.0f},{dense.ridge:.0f},"
+               f"{dense.bound.value},{dense.actual_flops/1e12:.2f},1.00x")
+    out.append(f"table4.A100-sparse-TC,{sparse.intensity:.0f},{sparse.ridge:.0f},"
+               f"{sparse.bound.value},{sparse.actual_flops/1e12:.2f},"
+               f"{sparse.actual_flops/dense.actual_flops:.2f}x")
+    # TPU: bf16 MXU vs int8 ceiling (the v5e "raised roof" analogue)
+    s_tpu = pm.sparsity_banded(spec.radius * 7, 128)
+    wt = pm.StencilWorkload(spec, 7, 2)
+    mxu = pm.perf_matrix(wt, pm.TPU_V5E_INT8_CEILING, s_tpu)
+    mxu8 = pm.perf_sparse_matrix(wt, pm.TPU_V5E_INT8_CEILING, s_tpu)
+    out.append(f"table4.v5e-bf16-MXU,{mxu.intensity:.0f},{mxu.ridge:.0f},"
+               f"{mxu.bound.value},{mxu.actual_flops/1e12:.3f},1.00x")
+    out.append(f"table4.v5e-int8-MXU,{mxu8.intensity:.0f},{mxu8.ridge:.0f},"
+               f"{mxu8.bound.value},{mxu8.actual_flops/1e12:.3f},"
+               f"{mxu8.actual_flops/mxu.actual_flops:.2f}x")
+    return out
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

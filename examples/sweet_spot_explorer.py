@@ -1,0 +1,47 @@
+"""Sweet-spot explorer: reproduce the paper's Figures 9/13/14 decision
+surfaces as tables, for the paper's A100 and for our TPU v5e target.
+
+    PYTHONPATH=src python examples/sweet_spot_explorer.py
+"""
+from repro.core import perfmodel as pm
+from repro.stencil import StencilSpec
+
+
+def surface(hw, sparsity_fn, use_sparse, title):
+    print(f"\n=== {title} ===")
+    print("pattern      " + "".join(f"  t={t:<3}" for t in range(1, 9)))
+    for name in ("Box-2D1R", "Box-2D3R", "Star-2D1R", "Box-3D1R", "Box-2D7R"):
+        spec = StencilSpec.from_name(name)
+        row = []
+        for t in range(1, 9):
+            s = sparsity_fn(spec, t)
+            c = pm.compare(pm.StencilWorkload(spec, t, 4), hw, s,
+                           use_sparse_unit=use_sparse)
+            mark = {1: "=", 2: "x", 3: "O", 4: "o" if c.profitable else "x"}[
+                c.scenario.value]
+            row.append(mark)
+        print(f"{name:12s} " + "".join(f"    {m} " for m in row))
+    print("  O = breaks the ceiling (scenario 3)   o = sweet spot (scenario 4)")
+    print("  x = matrix unit loses                 = = equal (both memory-bound)")
+
+
+def main():
+    # paper setting: ConvStencil-style S=0.5 on A100 float
+    surface(pm.A100_FLOAT, lambda s, t: 0.5, False,
+            "A100 fp32, dense Tensor Cores, S=0.5 (Fig. 9)")
+    # paper §4.3: Sparse Tensor Cores widen the region (Fig. 13/14)
+    surface(pm.A100_FLOAT, lambda s, t: 0.47, True,
+            "A100 fp32, SPARSE Tensor Cores, S=0.47 (Fig. 14)")
+    # our TPU target with the banded scheme's structural sparsity
+    surface(pm.TPU_V5E_BF16,
+            lambda s, t: pm.sparsity_banded(s.radius * t, 128), False,
+            "TPU v5e bf16, MXU banded scheme (this work)")
+    print("""
+Reading the TPU surface: the 128-wide MXU tiles make S far smaller than on
+Tensor Cores, so the profitable region shifts toward LARGE effective radii
+(big r or deep fusion) -- the paper's criteria, instantiated for the MXU,
+tell us exactly when the banded path is worth it (cf. benchmarks/fig16).""")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+from .registry import ARCHS, SMOKE, SHAPES, ModelConfig, MoEConfig, SSMConfig, ShapeCell, cells_for, get

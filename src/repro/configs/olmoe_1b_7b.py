@@ -1,0 +1,7 @@
+"""Config module for ``olmoe-1b-7b`` (see registry.py for the numbers)."""
+from repro.configs.registry import ARCHS, SMOKE, SHAPES, cells_for
+
+ARCH = "olmoe-1b-7b"
+FULL = ARCHS[ARCH]
+SMOKE_CFG = SMOKE[ARCH]
+CELLS = {name: SHAPES[name] for name in cells_for(ARCH)}

@@ -1,0 +1,7 @@
+"""Config module for ``tinyllama-1.1b`` (see registry.py for the numbers)."""
+from repro.configs.registry import ARCHS, SMOKE, SHAPES, cells_for
+
+ARCH = "tinyllama-1.1b"
+FULL = ARCHS[ARCH]
+SMOKE_CFG = SMOKE[ARCH]
+CELLS = {name: SHAPES[name] for name in cells_for(ARCH)}

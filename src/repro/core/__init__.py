@@ -1,0 +1,20 @@
+"""Core contribution: the enhanced roofline model, criteria, and selector."""
+from .perfmodel import (
+    HardwareSpec,
+    StencilWorkload,
+    UnitPerf,
+    Comparison,
+    Scenario,
+    Bound,
+    A100_DOUBLE,
+    A100_FLOAT,
+    TPU_V5E_BF16,
+    compare,
+    perf_vector,
+    perf_matrix,
+    perf_sparse_matrix,
+    sparsity_banded,
+    sparsity_convstencil,
+    sparsity_spider,
+)
+from .selector import Decision, select_backend, classify_problem, transition_depth

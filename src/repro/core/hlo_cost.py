@@ -1,0 +1,409 @@
+"""Trip-count-aware cost accounting over optimized HLO text.
+
+``compiled.cost_analysis()`` counts every computation ONCE -- a scan of 94
+layers reports 1/94th of the real FLOPs (verified empirically; see
+tests/test_hlo_cost.py).  Since XLA:SPMD collectives also only exist in the
+post-partitioning HLO, we need our own pass anyway; this module parses
+``compiled.as_text()`` into computations, builds the call graph
+(while/conditional/call/fusion/async), extracts while trip counts from the
+loop-condition constants, and accumulates per-computation costs times the
+product of enclosing trip counts:
+
+  * flops            -- dot ops: 2 * prod(result dims) * prod(contracting dims)
+                        (+1 flop/element for other non-copy ops -- elementwise)
+  * bytes            -- operand + result bytes of dot/fusion/copy/dus/gather/
+                        scatter/convert ops (a materialized-buffer proxy)
+  * collective bytes -- result bytes of all-gather/all-reduce/reduce-scatter/
+                        all-to-all/collective-permute, per kind
+
+This is the dry-run "profiler": no wall clock exists on this CPU-only
+container, so the perf loop (EXPERIMENTS.md §Perf) reads these terms.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "token": 0, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_ONE = re.compile(r"(\w+)\[([\d,]*)\]")
+_NAME_EQ = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*")
+
+
+def _parse_op_line(line: str):
+    """Parse '  %name = SHAPE opcode(...' -> (name, shape_str, opcode).
+
+    SHAPE may be a tuple '(s32[], f32[...], /*index=5*/ ...)' containing
+    '=' inside comments, so we balance parens instead of regexing."""
+    m = _NAME_EQ.match(line)
+    if not m:
+        return None
+    name = m.group(1)
+    rest = line[m.end():]
+    if rest.startswith("("):
+        depth = 0
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    shape = rest[: i + 1]
+                    tail = rest[i + 1:]
+                    break
+        else:
+            return None
+    else:
+        sp = rest.find(" ")
+        if sp < 0:
+            return None
+        shape = rest[:sp]
+        tail = rest[sp:]
+    om = re.match(r"\s*([\w\-]+)\(", tail)
+    if not om:
+        return None
+    return name, shape.strip(), om.group(1)
+
+
+class _OpLineShim:
+    """Back-compat shim: _OP_LINE.match(line).group(1|2|3)."""
+
+    def match(self, line):
+        r = _parse_op_line(line)
+        if r is None:
+            return None
+
+        class _M:
+            def group(self, i):
+                return r[i - 1]
+
+        return _M()
+
+
+_OP_LINE = _OpLineShim()
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s*->")
+_CALLED = re.compile(r"(?:condition|body|true_computation|false_computation|"
+                     r"called_computations?|to_apply|calls)=\{?%?([\w.\-]+)")
+_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+
+
+def _parse_dims(dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+def _shape_elems_bytes(shape_str: str) -> Tuple[int, int]:
+    """Total (elements, bytes) over possibly-tuple shape string."""
+    elems = 0
+    byts = 0
+    for m in _SHAPE_ONE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = _parse_dims(dims)
+        elems += n
+        byts += n * _DTYPE_BYTES[dt]
+    return elems, byts
+
+
+@dataclasses.dataclass
+class OpInfo:
+    name: str
+    shape: str
+    opcode: str
+    line: str
+
+
+@dataclasses.dataclass
+class CompCost:
+    flops: float = 0.0
+    bytes: float = 0.0        # every materialized result (cost_analysis-like)
+    bytes_major: float = 0.0  # fusion-aware HBM-traffic estimate (TPU view):
+    #   dots (operands+result), fusions (result), parameters (read once),
+    #   copies, DUS/gather/scatter, reduces, collectives.  Elementwise /
+    #   convert / broadcast results are assumed fused away on TPU.
+    coll: Dict[str, float] = dataclasses.field(default_factory=dict)
+    coll_counts: Dict[str, float] = dataclasses.field(default_factory=dict)
+    calls: List[Tuple[str, float]] = dataclasses.field(default_factory=list)
+
+
+def split_computations(hlo: str) -> Dict[str, List[str]]:
+    comps: Dict[str, List[str]] = {}
+    cur: Optional[str] = None
+    for line in hlo.splitlines():
+        m = _COMP_HDR.match(line.strip())
+        if m and ("{" in line):
+            cur = m.group(1)
+            comps[cur] = []
+            continue
+        if cur is not None:
+            if line.strip().startswith("}"):
+                cur = None
+                continue
+            comps[cur].append(line)
+    return comps
+
+
+def _entry_name(hlo: str) -> Optional[str]:
+    m = re.search(r"ENTRY\s+%?([\w.\-]+)", hlo)
+    return m.group(1) if m else None
+
+
+def _dot_flops(line: str, shape_str: str, shapes: Dict[str, str]) -> float:
+    """2 * prod(result) * prod(contracting dims of lhs)."""
+    _, rbytes = _shape_elems_bytes(shape_str)
+    relems, _ = _shape_elems_bytes(shape_str)
+    mc = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
+    mo = re.search(r"dot\((?:%?([\w.\-]+)),", line)
+    contract = 1
+    if mc and mo:
+        lhs_shape = shapes.get(mo.group(1))
+        if lhs_shape:
+            dims_m = _SHAPE_ONE.search(lhs_shape)
+            if dims_m:
+                dims = [int(d) for d in dims_m.group(2).split(",") if d]
+                for ci in mc.group(1).split(","):
+                    if ci and int(ci) < len(dims):
+                        contract *= dims[int(ci)]
+    return 2.0 * relems * contract
+
+
+_BYTES_OPS = {"dot", "fusion", "copy", "dynamic-update-slice", "gather",
+              "scatter", "convert", "transpose", "reshape", "concatenate",
+              "broadcast", "iota", "reduce", "select", "compare", "add",
+              "multiply", "subtract", "divide", "exponential", "tanh",
+              "convolution", "pad", "slice", "dynamic-slice", "rsqrt",
+              "parameter", "constant", "log", "maximum", "minimum",
+              "custom-call"}
+# ops whose RESULT bytes count toward the HBM-traffic proxy (materialized
+# buffers post-fusion; parameters/constants count as reads once)
+_SKIP_BYTES = {"tuple", "get-tuple-element", "bitcast", "after-all",
+               "partition-id", "replica-id"}
+
+
+def _dus_update_bytes(line: str, shapes: Dict[str, str]) -> Optional[int]:
+    """For '... dynamic-update-slice(%buf, %upd, ...)' return bytes(upd).
+
+    XLA aliases DUS buffers in place: the real write is the update slice,
+    not the whole buffer (a scan backward DUS-ing into a stacked residual
+    buffer would otherwise be overcounted by the trip count)."""
+    m = re.search(r"dynamic-update-slice\(([^)]*)\)", line)
+    if not m:
+        return None
+    refs = re.findall(r"%?([\w.\-]+)", m.group(1))
+    if len(refs) >= 2 and refs[1] in shapes:
+        return _shape_elems_bytes(shapes[refs[1]])[1]
+    return None
+
+
+def analyze_computation(lines: List[str], shapes: Dict[str, str],
+                        is_entry: bool = False,
+                        fusion_roots: Optional[Dict[str, str]] = None) -> CompCost:
+    """bytes_major model ("external-read + materialization-write"):
+      * reads: entry parameters (once) and dot operands NOT produced inside
+        this computation (loop-carried / captured buffers re-read per
+        iteration).  Intra-computation producer->consumer chains are assumed
+        VMEM-resident (what a fused TPU lowering achieves);
+      * writes: results of fusion / copy / DUS / gather / scatter / reduce /
+        sort ops (materialization points) -- dot results are assumed to flow
+        into their consuming fusion;
+      * collectives: payload counted in both bytes and the collective term.
+    """
+    cost = CompCost()
+    produced = set()
+    for line in lines:
+        m = _OP_LINE.match(line)
+        if m:
+            produced.add(m.group(1))
+    for line in lines:
+        m = _OP_LINE.match(line)
+        if not m:
+            # still harvest call edges (e.g. from lines regexes miss)
+            for cm in _CALLED.finditer(line):
+                cost.calls.append((cm.group(1), 1.0))
+            continue
+        name, shape_str, opcode = m.group(1), m.group(2).strip(), m.group(3)
+        elems, byts = _shape_elems_bytes(shape_str)
+        base_op = opcode.replace("-start", "").replace("-done", "")
+        if opcode.endswith("-done"):
+            continue  # counted at -start
+        if base_op in COLLECTIVES:
+            cost.coll[base_op] = cost.coll.get(base_op, 0.0) + byts
+            cost.coll_counts[base_op] = cost.coll_counts.get(base_op, 0) + 1
+            cost.bytes += byts
+            cost.bytes_major += byts
+            continue
+        if base_op == "dot":
+            cost.flops += _dot_flops(line, shape_str, shapes)
+            cost.bytes += byts
+            # operands: count only computation-external reads
+            for opn in re.findall(r"dot\(([^)]*)\)", line)[:1]:
+                for ref in re.findall(r"%?([\w.\-]+)", opn):
+                    s = shapes.get(ref)
+                    if s:
+                        ob = _shape_elems_bytes(s)[1]
+                        cost.bytes += ob
+                        if ref not in produced:
+                            cost.bytes_major += ob
+        elif base_op == "convolution":
+            cost.flops += 2.0 * elems
+            cost.bytes += byts
+            cost.bytes_major += byts
+        elif base_op in ("while", "conditional", "call", "custom-call",
+                         "async-start"):
+            cost.bytes += 0.0
+        elif base_op == "fusion":
+            cost.bytes += byts
+            dus_b = None
+            if fusion_roots is not None:
+                cm = re.search(r"calls=%?([\w.\-]+)", line)
+                root_line = fusion_roots.get(cm.group(1)) if cm else None
+                if root_line and "dynamic-update-slice(" in root_line:
+                    dus_b = _dus_update_bytes(root_line, shapes)
+            cost.bytes_major += dus_b if dus_b is not None else byts
+            cost.flops += elems  # ~1 flop per produced element (fused chain)
+        elif base_op not in _SKIP_BYTES:
+            # elementwise & data movement: result bytes + 1 flop/elem for math
+            cost.bytes += byts
+            if base_op == "parameter":
+                # entry params = real HBM input reads; loop-body/fusion
+                # params are the caller's buffers (no new traffic)
+                if is_entry:
+                    cost.bytes_major += byts
+            elif base_op == "dynamic-update-slice":
+                ub = _dus_update_bytes(line, shapes)
+                cost.bytes_major += ub if ub is not None else byts
+            elif base_op in ("copy", "gather", "scatter", "reduce",
+                             "reduce-window", "sort"):
+                cost.bytes_major += byts
+            if base_op not in ("parameter", "constant", "iota", "copy",
+                               "transpose", "reshape", "broadcast", "slice",
+                               "concatenate", "pad"):
+                cost.flops += elems
+        # call edges
+        for cm in _CALLED.finditer(line):
+            cost.calls.append((cm.group(1), 1.0))
+        bm = _BRANCHES.search(line)
+        if bm:
+            for ref in re.findall(r"%?([\w.\-]+)", bm.group(1)):
+                cost.calls.append((ref, 1.0))
+    return cost
+
+
+def _while_trip_count(cond_lines: List[str]) -> Optional[int]:
+    """Loop bound from the condition's comparison constant."""
+    consts = {}
+    for line in cond_lines:
+        m = re.match(r"\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*\S+\s+constant\((\d+)\)",
+                     line)
+        if m:
+            consts[m.group(1)] = int(m.group(2))
+    for line in cond_lines:
+        if "compare(" in line:
+            args = re.search(r"compare\(([^)]*)\)", line)
+            if args:
+                refs = re.findall(r"%?([\w.\-]+)", args.group(1))
+                for r in refs:
+                    if r in consts:
+                        return consts[r]
+    if consts:
+        return max(consts.values())
+    return None
+
+
+@dataclasses.dataclass
+class ProgramCost:
+    flops: float
+    bytes: float
+    bytes_major: float
+    coll: Dict[str, float]
+    coll_counts: Dict[str, float]
+    unknown_loops: int
+
+    @property
+    def collective_bytes(self) -> float:
+        return sum(self.coll.values())
+
+
+def analyze_hlo(hlo: str) -> ProgramCost:
+    comps = split_computations(hlo)
+    # global result-shape symbol table (op names are module-unique in HLO)
+    shapes: Dict[str, str] = {}
+    for lines in comps.values():
+        for line in lines:
+            m = _OP_LINE.match(line)
+            if m:
+                shapes[m.group(1)] = m.group(2).strip()
+
+    entry_for_costs = _entry_name(hlo)
+    # fusion computation -> its ROOT op line (for in-place DUS detection)
+    fusion_roots: Dict[str, str] = {}
+    for name, lines in comps.items():
+        for line in lines:
+            if line.strip().startswith("ROOT"):
+                fusion_roots[name] = line
+                break
+    costs = {name: analyze_computation(lines, shapes,
+                                       is_entry=(name == entry_for_costs),
+                                       fusion_roots=fusion_roots)
+             for name, lines in comps.items()}
+
+    # while ops: find (body, cond) pairs + trip counts at call sites
+    trip_of_body: Dict[str, float] = {}
+    unknown = 0
+    for name, lines in comps.items():
+        for line in lines:
+            if re.search(r"\bwhile\(", line):
+                cm = re.search(r"condition=%?([\w.\-]+)", line)
+                bm = re.search(r"body=%?([\w.\-]+)", line)
+                if cm and bm:
+                    tc = _while_trip_count(comps.get(cm.group(1), []))
+                    if tc is None:
+                        tc = 1
+                        unknown += 1
+                    trip_of_body[bm.group(1)] = float(tc)
+
+    # accumulate: DFS from entry with multipliers
+    entry = _entry_name(hlo)
+    total = ProgramCost(0.0, 0.0, 0.0, defaultdict(float),
+                        defaultdict(float), unknown)
+    seen_stack = set()
+
+    def visit(name: str, mult: float):
+        if name not in costs or name in seen_stack:
+            return
+        seen_stack.add(name)
+        c = costs[name]
+        total.flops += mult * c.flops
+        total.bytes += mult * c.bytes
+        total.bytes_major += mult * c.bytes_major
+        for k, v in c.coll.items():
+            total.coll[k] += mult * v
+        for k, v in c.coll_counts.items():
+            total.coll_counts[k] += mult * v
+        for callee, _ in c.calls:
+            m2 = mult * trip_of_body.get(callee, 1.0)
+            visit(callee, m2)
+        seen_stack.discard(name)
+
+    if entry:
+        visit(entry, 1.0)
+    else:  # fallback: sum everything once
+        for name in costs:
+            visit(name, 1.0)
+    total.coll = dict(total.coll)
+    total.coll_counts = dict(total.coll_counts)
+    return total

@@ -1,0 +1,150 @@
+"""Generalized 3-term roofline from compiled XLA artifacts.
+
+This module carries the paper's enhanced-roofline methodology (§3) to the
+LM architectures: for each compiled (arch x shape x mesh) cell we derive
+
+    compute term    = HLO_FLOPs       / (peak FLOP/s per chip)
+    memory term     = HLO_bytes       / (HBM bytes/s per chip)
+    collective term = collective_bytes/ (ICI bytes/s per chip)
+
+from ``compiled.cost_analysis()`` (per-partition module) plus a pass over
+the optimized HLO text summing operand bytes of every collective op.  The
+``MODEL_FLOPS / HLO_FLOPs`` ratio is the paper's S/alpha "useful fraction"
+generalized to arbitrary programs: remat recompute, padding and dispatch
+overhead all surface as redundancy.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+# TPU v5e per-chip constants (same as DESIGN.md / perfmodel)
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s per link (directional approximation)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Bytes of one HLO shape literal like ``bf16[16,4096,512]``."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum result-shape bytes of every collective op, keyed by op kind.
+
+    HLO lines look like:
+      %ag = bf16[16,4096,512]{...} all-gather(%x), replica_groups=...
+    We count the RESULT shape (the payload that lands on the wire for
+    all-gather; a conservative proxy for the others) and do not divide by
+    group size -- this is a per-chip upper bound, consistent across cells.
+    """
+    out = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        eq = s.find(" = ")
+        if eq < 0:
+            continue
+        rhs = s[eq + 3:]
+        for kind in _COLLECTIVES:
+            # match "<shape> kind(" right after the equals sign
+            m = re.match(r"^(\([^)]*\)|\S+)\s+" + kind + r"(-start|-done)?\(", rhs)
+            if m:
+                if m.group(2) == "-done":
+                    break  # avoid double counting start/done pairs
+                out[kind] += _shape_bytes(m.group(1))
+                counts[kind] += 1
+                break
+    out_counts = {f"n_{k}": v for k, v in counts.items()}
+    return {**out, **out_counts}
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    flops: float                 # per-chip HLO flops
+    hbm_bytes: float             # per-chip HLO bytes accessed
+    collective_bytes: float      # per-chip collective payload
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    model_flops: Optional[float] = None
+    useful_fraction: Optional[float] = None   # MODEL_FLOPS / HLO_FLOPs
+
+    def as_dict(self):
+        return dataclasses.asdict(self)
+
+
+def roofline_from_compiled(compiled, model_flops: Optional[float] = None,
+                           n_chips: int = 1) -> RooflineTerms:
+    """model_flops: whole-program useful FLOPs (e.g. 6*N*D*tokens); divided
+    by n_chips to compare against the per-partition HLO flops.
+
+    Costs come from the trip-count-aware HLO analyzer (core.hlo_cost):
+    ``compiled.cost_analysis()`` counts loop bodies once and XLA:SPMD
+    collectives only exist in post-partitioning HLO."""
+    from repro.core import hlo_cost
+    pc = hlo_cost.analyze_hlo(compiled.as_text())
+    flops = pc.flops
+    byts = pc.bytes_major     # fusion-aware TPU HBM-traffic estimate
+    cbytes = pc.collective_bytes
+    terms = RooflineTerms(
+        flops=flops,
+        hbm_bytes=byts,
+        collective_bytes=cbytes,
+        compute_s=flops / PEAK_FLOPS,
+        memory_s=byts / HBM_BW,
+        collective_s=cbytes / ICI_BW,
+        bottleneck="",
+        model_flops=model_flops,
+    )
+    tmap = {"compute": terms.compute_s, "memory": terms.memory_s,
+            "collective": terms.collective_s}
+    terms.bottleneck = max(tmap, key=tmap.get)
+    if model_flops is not None and flops > 0:
+        terms.useful_fraction = (model_flops / n_chips) / flops
+    return terms
+
+
+def model_flops_for(cfg, cell) -> float:
+    """MODEL_FLOPS = 6*N*D (dense) / 6*N_active*D (MoE) per step, where D =
+    tokens processed.  Decode cells process one token per sequence."""
+    from repro.models.api import get_model
+    n = get_model(cfg).param_count()
+    if cfg.moe is not None:
+        from repro.models import moe as _m
+        # subtract inactive expert params: experts contribute top_k/E of
+        # their weights per token
+        e, k = cfg.moe.num_experts, cfg.moe.top_k
+        expert_params = 3 * cfg.d_model * cfg.d_ff * e * cfg.n_layers
+        n = n - expert_params + expert_params * (k / e)
+    if cell.kind == "train":
+        tokens = cell.global_batch * cell.seq_len
+        return 6.0 * n * tokens
+    if cell.kind == "prefill":
+        tokens = cell.global_batch * cell.seq_len
+        return 2.0 * n * tokens
+    tokens = cell.global_batch            # one new token per sequence
+    return 2.0 * n * tokens

@@ -1,0 +1,296 @@
+"""Enhanced roofline performance model for stencils on matrix units.
+
+This module is the paper's primary contribution (§3--§4) in executable form:
+
+  * workload terms  C, M, I  for the original problem (Eq. 6),
+  * temporally-fused vector-unit execution  I_CU^(t) = t*K/D  (Eq. 8),
+  * matrix-unit execution with sparsity factor S and fusion redundancy
+    alpha:  I_TC^(t) = t*(alpha/S)*K/D,
+    P_TC,actual = (S/alpha) * min(P_TC, B*I_TC)  (Eq. 11/12),
+  * the four-scenario classification and the sweet-spot criterion
+    ``alpha < S * P_TC / P_CU``  (Eq. 13--19),
+  * the Sparse-Tensor-Core extension (Eq. 20) -- kept analytical on TPU
+    (no sparse-MXU hardware analogue; see DESIGN.md §8).
+
+Naming note: the paper says "CUDA Core" / "Tensor Core"; we use the neutral
+``vector`` / ``matrix`` unit names so the same model covers TPU VPU / MXU.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Optional
+
+from repro.stencil.spec import StencilSpec
+from repro.stencil.weights import alpha as fusion_alpha
+
+
+# ---------------------------------------------------------------------------
+# Hardware description
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class HardwareSpec:
+    """Peak throughputs (FLOP/s) and memory bandwidth (B/s) of one chip.
+
+    ``p_vector``  -- general-purpose ALUs (CUDA cores / TPU VPU)
+    ``p_matrix``  -- matrix unit (Tensor Core / TPU MXU)
+    ``p_sparse``  -- sparse matrix unit ceiling (SpTC); None if absent
+    ``bandwidth`` -- main-memory (HBM) bandwidth
+    """
+
+    name: str
+    p_vector: float
+    p_matrix: float
+    bandwidth: float
+    p_sparse: Optional[float] = None
+
+    @property
+    def ridge_vector(self) -> float:
+        """Ridge point I* of the vector-unit roofline (FLOP/Byte)."""
+        return self.p_vector / self.bandwidth
+
+    @property
+    def ridge_matrix(self) -> float:
+        return self.p_matrix / self.bandwidth
+
+    @property
+    def ridge_sparse(self) -> float:
+        if self.p_sparse is None:
+            raise ValueError(f"{self.name} has no sparse matrix unit")
+        return self.p_sparse / self.bandwidth
+
+
+# NVIDIA A100-80GB PCIe, the paper's evaluation platform (§5.1).  The ridge
+# points in paper Table 3 (5 / 10 / 81 / 161) pin B ~= 1.94e12 B/s:
+#   9.7e12/1.94e12 = 5.0,  19.5e12/1.94e12 = 10.05,
+#   156e12/1.94e12 = 80.4, 312e12/1.94e12 = 160.8.
+A100_DOUBLE = HardwareSpec(
+    "A100-80GB (fp64)", p_vector=9.7e12, p_matrix=19.5e12, bandwidth=1.94e12,
+    p_sparse=None,  # no fp64 SpTC
+)
+A100_FLOAT = HardwareSpec(
+    # float path: CUDA-core fp32 19.5 TF; TC tf32->fp32 156 TF; SpTC 312 TF
+    "A100-80GB (fp32)", p_vector=19.5e12, p_matrix=156e12, bandwidth=1.94e12,
+    p_sparse=312e12,
+)
+# TPU v5e (per chip).  MXU bf16 = 197 TFLOP/s; HBM = 819 GB/s.  The VPU
+# throughput is not separately published; 197/16 ~= 12.3 TFLOP/s is the
+# vector-lane estimate we expose as a *parameter* (it plays the paper's
+# P_CU role, and every criterion below takes it from the HardwareSpec).
+TPU_V5E_BF16 = HardwareSpec(
+    "TPU v5e (bf16)", p_vector=197e12 / 16, p_matrix=197e12, bandwidth=819e9,
+    # No sparse MXU.  The int8 MXU ceiling (394 TOP/s) answers the same
+    # "raised ceiling" design question for quantized stencils (DESIGN.md §8).
+    p_sparse=None,
+)
+TPU_V5E_INT8_CEILING = dataclasses.replace(
+    TPU_V5E_BF16, name="TPU v5e (bf16 + int8 ceiling)", p_sparse=394e12
+)
+
+
+# ---------------------------------------------------------------------------
+# Workload formulation (paper §3.2)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class StencilWorkload:
+    """A stencil problem instance bound to a fusion depth and dtype."""
+
+    spec: StencilSpec
+    t: int = 1                   # fusion depth
+    dtype_bytes: int = 4         # D
+
+    @property
+    def K(self) -> int:
+        return self.spec.num_points
+
+    @property
+    def alpha(self) -> float:
+        """Fusion redundancy factor (Eq. 9/10); exact for any shape."""
+        return fusion_alpha(self.spec, self.t)
+
+    # ---- vector-unit (CUDA-core-like) execution, temporal fusion (Eq. 8)
+    def flops_vector(self) -> float:
+        """C_CU^(t) per output point (t steps amortized into one)."""
+        return self.t * 2 * self.K
+
+    def bytes_per_output(self) -> float:
+        """M = 2D: one read + one write; fusion keeps this constant."""
+        return 2 * self.dtype_bytes
+
+    def intensity_vector(self) -> float:
+        return self.flops_vector() / self.bytes_per_output()
+
+    # ---- matrix-unit execution with kernel fusion (Eq. 11)
+    def flops_matrix(self, sparsity: float) -> float:
+        """C_TC^(t) = (alpha/S) * C^(t) per output point (Eq. 3)."""
+        _check_sparsity(sparsity)
+        return (self.alpha / sparsity) * self.flops_vector()
+
+    def intensity_matrix(self, sparsity: float) -> float:
+        return self.flops_matrix(sparsity) / self.bytes_per_output()
+
+
+def _check_sparsity(s: float) -> None:
+    if not (0.0 < s <= 1.0):
+        raise ValueError(f"sparsity factor must be in (0, 1], got {s}")
+
+
+# ---------------------------------------------------------------------------
+# Roofline (paper §3.1, Eq. 5)
+# ---------------------------------------------------------------------------
+def attainable(peak: float, bandwidth: float, intensity: float) -> float:
+    """P = min(P_peak, B * I)."""
+    return min(peak, bandwidth * intensity)
+
+
+class Bound(enum.Enum):
+    MEMORY = "memory"
+    COMPUTE = "compute"
+
+
+def bound_state(peak: float, bandwidth: float, intensity: float) -> Bound:
+    return Bound.MEMORY if bandwidth * intensity < peak else Bound.COMPUTE
+
+
+# ---------------------------------------------------------------------------
+# Per-unit performance (paper Eq. 8, 12, 20)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class UnitPerf:
+    """Roofline evaluation of one workload on one execution unit."""
+
+    unit: str                    # "vector" | "matrix" | "sparse_matrix"
+    intensity: float             # I (FLOP/Byte), *as executed* (incl. redundancy)
+    raw_flops: float             # min(P, B*I) -- counts redundant ops
+    actual_flops: float          # deflated by S/alpha -- useful ops only
+    bound: Bound
+    ridge: float
+
+    def stencil_throughput(self, workload: StencilWorkload) -> float:
+        """Updates/sec per point-update (GStencils/s * 1e9 when scaled).
+
+        The de-facto metric of the paper's §5.3: actual useful FLOPs divided
+        by the useful FLOPs per (point, t-step-batch) = t*2K.
+        """
+        return self.actual_flops / workload.flops_vector()
+
+
+def perf_vector(w: StencilWorkload, hw: HardwareSpec) -> UnitPerf:
+    i = w.intensity_vector()
+    p = attainable(hw.p_vector, hw.bandwidth, i)
+    return UnitPerf("vector", i, p, p, bound_state(hw.p_vector, hw.bandwidth, i),
+                    hw.ridge_vector)
+
+
+def perf_matrix(w: StencilWorkload, hw: HardwareSpec, sparsity: float) -> UnitPerf:
+    i = w.intensity_matrix(sparsity)
+    raw = attainable(hw.p_matrix, hw.bandwidth, i)
+    actual = (sparsity / w.alpha) * raw
+    return UnitPerf("matrix", i, raw, actual,
+                    bound_state(hw.p_matrix, hw.bandwidth, i), hw.ridge_matrix)
+
+
+def perf_sparse_matrix(w: StencilWorkload, hw: HardwareSpec, sparsity: float) -> UnitPerf:
+    """SpTC model (Eq. 20): same intensity, raised ceiling."""
+    if hw.p_sparse is None:
+        raise ValueError(f"{hw.name} has no sparse matrix unit")
+    i = w.intensity_matrix(sparsity)
+    raw = attainable(hw.p_sparse, hw.bandwidth, i)
+    actual = (sparsity / w.alpha) * raw
+    return UnitPerf("sparse_matrix", i, raw, actual,
+                    bound_state(hw.p_sparse, hw.bandwidth, i), hw.ridge_sparse)
+
+
+# ---------------------------------------------------------------------------
+# Scenario classification + criteria (paper §4.1, Eq. 13--19)
+# ---------------------------------------------------------------------------
+class Scenario(enum.Enum):
+    """(vector-unit bound) -> (matrix-unit bound), paper Figure 8."""
+
+    MB_MB = 1   # equal effective performance
+    MB_CB = 2   # matrix unit strictly worse
+    CB_MB = 3   # matrix unit strictly better ("breaks the ceiling")
+    CB_CB = 4   # conditional: sweet spot iff alpha < S * P_TC / P_CU
+
+
+@dataclasses.dataclass(frozen=True)
+class Comparison:
+    workload: StencilWorkload
+    hardware: HardwareSpec
+    sparsity: float
+    vector: UnitPerf
+    matrix: UnitPerf
+    scenario: Scenario
+    speedup: float               # P_TC,actual / P_CU,actual
+    profitable: bool             # speedup > 1 (strictly)
+    sweet_spot_alpha_limit: float  # S * P_TC / P_CU (Eq. 19 threshold)
+
+
+def compare(
+    w: StencilWorkload,
+    hw: HardwareSpec,
+    sparsity: float,
+    use_sparse_unit: bool = False,
+) -> Comparison:
+    """Evaluate the paper's criteria for one workload on one chip."""
+    v = perf_vector(w, hw)
+    m = (perf_sparse_matrix if use_sparse_unit else perf_matrix)(w, hw, sparsity)
+    scenario = {
+        (Bound.MEMORY, Bound.MEMORY): Scenario.MB_MB,
+        (Bound.MEMORY, Bound.COMPUTE): Scenario.MB_CB,
+        (Bound.COMPUTE, Bound.MEMORY): Scenario.CB_MB,
+        (Bound.COMPUTE, Bound.COMPUTE): Scenario.CB_CB,
+    }[(v.bound, m.bound)]
+    speedup = m.actual_flops / v.actual_flops
+    p_mat = hw.p_sparse if use_sparse_unit else hw.p_matrix
+    limit = sparsity * p_mat / hw.p_vector
+    return Comparison(
+        workload=w, hardware=hw, sparsity=sparsity, vector=v, matrix=m,
+        scenario=scenario, speedup=speedup, profitable=speedup > 1.0 + 1e-9,
+        sweet_spot_alpha_limit=limit,
+    )
+
+
+def sweet_spot_max_t(
+    spec: StencilSpec,
+    hw: HardwareSpec,
+    sparsity: float,
+    dtype_bytes: int = 4,
+    t_max: int = 64,
+    use_sparse_unit: bool = False,
+) -> list[int]:
+    """All fusion depths t in [1, t_max] where the matrix unit is profitable.
+
+    This sweeps the paper's Figure 9/14 boundary for a concrete stencil.
+    """
+    out = []
+    for t in range(1, t_max + 1):
+        c = compare(StencilWorkload(spec, t, dtype_bytes), hw, sparsity,
+                    use_sparse_unit=use_sparse_unit)
+        if c.profitable:
+            out.append(t)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Transformation-scheme sparsity factors (paper §2.2.2; S is scheme-specific)
+# ---------------------------------------------------------------------------
+def sparsity_convstencil() -> float:
+    """ConvStencil's stencil2row + dual tessellation: S = 0.5 (paper Table 2)."""
+    return 0.5
+
+
+def sparsity_spider() -> float:
+    """SPIDER's strided swapping on SpTC: S = 0.47 (paper Table 2)."""
+    return 0.47
+
+
+def sparsity_banded(effective_radius: int, tile_n: int = 128) -> float:
+    """Our TPU decompose-to-banded-matmul scheme (DESIGN.md §2).
+
+    Each 1-D sub-convolution multiplies an (M, N+2R) input tile against an
+    (N+2R, N) banded weight matrix whose columns carry the 2R+1 kernel taps:
+    nonzeros = N*(2R+1) of (N+2R)*N entries ->  S = (2R+1) / (N + 2R).
+    """
+    r = effective_radius
+    return (2 * r + 1) / (tile_n + 2 * r)

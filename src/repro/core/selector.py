@@ -1,0 +1,112 @@
+"""Analytic execution-unit selector -- the paper's criteria as a scheduler.
+
+Given a stencil workload and a hardware description, decide which execution
+path (vector unit vs matrix unit, fused or not) the runtime should take, and
+predict the speedup.  ``repro.kernels.ops.stencil_apply(backend="auto")``
+consults this module, making the paper's analytical criteria (§4.1) a
+first-class deployable feature rather than a post-hoc analysis.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.stencil.spec import StencilSpec
+from repro.core import perfmodel as pm
+
+
+@dataclasses.dataclass(frozen=True)
+class Decision:
+    backend: str                  # "direct" | "fused_direct" | "matmul" | "fused_matmul"
+    scenario: Optional[pm.Scenario]
+    predicted_speedup: float      # matrix-unit vs vector-unit, effective
+    comparison: pm.Comparison
+    reason: str
+
+
+def select_backend(
+    spec: StencilSpec,
+    t: int,
+    dtype_bytes: int,
+    hw: pm.HardwareSpec = pm.TPU_V5E_BF16,
+    sparsity: Optional[float] = None,
+    tile_n: int = 128,
+    use_sparse_unit: bool = False,
+) -> Decision:
+    """Pick the predicted-fastest backend for ``t`` fused steps of ``spec``.
+
+    ``sparsity`` defaults to the banded-matmul scheme's structural S for the
+    *fused* effective radius (the matrix-unit path always executes the fused
+    kernel as one banded contraction -- paper §2.2.3's "monolithic" fusion).
+    """
+    w = pm.StencilWorkload(spec, t, dtype_bytes)
+    if sparsity is None:
+        sparsity = pm.sparsity_banded(spec.radius * t, tile_n)
+    cmp_ = pm.compare(w, hw, sparsity, use_sparse_unit=use_sparse_unit)
+
+    matrix_wins = cmp_.profitable
+    if t == 1:
+        backend = "matmul" if matrix_wins else "direct"
+    else:
+        backend = "fused_matmul" if matrix_wins else "fused_direct"
+
+    reason = _explain(cmp_)
+    return Decision(
+        backend=backend,
+        scenario=cmp_.scenario,
+        predicted_speedup=cmp_.speedup,
+        comparison=cmp_,
+        reason=reason,
+    )
+
+
+def _explain(c: pm.Comparison) -> str:
+    s = c.scenario
+    if s is pm.Scenario.MB_MB:
+        return (
+            "both units memory-bound: effective performance identical (Eq. 14); "
+            "prefer vector unit (no transformation overhead)"
+        )
+    if s is pm.Scenario.MB_CB:
+        return (
+            "vector unit memory-bound but transformation pushed matrix unit "
+            "compute-bound: matrix unit strictly worse (Eq. 16)"
+        )
+    if s is pm.Scenario.CB_MB:
+        return (
+            "vector unit compute-bound, matrix unit memory-bound: matrix unit "
+            "breaks the vector-unit ceiling (Eq. 17)"
+        )
+    ok = "inside" if c.workload.alpha < c.sweet_spot_alpha_limit else "outside"
+    return (
+        f"both compute-bound: conditional sweet spot (Eq. 19) -- alpha="
+        f"{c.workload.alpha:.3f} vs limit S*P_mat/P_vec="
+        f"{c.sweet_spot_alpha_limit:.3f} ({ok} sweet spot)"
+    )
+
+
+def classify_problem(
+    spec: StencilSpec,
+    t: int,
+    dtype_bytes: int,
+    hw: pm.HardwareSpec,
+) -> pm.Bound:
+    """Paper §4.2 (Fig. 10): is the temporally-fused problem compute-bound
+    on the *vector* unit?  (The precondition for matrix units to pay off.)"""
+    w = pm.StencilWorkload(spec, t, dtype_bytes)
+    return pm.bound_state(hw.p_vector, hw.bandwidth, w.intensity_vector())
+
+
+def transition_depth(
+    spec: StencilSpec,
+    dtype_bytes: int,
+    hw: pm.HardwareSpec,
+    t_max: int = 64,
+) -> Optional[int]:
+    """Smallest fusion depth at which the problem becomes compute-bound on
+    the vector unit (paper §4.2: box transitions at t=3, star at t=5 for the
+    A100/float setting)."""
+    for t in range(1, t_max + 1):
+        if classify_problem(spec, t, dtype_bytes, hw) is pm.Bound.COMPUTE:
+            return t
+    return None

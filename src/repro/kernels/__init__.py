@@ -1,0 +1,4 @@
+"""Pallas TPU kernels for the stencil hot paths (VPU direct, MXU banded)."""
+from .ops import stencil_apply, explain, BACKENDS
+from .stencil_direct import stencil_direct
+from .stencil_matmul import stencil_matmul, build_bands, band_sparsity

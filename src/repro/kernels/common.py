@@ -1,0 +1,73 @@
+"""Shared Pallas plumbing: 9-strip halo BlockSpecs and tile assembly.
+
+TPU Pallas BlockSpecs address non-overlapping blocks (element offset = block
+index * block shape), so halo reads cannot be expressed as one overlapping
+block.  The TPU-idiomatic pattern is to reference the SAME input array once
+per neighbor block with shifted ``index_map``s -- the Mosaic pipeline then
+streams center + neighbor tiles HBM->VMEM and the kernel assembles the
+halo-extended tile in VMEM.  Modulo wrap in the index maps yields periodic
+boundaries for free (matches the ppermute ring of the distributed runtime).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+NEIGHBOR_OFFSETS_2D = [(-1, -1), (-1, 0), (-1, 1),
+                       (0, -1), (0, 0), (0, 1),
+                       (1, -1), (1, 0), (1, 1)]
+
+
+def neighbor_in_specs(tile_m: int, tile_n: int, grid_m: int, grid_n: int):
+    """Nine BlockSpecs addressing (i+di, j+dj) mod grid for one 2D input."""
+    specs = []
+    for di, dj in NEIGHBOR_OFFSETS_2D:
+        specs.append(
+            pl.BlockSpec(
+                (tile_m, tile_n),
+                functools.partial(
+                    lambda i, j, di=di, dj=dj: ((i + di) % grid_m, (j + dj) % grid_n)
+                ),
+            )
+        )
+    return specs
+
+
+def assemble_extended(refs: Sequence, halo: int) -> jax.Array:
+    """Build the (tile_m + 2h, tile_n + 2h) halo-extended tile in VMEM.
+
+    ``refs`` are the nine neighbor refs in NEIGHBOR_OFFSETS_2D order.  Only
+    the needed edges/corners of the neighbor tiles are read.
+    """
+    tl, t, tr, l, c, r, bl, b, br = [ref[...] for ref in refs]
+    h = halo
+    top = jnp.concatenate([tl[-h:, -h:], t[-h:, :], tr[-h:, :h]], axis=1)
+    mid = jnp.concatenate([l[:, -h:], c, r[:, :h]], axis=1)
+    bot = jnp.concatenate([bl[:h, -h:], b[:h, :], br[:h, :h]], axis=1)
+    return jnp.concatenate([top, mid, bot], axis=0)
+
+
+def choose_tile(n: int, preferred: int = 128) -> int:
+    """Largest divisor of ``n`` that is <= preferred (MXU-friendly when 128)."""
+    if n <= preferred:
+        return n
+    for cand in range(preferred, 0, -1):
+        if n % cand == 0:
+            return cand
+    return n
+
+
+def validate_tiling(shape, tile_m, tile_n, halo):
+    h, w = shape
+    if h % tile_m or w % tile_n:
+        raise ValueError(f"grid {shape} not divisible by tiles ({tile_m},{tile_n})")
+    if tile_m < halo or tile_n < halo:
+        raise ValueError(
+            f"halo {halo} exceeds tile ({tile_m},{tile_n}); "
+            "lower fusion depth or enlarge tiles"
+        )

@@ -1,0 +1,108 @@
+"""Jit'd public entry points for the stencil kernels, with analytic dispatch.
+
+``stencil_apply(x, weights, t, backend="auto")`` is the deployable form of
+the paper: the enhanced-roofline criteria (repro.core.selector) pick the
+execution unit, then the matching Pallas kernel runs.
+
+Backends
+  direct        t sequential VPU kernel steps         (halo r per step)
+  fused_direct  one VPU kernel, t in-VMEM steps        (paper's temporal fusion)
+  matmul        t sequential MXU banded contractions   (halo r per step)
+  fused_matmul  weights composed to radius t*r, one    (paper's monolithic
+                MXU banded contraction                  kernel fusion, alpha>1)
+  reference     jnp oracle (debug)
+  auto          selector decides among the above from the hardware model
+
+``interpret`` defaults to True off-TPU so every path is CPU-checkable; on a
+real TPU it compiles through Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import perfmodel as pm
+from repro.core.selector import Decision, select_backend
+from repro.stencil.spec import StencilSpec
+from repro.stencil.weights import fuse_weights
+from .stencil_direct import stencil_direct
+from .stencil_matmul import stencil_matmul
+from . import ref as _ref
+
+BACKENDS = ("direct", "fused_direct", "matmul", "fused_matmul", "reference", "auto")
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def spec_from_weights(weights) -> StencilSpec:
+    """Infer (shape, d, r) from a dense kernel's support."""
+    w = np.asarray(weights)
+    radius = (w.shape[0] - 1) // 2
+    dim = w.ndim
+    box_points = np.count_nonzero(w)
+    star_points = 2 * dim * radius + 1
+    shape = "star" if box_points <= star_points else "box"
+    return StencilSpec(shape, dim, radius)
+
+
+def stencil_apply(
+    x: jax.Array,
+    weights,
+    t: int = 1,
+    backend: str = "auto",
+    hw: pm.HardwareSpec = pm.TPU_V5E_BF16,
+    tile_m: int = 128,
+    tile_n: int = 128,
+    interpret: Optional[bool] = None,
+    compute_dtype=None,
+) -> jax.Array:
+    """Advance the grid ``t`` time steps with the selected backend."""
+    if backend not in BACKENDS:
+        raise ValueError(f"backend must be one of {BACKENDS}")
+    if interpret is None:
+        interpret = _default_interpret()
+
+    if backend == "auto":
+        spec = spec_from_weights(weights)
+        decision = select_backend(
+            spec, t, dtype_bytes=x.dtype.itemsize, hw=hw, tile_n=tile_n
+        )
+        backend = decision.backend
+
+    if backend == "reference":
+        return _ref.stencil_direct_ref(x, weights, t)
+    if backend == "direct":
+        y = x
+        for _ in range(t):
+            y = stencil_direct(y, weights, t=1, tile_m=tile_m, tile_n=tile_n,
+                               interpret=interpret)
+        return y
+    if backend == "fused_direct":
+        return stencil_direct(x, weights, t=t, tile_m=tile_m, tile_n=tile_n,
+                              interpret=interpret)
+    if backend == "matmul":
+        y = x
+        for _ in range(t):
+            y = stencil_matmul(y, weights, tile_m=tile_m, tile_n=tile_n,
+                               interpret=interpret, compute_dtype=compute_dtype)
+        return y
+    if backend == "fused_matmul":
+        wf = fuse_weights(np.asarray(weights), t)
+        return stencil_matmul(x, wf, tile_m=tile_m, tile_n=tile_n,
+                              interpret=interpret, compute_dtype=compute_dtype)
+    raise AssertionError(backend)
+
+
+def explain(
+    weights, t: int, dtype_bytes: int = 4,
+    hw: pm.HardwareSpec = pm.TPU_V5E_BF16, tile_n: int = 128,
+) -> Decision:
+    """Expose the dispatch decision (scenario, predicted speedup, reason)."""
+    return select_backend(spec_from_weights(weights), t, dtype_bytes, hw,
+                          tile_n=tile_n)

@@ -1,0 +1,28 @@
+"""Pure-jnp oracles for every kernel entry point (the ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.stencil.reference import apply_stencil, apply_stencil_steps
+from repro.stencil.weights import fuse_weights
+
+
+def stencil_direct_ref(x: jax.Array, weights, t: int = 1) -> jax.Array:
+    """Oracle for kernels.stencil_direct: t periodic stencil steps."""
+    return apply_stencil_steps(x, jnp.asarray(weights, x.dtype), t, "periodic")
+
+
+def stencil_matmul_ref(x: jax.Array, weights) -> jax.Array:
+    """Oracle for kernels.stencil_matmul: one periodic step of ``weights``
+    (which may itself be a fused kernel)."""
+    return apply_stencil(x, jnp.asarray(weights, x.dtype), "periodic")
+
+
+def stencil_fused_matmul_ref(x: jax.Array, weights, t: int) -> jax.Array:
+    """Oracle for the fused-matmul path: t steps == one fused-kernel step."""
+    return apply_stencil_steps(x, jnp.asarray(weights, x.dtype), t, "periodic")
+
+
+def fused_kernel(weights, t: int):
+    return fuse_weights(weights, t)

@@ -1,0 +1,110 @@
+"""MXU-path 2D stencil kernel: decompose-to-banded-matmul (the paper's
+"Tensor Core" adaptation, re-thought for the TPU systolic array).
+
+Transformation (DESIGN.md §2):
+  * decomposition: the (2R+1)^2 kernel splits into 2R+1 row vectors
+    (paper §2.2.1 "Decomposing");
+  * replication/alignment: each row vector w[dy, :] is materialized as a
+    banded (Toeplitz) matrix  B_dy of shape (TILE_N + 2R, TILE_N) with
+    B_dy[j+dx, j] = w[dy, dx]  -- this satisfies the MXU operand-size
+    constraint (full 128-wide tiles) at the cost of zero padding
+    (paper §2.2.2 "sparse redundancy"), with structural sparsity
+        S = (2R+1) / (TILE_N + 2R)
+    (see perfmodel.sparsity_banded);
+  * contraction: out += A_dy @ B_dy  where A_dy is the dy-shifted
+    (TILE_M, TILE_N + 2R) slab of the halo-extended input tile.  Matmuls
+    run in the input dtype with f32 accumulation (MXU semantics).
+
+Kernel fusion (paper §2.2.3) is weight composition: the wrapper fuses t
+steps into a single monolithic kernel of radius R = t*r before building the
+bands -- no intermediate reuse, compute inflated by alpha, exactly the
+monolithic-fusion regime the paper models.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from .common import assemble_extended, neighbor_in_specs, validate_tiling
+
+
+def build_bands(weights: np.ndarray, tile_n: int) -> np.ndarray:
+    """(2R+1, TILE_N + 2R, TILE_N) banded weight matrices, one per kernel row."""
+    w = np.asarray(weights)
+    k = w.shape[0]
+    radius = (k - 1) // 2
+    bands = np.zeros((k, tile_n + 2 * radius, tile_n), dtype=w.dtype)
+    for dy in range(k):
+        for dx in range(k):
+            if w[dy, dx] == 0.0:
+                continue
+            for j in range(tile_n):
+                bands[dy, j + dx, j] = w[dy, dx]
+    return bands
+
+
+def band_sparsity(weights: np.ndarray, tile_n: int) -> float:
+    """Measured S of the built operands = nonzeros / total (sanity vs model)."""
+    bands = build_bands(weights, tile_n)
+    return float(np.count_nonzero(bands)) / bands.size
+
+
+def _kernel(*refs, radius: int, out_dtype, compute_dtype):
+    # refs: 9 neighbor refs, bands ref, out ref
+    out_ref = refs[-1]
+    bands_ref = refs[-2]
+    ext = assemble_extended(refs[:9], radius)          # (M+2R, N+2R)
+    m = ext.shape[0] - 2 * radius
+    n = ext.shape[1] - 2 * radius
+    k = 2 * radius + 1
+    acc = jnp.zeros((m, n), jnp.float32)
+    for dy in range(k):
+        a = ext[dy : dy + m, :].astype(compute_dtype)          # (M, N+2R)
+        b = bands_ref[dy].astype(compute_dtype)                # (N+2R, N)
+        acc = acc + jax.lax.dot(a, b, preferred_element_type=jnp.float32)
+    out_ref[...] = acc.astype(out_dtype)
+
+
+def stencil_matmul(
+    x: jax.Array,
+    weights,
+    tile_m: int = 128,
+    tile_n: int = 128,
+    interpret: bool = False,
+    compute_dtype=None,
+) -> jax.Array:
+    """One stencil step via banded MXU contractions, periodic boundary.
+
+    ``weights`` may be a fused kernel (radius R = t*r) -- the monolithic
+    kernel-fusion execution of the paper.
+    """
+    w = np.asarray(weights)
+    radius = (w.shape[0] - 1) // 2
+    h, wid = x.shape
+    tile_m = min(tile_m, h)
+    tile_n = min(tile_n, wid)
+    validate_tiling(x.shape, tile_m, tile_n, radius)
+    gm, gn = h // tile_m, wid // tile_n
+    if compute_dtype is None:
+        compute_dtype = x.dtype
+
+    bands = jnp.asarray(build_bands(w.astype(np.float32), tile_n))
+
+    kern = functools.partial(
+        _kernel, radius=radius, out_dtype=x.dtype, compute_dtype=compute_dtype
+    )
+    in_specs = neighbor_in_specs(tile_m, tile_n, gm, gn) + [
+        pl.BlockSpec(bands.shape, lambda i, j: (0, 0, 0))
+    ]
+    return pl.pallas_call(
+        kern,
+        grid=(gm, gn),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((tile_m, tile_n), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=interpret,
+    )(*([x] * 9), bands)

@@ -1,0 +1,250 @@
+import os
+os.environ["XLA_FLAGS"] = os.environ.get(
+    "XLA_FLAGS", "") + " --xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import: jax locks the device count on first init.
+
+"""Multi-pod dry-run: prove every (arch x shape x mesh) cell lowers,
+compiles, shards coherently and fits memory -- without TPU hardware.
+
+For each cell we jit the train/prefill/serve step with production
+in/out shardings, ``.lower().compile()`` it against ShapeDtypeStructs
+(no allocation), then record:
+  * memory_analysis()  -- per-device bytes (proves it fits HBM),
+  * cost_analysis()    -- FLOPs / bytes for the roofline,
+  * collective payload parsed from the optimized HLO,
+  * the 3-term roofline + MODEL_FLOPS useful-fraction.
+
+Results are cached as JSON under results/dryrun/ so reruns are
+incremental.  Usage:
+
+  python -m repro.launch.dryrun --arch llama3.2-1b --cell train_4k --mesh single
+  python -m repro.launch.dryrun --all [--mesh both] [--force]
+  python -m repro.launch.dryrun --stencil            # paper-workload cells
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.registry import ARCHS, SHAPES, cells_for
+from repro.core import hlo_roofline
+from repro.launch.mesh import make_production_mesh
+from repro.models import base
+from repro.models.api import get_model
+from repro.optim import adamw
+from repro.parallel import sharding
+from repro.train.steps import make_train_step, make_serve_step
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "../../../results/dryrun")
+
+
+def _ns(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def lower_cell(arch: str, cell_name: str, multi_pod: bool,
+               extra_opts: dict | None = None):
+    """Build avals + shardings for one cell and lower+compile it."""
+    cfg = ARCHS[arch]
+    if extra_opts:
+        import dataclasses as _dc
+        cfg = _dc.replace(cfg, **extra_opts)
+    cell = SHAPES[cell_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    model = get_model(cfg)
+    pdefs = model.param_defs()
+    pshapes = base.shape_tree(pdefs)
+    pure_dp = getattr(cfg, 'pure_dp', False)
+    # sharding policy: pure DP only fills the machine while batch >= chips
+    # (EXPERIMENTS.md §Perf A4 multi-pod note) -- fall back to TP otherwise.
+    n_chips = int(np.prod(list(mesh.shape.values())))
+    if pure_dp and cell.global_batch < n_chips:
+        pure_dp = False
+    pspecs = sharding.param_pspecs(pdefs, mesh, cfg.fsdp, pure_dp)
+    inputs = model.input_specs(cell)
+
+    with sharding.use_mesh(mesh, cfg.fsdp, pure_dp):
+        if cell.kind in ("train", "prefill"):
+            # prefill cells lower the same loss-bearing full-sequence pass
+            # without the optimizer (forward only == serving prefill cost).
+            if cell.kind == "train":
+                ocfg = adamw.AdamWConfig()
+                step = make_train_step(model, ocfg)
+                opt_aval = jax.eval_shape(adamw.init, pshapes)
+                opt_specs = adamw.AdamWState(
+                    P(), jax.tree.map(lambda s: s, pspecs),
+                    jax.tree.map(lambda s: s, pspecs))
+                batch_specs = sharding.batch_pspecs(inputs, mesh)
+                jf = jax.jit(
+                    step,
+                    in_shardings=(_ns(mesh, pspecs), _ns(mesh, opt_specs),
+                                  _ns(mesh, batch_specs)),
+                    out_shardings=(_ns(mesh, pspecs), _ns(mesh, opt_specs),
+                                   None),
+                    donate_argnums=(0, 1),
+                )
+                lowered = jf.lower(pshapes, opt_aval, inputs)
+            else:
+                def fwd(params, batch):
+                    loss, aux = model.loss_fn(params, batch)
+                    return loss
+
+                batch_specs = sharding.batch_pspecs(inputs, mesh)
+                jf = jax.jit(fwd, in_shardings=(_ns(mesh, pspecs),
+                                                _ns(mesh, batch_specs)))
+                lowered = jf.lower(pshapes, inputs)
+        else:
+            step = make_serve_step(model)
+            caches = inputs["caches"]
+            cspecs = sharding.cache_pspecs(caches, mesh)
+            tok = inputs["token"]
+            jf = jax.jit(
+                step,
+                in_shardings=(_ns(mesh, pspecs), _ns(mesh, cspecs),
+                              NamedSharding(mesh, sharding.batch_pspecs(
+                                  {"t": tok}, mesh)["t"]),
+                              NamedSharding(mesh, P())),
+                donate_argnums=(1,),
+            )
+            lowered = jf.lower(pshapes, caches, tok, inputs["pos"])
+    return lowered, cfg, cell, mesh
+
+
+def run_cell(arch: str, cell_name: str, multi_pod: bool, force=False,
+             tag: str = "", extra_opts=None):
+    mesh_name = "multi" if multi_pod else "single"
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    out_path = os.path.join(
+        RESULTS_DIR, f"{arch}__{cell_name}__{mesh_name}{tag}.json")
+    if os.path.exists(out_path) and not force:
+        print(f"[skip] {out_path} exists")
+        return json.load(open(out_path))
+    t0 = time.time()
+    rec = {"arch": arch, "cell": cell_name, "mesh": mesh_name, "tag": tag}
+    try:
+        lowered, cfg, cell, mesh = lower_cell(arch, cell_name, multi_pod,
+                                              extra_opts)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        mf = hlo_roofline.model_flops_for(cfg, cell)
+        n_chips = int(np.prod(list(mesh.shape.values())))
+        terms = hlo_roofline.roofline_from_compiled(compiled, mf, n_chips)
+        coll = hlo_roofline.parse_collective_bytes(compiled.as_text())
+        rec.update(
+            ok=True,
+            lower_s=round(t_lower, 1), compile_s=round(t_compile, 1),
+            n_chips=n_chips,
+            memory={
+                "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+                "output_bytes": getattr(mem, "output_size_in_bytes", None),
+                "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+                "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+            },
+            roofline=terms.as_dict(),
+            collectives={k: v for k, v in coll.items()},
+        )
+        print(f"[ok] {arch} {cell_name} {mesh_name}{tag}: "
+              f"compute={terms.compute_s*1e3:.2f}ms mem={terms.memory_s*1e3:.2f}ms "
+              f"coll={terms.collective_s*1e3:.2f}ms bottleneck={terms.bottleneck} "
+              f"useful={terms.useful_fraction and round(terms.useful_fraction,3)} "
+              f"(lower {t_lower:.0f}s compile {t_compile:.0f}s)")
+    except Exception as e:
+        rec.update(ok=False, error=f"{type(e).__name__}: {e}",
+                   tb=traceback.format_exc()[-2000:])
+        print(f"[FAIL] {arch} {cell_name} {mesh_name}{tag}: {e}")
+    with open(out_path, "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def run_stencil(multi_pod: bool, force=False):
+    """Dry-run the paper's own workload: distributed 2D/3D stencil steps."""
+    from repro.stencil import StencilSpec, make_weights
+    from repro.stencil.distributed import make_distributed_stepper
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "multi" if multi_pod else "single"
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    cases = [
+        ("Box-2D1R", (10240, 10240), ("data", "model"), 4),
+        ("Star-2D3R", (10240, 10240), ("data", "model"), 2),
+        ("Box-3D1R", (1024, 1024, 1024), ("data", "model", None) if not multi_pod
+         else ("pod", "data", "model"), 2),
+    ]
+    out = []
+    for name, shape, dims, t in cases:
+        dims = dims[: len(shape)]
+        out_path = os.path.join(
+            RESULTS_DIR, f"stencil-{name}__t{t}__{mesh_name}.json")
+        if os.path.exists(out_path) and not force:
+            print(f"[skip] {out_path}")
+            continue
+        rec = {"arch": f"stencil-{name}", "cell": f"t{t}", "mesh": mesh_name}
+        try:
+            spec = StencilSpec.from_name(name)
+            w = make_weights(spec, seed=0)
+            if multi_pod and len(shape) == 2:
+                d = ("data", "model")
+                gspec = P(("pod", d[0]), d[1])
+                dims = (("pod", "data"), "model")
+            step = make_distributed_stepper(mesh, dims, w, t=t, mode="fused")
+            x_aval = jax.ShapeDtypeStruct(shape, jnp.float32)
+            in_spec = P(*dims)
+            jf = jax.jit(step, in_shardings=NamedSharding(mesh, in_spec),
+                         out_shardings=NamedSharding(mesh, in_spec))
+            lowered = jf.lower(x_aval)
+            compiled = lowered.compile()
+            n_chips = int(np.prod(list(mesh.shape.values())))
+            K = spec.num_points
+            mf = 2.0 * K * t * float(np.prod(shape))
+            terms = hlo_roofline.roofline_from_compiled(compiled, mf, n_chips)
+            mem = compiled.memory_analysis()
+            rec.update(ok=True, roofline=terms.as_dict(),
+                       memory={"peak_bytes": getattr(mem, "peak_memory_in_bytes", None)})
+            print(f"[ok] stencil {name} t={t} {mesh_name}: "
+                  f"bottleneck={terms.bottleneck} useful={terms.useful_fraction}")
+        except Exception as e:
+            rec.update(ok=False, error=f"{type(e).__name__}: {e}",
+                       tb=traceback.format_exc()[-2000:])
+            print(f"[FAIL] stencil {name}: {e}")
+        with open(out_path, "w") as f:
+            json.dump(rec, f, indent=1)
+        out.append(rec)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--cell")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--stencil", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    if args.stencil:
+        for mp in meshes:
+            run_stencil(mp, force=args.force)
+        return
+    if args.all:
+        for arch in ARCHS:
+            for cell in cells_for(arch):
+                for mp in meshes:
+                    run_cell(arch, cell, mp, force=args.force)
+        return
+    for mp in meshes:
+        run_cell(args.arch, args.cell, mp, force=args.force)
+
+
+if __name__ == "__main__":
+    main()

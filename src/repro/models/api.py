@@ -1,0 +1,112 @@
+"""Unified model interface: one entry point per family for the launcher,
+dry-run, trainer and tests.
+
+    model = get_model(cfg)
+    model.param_defs()      -> ParamDef pytree
+    model.loss_fn(params, batch)            (train/prefill compute)
+    model.init_caches(batch, seq)           (decode state)
+    model.decode_step(params, caches, token, pos)
+    model.input_specs(shape_cell)           ShapeDtypeStructs for dry-run
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import ModelConfig, ShapeCell
+from repro.models import base
+from repro.models import transformer, zamba, whisper, rwkv_model
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    _defs: Callable
+    _loss: Callable
+    _init_caches: Optional[Callable]
+    _decode: Optional[Callable]
+
+    def param_defs(self):
+        return self._defs(self.cfg)
+
+    def param_shapes(self):
+        return base.shape_tree(self.param_defs())
+
+    def init_params(self, key):
+        return base.init_tree(self.param_defs(), key)
+
+    def param_count(self) -> int:
+        return base.param_count(self.param_defs())
+
+    def loss_fn(self, params, batch):
+        return self._loss(params, batch, self.cfg)
+
+    def init_caches(self, batch: int, max_seq: int):
+        return self._init_caches(self.cfg, batch, max_seq)
+
+    def decode_step(self, params, caches, token, pos):
+        return self._decode(params, caches, token, self.cfg, pos)
+
+    # ------------------------------------------------------------------
+    # Dry-run input avals
+    # ------------------------------------------------------------------
+    def input_specs(self, cell: ShapeCell) -> Dict[str, Any]:
+        cfg = self.cfg
+        B, S = cell.global_batch, cell.seq_len
+        i32 = jnp.int32
+        dt = jnp.dtype(cfg.dtype)
+        sds = jax.ShapeDtypeStruct
+        if cell.kind == "train":
+            if cfg.family == "whisper":
+                return {"frames": sds((B, S, cfg.d_model), dt),
+                        "tokens": sds((B, S + 1), i32)}
+            if cfg.family == "vlm":
+                P = cfg.n_img_patches
+                return {"tokens": sds((B, S - P + 1), i32),
+                        "img_embeds": sds((B, P, cfg.d_model), dt)}
+            return {"tokens": sds((B, S + 1), i32)}
+        if cell.kind == "prefill":
+            if cfg.family == "whisper":
+                return {"frames": sds((B, S, cfg.d_model), dt),
+                        "tokens": sds((B, S + 1), i32)}
+            if cfg.family == "vlm":
+                P = cfg.n_img_patches
+                return {"tokens": sds((B, S - P + 1), i32),
+                        "img_embeds": sds((B, P, cfg.d_model), dt)}
+            return {"tokens": sds((B, S + 1), i32)}
+        # decode: caches at full length + one token
+        caches = jax.eval_shape(lambda: self.init_caches(B, S))
+        return {"caches": caches,
+                "token": sds((B, 1), i32),
+                "pos": sds((), i32)}
+
+
+def _whisper_caches(cfg, batch, max_seq):
+    # encoder context scales with the cell seq too; enc_seq == max_seq
+    return whisper.init_caches(cfg, batch, max_seq, max_seq)
+
+
+_FAMILIES = {
+    "dense": (transformer.param_defs, transformer.loss_fn,
+              transformer.init_caches, transformer.decode_step),
+    "moe": (transformer.param_defs, transformer.loss_fn,
+            transformer.init_caches, transformer.decode_step),
+    "vlm": (transformer.param_defs, transformer.loss_fn,
+            transformer.init_caches, transformer.decode_step),
+    "hybrid": (zamba.param_defs, zamba.loss_fn,
+               zamba.init_caches, zamba.decode_step),
+    "whisper": (whisper.param_defs, whisper.loss_fn,
+                _whisper_caches, whisper.decode_step),
+    "rwkv": (rwkv_model.param_defs, rwkv_model.loss_fn,
+             lambda cfg, b, s: rwkv_model.init_state(cfg, b),
+             rwkv_model.decode_step),
+}
+
+
+def get_model(cfg: ModelConfig) -> Model:
+    defs, loss, caches, decode = _FAMILIES[cfg.family]
+    return Model(cfg, defs, loss, caches, decode)

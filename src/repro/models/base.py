@@ -1,0 +1,75 @@
+"""Minimal pure-JAX module system: parameter definitions with logical axes.
+
+No flax/optax offline -- parameters are plain pytrees.  Each model builds a
+nested dict of ``ParamDef`` (shape + logical axis names + initializer); from
+that single source of truth we derive
+  * initialized parameter pytrees (``init_tree``),
+  * ``PartitionSpec`` pytrees via the logical->mesh rules
+    (``repro.parallel.sharding``),
+so parameters and their shardings can never drift apart.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]          # logical axis name per dim
+    init: str = "normal"                     # normal | zeros | ones | scaled
+    scale: float = 1.0
+    dtype: Any = jnp.float32
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.axes):
+            raise ValueError(f"shape {self.shape} vs axes {self.axes} rank mismatch")
+
+
+def _init_one(key, d: ParamDef):
+    if d.init == "zeros":
+        return jnp.zeros(d.shape, d.dtype)
+    if d.init == "ones":
+        return jnp.ones(d.shape, d.dtype)
+    if d.init == "normal":
+        # fan-in scaled truncated-normal-ish init (last dim = fan-out conv.)
+        fan_in = d.shape[-2] if len(d.shape) >= 2 else d.shape[-1]
+        std = d.scale / math.sqrt(max(1, fan_in))
+        return std * jax.random.normal(key, d.shape, d.dtype)
+    if d.init == "embed":
+        return d.scale * jax.random.normal(key, d.shape, d.dtype)
+    raise ValueError(f"unknown init {d.init}")
+
+
+def is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def init_tree(defs, key):
+    """Initialize a pytree of ParamDef into a pytree of arrays."""
+    leaves, treedef = jax.tree.flatten(defs, is_leaf=is_def)
+    keys = jax.random.split(key, len(leaves))
+    arrs = [_init_one(k, d) for k, d in zip(keys, leaves)]
+    return jax.tree.unflatten(treedef, arrs)
+
+
+def axes_tree(defs):
+    """Pytree of logical-axes tuples, matching init_tree's structure."""
+    return jax.tree.map(lambda d: d.axes, defs, is_leaf=is_def)
+
+
+def shape_tree(defs):
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, d.dtype), defs, is_leaf=is_def
+    )
+
+
+def param_count(defs) -> int:
+    leaves = jax.tree.leaves(defs, is_leaf=is_def)
+    return int(sum(np.prod(d.shape) for d in leaves))

@@ -1,0 +1,303 @@
+"""Shared neural layers: norms, RoPE, GQA attention (train/prefill/decode),
+MLPs, embeddings, chunked cross-entropy.  Pure functions over param pytrees.
+
+Sharding: activations/weights are annotated with *logical* axis names via
+``repro.parallel.sharding.logical`` -- resolved only inside a
+``use_mesh(...)`` context.  Conventions:
+  weights:      w_embed (d_model dim; FSDP-shards over data when enabled),
+                heads/mlp/vocab/experts (TP dims over `model`)
+  activations:  batch (DP), seq (sequence-sharded residual stream over
+                `model`), kv_seq (decode KV cache sequence over `model`)
+
+Attention is exact query-chunked ("lazy flash"): per chunk of queries the
+full key row is scored, masked, softmaxed -- O(S^2) FLOPs but O(C*S) live
+memory, which is what lets 32k prefill fit HBM in the dry-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.base import ParamDef
+from repro.parallel.sharding import logical
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+def rmsnorm(x, w, eps=1e-5):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w.astype(x.dtype)
+
+
+def layernorm(x, w, b, eps=1e-5):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return y.astype(x.dtype) * w.astype(x.dtype) + b.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+def rope(x, positions, theta: float):
+    """x: (..., S, H, hd), positions: (..., S) int32."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)
+
+
+def _even_chunk(s: int, target: int) -> int:
+    """Largest divisor of ``s`` that is <= target (handles e.g. the VLM's
+    S - n_patches = 3840 text positions against a 512 target)."""
+    c = min(target, s)
+    while s % c:
+        c -= 1
+    return c
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA) -- param defs
+# ---------------------------------------------------------------------------
+def attn_defs(cfg, L: int, prefix_dims=()) -> Dict[str, ParamDef]:
+    D, H, KVH = cfg.d_model, cfg.n_heads, cfg.n_kv_heads
+    hd = cfg.resolved_head_dim
+    lead = (L,) if L else ()
+    la = ("layers",) if L else ()
+    return {
+        "wq": ParamDef(lead + (D, H, hd), la + ("w_embed", "heads", "head_dim")),
+        "wk": ParamDef(lead + (D, KVH, hd), la + ("w_embed", "heads", "head_dim")),
+        "wv": ParamDef(lead + (D, KVH, hd), la + ("w_embed", "heads", "head_dim")),
+        "wo": ParamDef(lead + (H, hd, D), la + ("heads", "head_dim", "w_embed")),
+    }
+
+
+def _expand_kv(k, n_heads):
+    """(B,S,KVH,hd) -> (B,S,H,hd) by group replication."""
+    b, s, kvh, hd = k.shape
+    g = n_heads // kvh
+    return jnp.repeat(k, g, axis=2)
+
+
+def _chunked_attention(q, k, v, positions_q, positions_k, causal, chunk):
+    """Exact chunked attention, flash-style residency.  q:(B,Sq,H,hd).
+
+    * dots run on bf16 operands with f32 accumulation (MXU semantics);
+      only the softmax runs in f32;
+    * each chunk is jax.checkpoint'ed: backward recomputes scores/probs
+      from (qc, k, v) instead of saving the (Sq, Sk) attention matrix --
+      the live footprint stays O(chunk * Sk) like flash attention.
+    """
+    b, sq, h, hd = q.shape
+    scale = 1.0 / math.sqrt(hd)
+    chunk = _even_chunk(sq, chunk)
+    nchunks = sq // chunk
+
+    @jax.checkpoint
+    def one_chunk(qc, pq):
+        # qc:(B,C,H,hd) x k:(B,Sk,H,hd) -> scores (B,H,C,Sk), f32 accum
+        scores = jax.lax.dot_general(
+            (qc * scale).astype(q.dtype), k,
+            (((3,), (3,)), ((0, 2), (0, 2))),
+            preferred_element_type=jnp.float32)
+        if causal:
+            mask = pq[:, None, :, None] >= positions_k[:, None, None, :]
+            scores = jnp.where(mask, scores, -1e30)
+        p = jax.nn.softmax(scores, axis=-1)
+        # p:(B,H,C,Sk) x v:(B,Sk,H,hd) -> (B,H,C,hd), f32 accum
+        out = jax.lax.dot_general(
+            p.astype(q.dtype), v,
+            (((3,), (1,)), ((0, 1), (0, 2))),
+            preferred_element_type=jnp.float32)
+        return out.transpose(0, 2, 1, 3).astype(q.dtype)   # (B,C,H,hd)
+
+    if nchunks == 1:
+        return one_chunk(q, positions_q)
+
+    qr = q.reshape(b, nchunks, chunk, h, hd).transpose(1, 0, 2, 3, 4)
+    pr = positions_q.reshape(b, nchunks, chunk).transpose(1, 0, 2)
+    out = jax.lax.map(lambda args: one_chunk(*args), (qr, pr))
+    return out.transpose(1, 0, 2, 3, 4).reshape(b, sq, h, hd)
+
+
+def attention(
+    p, x, cfg, positions,
+    cache: Optional[Dict[str, Any]] = None,
+    cross_kv: Optional[Tuple[jax.Array, jax.Array]] = None,
+    causal: bool = True,
+    use_rope: bool = True,
+):
+    """GQA attention.  Returns (out, new_cache).
+
+    * train/prefill: cache=None, full-sequence chunked attention.
+    * decode: cache={"k","v","pos"}; x is (B,1,D); KV cache is sequence-
+      sharded over `model` (logical "kv_seq") -- softmax over the sharded
+      key dim lowers to the flash-decoding partial-softmax + combine.
+    * cross attention: cross_kv=(k,v) precomputed encoder keys/values.
+    """
+    B, S, D = x.shape
+    H, KVH, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+
+    # Megatron-SP: all-gather the sequence-sharded residual ONCE at attention
+    # entry; k/v below then derive seq-gathered (avoids the SPMD
+    # seq->heads "involuntary full rematerialization" reshard).
+    x = logical(x, "batch", None, "embed")
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    if use_rope:
+        q = rope(q, positions, cfg.rope_theta)
+    q = logical(q, "batch", None, "heads", None)
+
+    if cross_kv is not None:
+        k, v = cross_kv
+        pos_k = jnp.broadcast_to(jnp.arange(k.shape[1])[None], k.shape[:2])
+        k = _expand_kv(k, H)
+        v = _expand_kv(v, H)
+        out = _chunked_attention(q, k, v, positions, pos_k, False, cfg.attn_chunk)
+        new_cache = cache
+    elif cache is None:
+        k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(x.dtype))
+        v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(x.dtype))
+        if use_rope:
+            k = rope(k, positions, cfg.rope_theta)
+        k = logical(_expand_kv(k, H), "batch", None, "heads", None)
+        v = logical(_expand_kv(v, H), "batch", None, "heads", None)
+        out = _chunked_attention(q, k, v, positions, positions, causal,
+                                 cfg.attn_chunk)
+        new_cache = None
+    else:
+        # --- single-token decode against a sequence-sharded KV cache -------
+        k_new = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(x.dtype))
+        v_new = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(x.dtype))
+        if use_rope:
+            k_new = rope(k_new, positions, cfg.rope_theta)
+        pos = cache["pos"]
+        kc = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype),
+                                          (0, pos, 0, 0))
+        vc = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype),
+                                          (0, pos, 0, 0))
+        kc = logical(kc, "batch", "kv_seq", None, None)
+        vc = logical(vc, "batch", "kv_seq", None, None)
+        Sk = kc.shape[1]
+        g = H // KVH
+        qg = q.reshape(B, 1, KVH, g, hd)
+        scores = jnp.einsum("bqhgd,bkhd->bhgk", qg.astype(jnp.float32),
+                            kc.astype(jnp.float32)) / math.sqrt(hd)
+        mask = jnp.arange(Sk)[None] <= pos                   # valid prefix
+        scores = jnp.where(mask[:, None, None], scores, -1e30)
+        pr = jax.nn.softmax(scores, axis=-1)
+        outg = jnp.einsum("bhgk,bkhd->bhgd", pr, vc.astype(jnp.float32))
+        out = outg.reshape(B, 1, H, hd).astype(x.dtype)
+        new_cache = {"k": kc, "v": vc, "pos": pos + 1}
+
+    y = jnp.einsum("bshk,hkd->bsd", out.astype(x.dtype), p["wo"].astype(x.dtype))
+    return logical(y, "batch", "seq", "embed"), new_cache
+
+
+def init_kv_cache(cfg, batch: int, max_seq: int, dtype=jnp.bfloat16):
+    KVH, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    return {
+        "k": jnp.zeros((batch, max_seq, KVH, hd), dtype),
+        "v": jnp.zeros((batch, max_seq, KVH, hd), dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+def mlp_defs(cfg, L: int) -> Dict[str, ParamDef]:
+    D, F = cfg.d_model, cfg.d_ff
+    lead = (L,) if L else ()
+    la = ("layers",) if L else ()
+    if cfg.mlp_act == "swiglu":
+        return {
+            "wg": ParamDef(lead + (D, F), la + ("w_embed", "mlp")),
+            "wu": ParamDef(lead + (D, F), la + ("w_embed", "mlp")),
+            "wd": ParamDef(lead + (F, D), la + ("mlp", "w_embed")),
+        }
+    return {
+        "wi": ParamDef(lead + (D, F), la + ("w_embed", "mlp")),
+        "wd": ParamDef(lead + (F, D), la + ("mlp", "w_embed")),
+    }
+
+
+def mlp(p, x, cfg):
+    if cfg.mlp_act == "swiglu":
+        g = jnp.einsum("bsd,df->bsf", x, p["wg"].astype(x.dtype))
+        u = jnp.einsum("bsd,df->bsf", x, p["wu"].astype(x.dtype))
+        h = jax.nn.silu(g) * u
+    else:
+        h = jax.nn.gelu(jnp.einsum("bsd,df->bsf", x, p["wi"].astype(x.dtype)))
+    h = logical(h, "batch", None, "mlp")
+    y = jnp.einsum("bsf,fd->bsd", h, p["wd"].astype(x.dtype))
+    return logical(y, "batch", "seq", "embed")
+
+
+# ---------------------------------------------------------------------------
+# Embedding / LM head / loss
+# ---------------------------------------------------------------------------
+def embed_defs(cfg) -> Dict[str, ParamDef]:
+    return {
+        "tok_embed": ParamDef((cfg.vocab, cfg.d_model), ("vocab", "w_embed"),
+                              init="embed", scale=0.02),
+        "lm_head": ParamDef((cfg.d_model, cfg.vocab), ("w_embed", "vocab")),
+        "final_norm": ParamDef((cfg.d_model,), (None,), init="ones"),
+    }
+
+
+def embed(p, tokens, cfg, dtype):
+    h = jnp.take(p["tok_embed"], tokens, axis=0).astype(dtype)
+    return logical(h, "batch", "seq", "embed")
+
+
+def lm_logits(p, h, cfg):
+    h = rmsnorm(h, p["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", h, p["lm_head"].astype(h.dtype))
+    return logical(logits, "batch", None, "vocab")
+
+
+def chunked_xent(p, h, labels, cfg, chunk: int = 512):
+    """Mean next-token CE without materializing (B,S,V) at once.
+
+    h is pre-final-norm hidden states; labels are already shifted.
+    """
+    B, S, D = h.shape
+    chunk = _even_chunk(S, chunk)
+    nchunks = S // chunk
+    hn = rmsnorm(h, p["final_norm"], cfg.norm_eps)
+
+    @jax.checkpoint
+    def one(hc, lc):
+        logits = jnp.einsum("bsd,dv->bsv", hc, p["lm_head"].astype(hc.dtype))
+        logits = logical(logits, "batch", None, "vocab").astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.sum(
+            jnp.where(
+                jax.lax.broadcasted_iota(jnp.int32, logits.shape, 2) == lc[..., None],
+                logits, 0.0,
+            ),
+            axis=-1,
+        )
+        return jnp.sum(lse - ll)
+
+    if nchunks == 1:
+        total = one(hn, labels)
+    else:
+        hr = hn.reshape(B, nchunks, chunk, D).transpose(1, 0, 2, 3)
+        lr = labels.reshape(B, nchunks, chunk).transpose(1, 0, 2)
+        total = jnp.sum(jax.lax.map(lambda args: one(*args), (hr, lr)))
+    return total / (B * S)

@@ -1,0 +1,97 @@
+"""Mixture-of-Experts layer: top-k routing with capacity, expert parallelism.
+
+t5x/mesh-style dispatch: tokens are grouped by batch row; within each group
+every expert accepts at most ``capacity`` tokens (deterministic shapes --
+required for pjit).  Dispatch/combine are one-hot einsums; with experts
+sharded over the `model` axis the dispatched activations reshard
+group-sharded -> expert-sharded, which XLA lowers to the canonical MoE
+all-to-all.  Dropped tokens (over capacity) fall through on the residual.
+
+Load-balancing auxiliary loss follows Switch/OLMoE: aux = E * sum_e f_e * p_e.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.base import ParamDef
+from repro.parallel.sharding import logical
+
+
+def moe_defs(cfg, L: int) -> Dict[str, ParamDef]:
+    D, F, E = cfg.d_model, cfg.d_ff, cfg.moe.num_experts
+    lead = (L,) if L else ()
+    la = ("layers",) if L else ()
+    return {
+        "router": ParamDef(lead + (D, E), la + ("w_embed", None), scale=0.1),
+        "wg": ParamDef(lead + (E, D, F), la + ("experts", "w_embed", "expert_mlp")),
+        "wu": ParamDef(lead + (E, D, F), la + ("experts", "w_embed", "expert_mlp")),
+        "wd": ParamDef(lead + (E, F, D), la + ("experts", "expert_mlp", "w_embed")),
+    }
+
+
+def moe_mlp(p, x, cfg):
+    """x: (B, S, D) -> (B, S, D), plus scalar aux loss.
+
+    ``cfg.moe_group > 0`` routes within sequence groups of that size
+    (t5x-style): capacity -- and with it the (tokens, E, cap)
+    dispatch/combine tensors and their resharding collectives -- shrinks
+    linearly with group size (EXPERIMENTS.md §Perf, qwen3 cell)."""
+    B, S, D = x.shape
+    g = getattr(cfg, "moe_group", 0) or 0
+    if g and g < S and S % g == 0:
+        ng = S // g
+        xg = x.reshape(B * ng, g, D)
+        yg, aux = _moe_mlp_grouped(p, xg, cfg)
+        return yg.reshape(B, S, D), aux
+    return _moe_mlp_grouped(p, x, cfg)
+
+
+def _moe_mlp_grouped(p, x, cfg):
+    B, S, D = x.shape
+    E, K = cfg.moe.num_experts, cfg.moe.top_k
+    cap = max(1, int(cfg.moe.capacity_factor * S * K / E))
+
+    gate_logits = jnp.einsum("bsd,de->bse", x, p["router"].astype(x.dtype))
+    gate_logits = gate_logits.astype(jnp.float32)
+    probs = jax.nn.softmax(gate_logits, axis=-1)            # (B,S,E)
+
+    topk_p, topk_i = jax.lax.top_k(probs, K)                # (B,S,K)
+    topk_p = topk_p / jnp.sum(topk_p, axis=-1, keepdims=True)
+
+    # position of each (token, k) inside its expert's buffer
+    onehot = jax.nn.one_hot(topk_i, E, dtype=jnp.float32)   # (B,S,K,E)
+    flat = onehot.reshape(B, S * K, E)
+    pos = jnp.cumsum(flat, axis=1) - flat                   # slots before me
+    pos = pos.reshape(B, S, K, E)
+    within = (pos < cap) * onehot                           # keep-mask
+    slot = jnp.einsum("bske,bske->bsk", pos, onehot)        # my slot id
+
+    # dispatch tensor (B, S, E, cap): 1 where token s -> expert e slot c.
+    # bf16 + explicit expert-sharding keep the resharding collectives at
+    # reduce-scatter size instead of a full-tensor f32 all-reduce
+    # (EXPERIMENTS.md §Perf B1/B3); slot arithmetic above stays f32.
+    slot_oh = jax.nn.one_hot(slot.astype(jnp.int32), cap,
+                             dtype=jnp.float32)   # (B,S,K,cap)
+    dispatch = jnp.einsum("bske,bskc->bsec", within, slot_oh).astype(x.dtype)
+    combine = jnp.einsum("bsk,bske,bskc->bsec", topk_p, within,
+                         slot_oh).astype(x.dtype)
+    dispatch = logical(dispatch, "batch", None, "experts", None)
+    combine = logical(combine, "batch", None, "experts", None)
+
+    xin = jnp.einsum("bsec,bsd->ebcd", dispatch, x)
+    xin = logical(xin, "experts", "batch", None, None)
+    g = jnp.einsum("ebcd,edf->ebcf", xin, p["wg"].astype(x.dtype))
+    u = jnp.einsum("ebcd,edf->ebcf", xin, p["wu"].astype(x.dtype))
+    h = jax.nn.silu(g) * u
+    eout = jnp.einsum("ebcf,efd->ebcd", h, p["wd"].astype(x.dtype))
+    eout = logical(eout, "experts", "batch", None, None)
+    y = jnp.einsum("ebcd,bsec->bsd", eout, combine)
+
+    # Switch-style load balance aux
+    density = jnp.mean(onehot.sum(2), axis=(0, 1))          # fraction routed
+    mean_prob = jnp.mean(probs, axis=(0, 1))
+    aux = E * jnp.sum(density / K * mean_prob)
+    return logical(y, "batch", "seq", "embed"), aux

@@ -1,0 +1,231 @@
+"""RWKV-6 ("Finch") block: time-mix with data-dependent per-channel decay,
+plus channel-mix.  Attention-free; O(1) decode state.
+
+Time-mix recurrence (per head, K = V = head_dim):
+    S_t = diag(w_t) S_{t-1} + k_t (x) v_t
+    y_t = r_t . (S_{t-1} + diag(u) k_t (x) v_t)
+with w_t = exp(-exp(wx_t)) data-dependent (projected from x) -- the paper's
+(arXiv:2404.05892) signature feature.  Training uses a chunked form whose
+pairwise decay factors are exp of non-positive sums (numerically safe);
+tests check it against the naive per-token recurrence.
+
+Simplification vs full RWKV-6 (DESIGN.md): static token-shift lerp
+coefficients (not the LoRA-produced dynamic mix), no GroupNorm (RMSNorm).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.base import ParamDef
+from repro.parallel.sharding import logical
+
+
+def rwkv_dims(cfg):
+    hd = cfg.d_model // cfg.n_heads
+    return cfg.n_heads, hd
+
+
+def timemix_defs(cfg, L: int) -> Dict[str, ParamDef]:
+    D = cfg.d_model
+    H, hd = rwkv_dims(cfg)
+    lead = (L,) if L else ()
+    la = ("layers",) if L else ()
+    return {
+        "mix": ParamDef(lead + (5, D), la + (None, "w_embed"), init="zeros"),
+        "wr": ParamDef(lead + (D, D), la + ("w_embed", "mlp")),
+        "wk": ParamDef(lead + (D, D), la + ("w_embed", "mlp")),
+        "wv": ParamDef(lead + (D, D), la + ("w_embed", "mlp")),
+        "wg": ParamDef(lead + (D, D), la + ("w_embed", "mlp")),
+        "ww": ParamDef(lead + (D, D), la + ("w_embed", "mlp"), scale=0.1),
+        "w_bias": ParamDef(lead + (D,), la + ("w_embed",), init="zeros"),
+        "u": ParamDef(lead + (D,), la + ("w_embed",), init="zeros"),
+        "wo": ParamDef(lead + (D, D), la + ("mlp", "w_embed")),
+        "ln_w": ParamDef(lead + (D,), la + (None,), init="ones"),
+    }
+
+
+def chanmix_defs(cfg, L: int) -> Dict[str, ParamDef]:
+    D, F = cfg.d_model, cfg.d_ff
+    lead = (L,) if L else ()
+    la = ("layers",) if L else ()
+    return {
+        "mix": ParamDef(lead + (2, D), la + (None, "w_embed"), init="zeros"),
+        "wk": ParamDef(lead + (D, F), la + ("w_embed", "mlp")),
+        "wv": ParamDef(lead + (F, D), la + ("mlp", "w_embed")),
+        "wr": ParamDef(lead + (D, D), la + ("w_embed", "mlp")),
+    }
+
+
+def _token_shift(x, last):
+    """x_{t-1} stream; ``last`` (B,1,D) carries state across decode steps."""
+    if x.shape[1] == 1:
+        return last
+    prev = jnp.concatenate([last, x[:, :-1]], axis=1)
+    return prev
+
+
+def _lerp(x, prev, mu):
+    return x + (prev - x) * mu.astype(x.dtype)
+
+
+def wkv_chunked(r, k, v, lw, u, state, chunk: int = 32):
+    """Chunked WKV-6.  r,k,v: (B,S,H,K); lw = log w_t (<=0): (B,S,H,K).
+
+    state: (B,H,K,V) f32.  Returns (y, new_state).  All pairwise decay
+    factors are exp() of non-positive sums -- numerically safe for any w.
+    """
+    B, S, H, K = r.shape
+    V = v.shape[-1]
+    nchunks = max(1, S // chunk)
+    chunk = S // nchunks
+
+    def one(st, inp):
+        rc, kc, vc, lc = inp                                 # (B,C,H,K), v:(B,C,H,V)
+        cum = jnp.cumsum(lc, axis=1)                         # (B,C,H,K) inclusive
+        cum_prev = cum - lc
+        dmat = cum_prev[:, :, None] - cum[:, None, :]        # (B,Ci,Cj,H,K)
+        causal = jnp.tril(jnp.ones((chunk, chunk), bool), -1)
+        dec = jnp.exp(jnp.where(causal[None, :, :, None, None], dmat, -jnp.inf))
+        scores = jnp.einsum("bihk,bijhk,bjhk->bhij", rc, dec, kc)
+        y = jnp.einsum("bhij,bjhv->bihv", scores, vc)
+        bonus = jnp.einsum("bihk,hk,bihk->bih", rc, u, kc)
+        y = y + bonus[..., None] * vc
+        y = y + jnp.einsum("bihk,bhkv->bihv", rc * jnp.exp(cum_prev), st)
+        dec_out = jnp.exp(cum[:, -1:] - cum)                 # (B,C,H,K)
+        st_new = (jnp.exp(cum[:, -1])[..., None] * st
+                  + jnp.einsum("bjhk,bjhv->bhkv", kc * dec_out, vc))
+        return st_new, y
+
+    def _chunked(a, d):
+        a = a.reshape(B, nchunks, chunk, H, d).transpose(1, 0, 2, 3, 4)
+        return logical(a, None, "batch", None, "heads", None)
+
+    rr, kr, vr, lr = (_chunked(r, K), _chunked(k, K), _chunked(v, V),
+                      _chunked(lw, K))
+    final, ys = jax.lax.scan(one, state, (rr, kr, vr, lr))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, S, H, V)
+    return y, final
+
+
+def wkv_chunked_factored(r, k, v, lw, u, state, chunk: int = 16):
+    """Beyond-baseline WKV-6: factored intra-chunk decay (no (C,C,K) tensor).
+
+    scores_ij = sum_k [r_ik e^{cumprev_ik}] [k_jk e^{-cum_jk}]  (j<i masked)
+
+    eliminates the (B,C,C,H,K) pairwise tensor of ``wkv_chunked`` -- the
+    dominant HBM traffic of rwkv6 training (EXPERIMENTS.md §Perf).  The
+    e^{-cum} factor grows with in-chunk position, so safety requires
+    chunk * max|log w| <= ~64: callers must clamp lw to [-4, 0] and keep
+    chunk <= 16 (enforced here).  Numerics vs the pairwise form are
+    identical in f32 up to reassociation (tested)."""
+    B, S, H, K = r.shape
+    V = v.shape[-1]
+    assert chunk * 4.0 <= 66, "factored WKV needs chunk*clamp <= ~64"
+    nchunks = max(1, S // chunk)
+    chunk = S // nchunks
+
+    def one(st, inp):
+        rc, kc, vc, lc = inp                                 # (B,C,H,K)
+        cum = jnp.cumsum(lc, axis=1)
+        cum_prev = cum - lc
+        r_ = rc * jnp.exp(cum_prev)                          # <= |r|
+        k_ = kc * jnp.exp(-cum)                              # <= |k| e^{64}
+        scores = jnp.einsum("bihk,bjhk->bhij", r_, k_)
+        causal = jnp.tril(jnp.ones((chunk, chunk), r.dtype), -1)
+        scores = scores * causal[None, None]
+        y = jnp.einsum("bhij,bjhv->bihv", scores, vc)
+        bonus = jnp.einsum("bihk,hk,bihk->bih", rc, u, kc)
+        y = y + bonus[..., None] * vc
+        y = y + jnp.einsum("bihk,bhkv->bihv", r_, st)
+        dec_out = jnp.exp(cum[:, -1:] - cum)
+        st_new = (jnp.exp(cum[:, -1])[..., None] * st
+                  + jnp.einsum("bjhk,bjhv->bhkv", kc * dec_out, vc))
+        return st_new, y
+
+    def _chunked(a, d):
+        a = a.reshape(B, nchunks, chunk, H, d).transpose(1, 0, 2, 3, 4)
+        return logical(a, None, "batch", None, "heads", None)
+
+    rr, kr, vr, lr = (_chunked(r, K), _chunked(k, K), _chunked(v, V),
+                      _chunked(lw, K))
+    final, ys = jax.lax.scan(one, state, (rr, kr, vr, lr))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, S, H, V)
+    return y, final
+
+
+def wkv_step(r, k, v, lw, u, state):
+    """One-token WKV (B,1,H,K).  y_t = r.(S + u*k v);  S' = w*S + k v."""
+    kv = jnp.einsum("bhk,bhv->bhkv", k[:, 0], v[:, 0])
+    y = jnp.einsum("bhk,bhkv->bhv", r[:, 0], state + u[None, :, :, None] * kv)
+    st = jnp.exp(lw[:, 0])[..., None] * state + kv
+    return y[:, None], st
+
+
+def time_mix(p, x, cfg, last, state, chunk: int = 32):
+    """RWKV-6 attention substitute.  Returns (y, (last_x, wkv_state))."""
+    B, S, D = x.shape
+    H, hd = rwkv_dims(cfg)
+    prev = _token_shift(x, last)
+    mu = p["mix"].astype(jnp.float32)
+    xr = _lerp(x, prev, mu[0])
+    xk = _lerp(x, prev, mu[1])
+    xv = _lerp(x, prev, mu[2])
+    xw = _lerp(x, prev, mu[3])
+    xg = _lerp(x, prev, mu[4])
+
+    r = jnp.einsum("bsd,de->bse", xr, p["wr"].astype(x.dtype))
+    k = jnp.einsum("bsd,de->bse", xk, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,de->bse", xv, p["wv"].astype(x.dtype))
+    g = jax.nn.silu(jnp.einsum("bsd,de->bse", xg, p["wg"].astype(x.dtype)))
+    # data-dependent decay; clamp keeps exp(-exp(.)) in a sane range.
+    # factored mode needs |log w| <= 4 (see wkv_chunked_factored safety).
+    wx = jnp.einsum("bsd,de->bse", xw, p["ww"].astype(x.dtype))
+    wx = wx.astype(jnp.float32) + p["w_bias"].astype(jnp.float32)
+    lo = jnp.log(4.0) if getattr(cfg, "wkv_factored", False) else 1.0
+    lw = -jnp.exp(jnp.clip(wx, -8.0, lo))                   # log w_t in [-4,0)
+    lw = jnp.maximum(lw, -4.0)
+
+    # Explicit head-sharding constraints: after the S->(chunks, C) reshape
+    # XLA loses the axis mapping and all-gathers the full chunk streams
+    # (EXPERIMENTS.md §Perf A2); pinning (batch, *, heads, *) keeps the WKV
+    # math local per head shard.
+    def _heads(a):
+        return logical(a.reshape(B, S, H, hd), "batch", None, "heads", None)
+
+    rh = _heads(r.astype(jnp.float32))
+    kh = _heads(k.astype(jnp.float32))
+    vh = _heads(v.astype(jnp.float32))
+    lwh = _heads(lw)
+    u = p["u"].astype(jnp.float32).reshape(H, hd)
+
+    if S == 1 and state is not None:
+        y, st = wkv_step(rh, kh, vh, lwh, u, state)
+    else:
+        st0 = state if state is not None else jnp.zeros((B, H, hd, hd), jnp.float32)
+        if getattr(cfg, "wkv_factored", False):
+            y, st = wkv_chunked_factored(rh, kh, vh, lwh, u, st0,
+                                         min(chunk, 16))
+        else:
+            y, st = wkv_chunked(rh, kh, vh, lwh, u, st0, chunk)
+
+    y = y.reshape(B, S, D).astype(x.dtype)
+    from repro.models.layers import rmsnorm
+    y = rmsnorm(y, p["ln_w"], cfg.norm_eps) * g
+    out = jnp.einsum("bse,ed->bsd", y, p["wo"].astype(x.dtype))
+    new_last = x[:, -1:]
+    return logical(out, "batch", "seq", "embed"), (new_last, st)
+
+
+def channel_mix(p, x, cfg, last):
+    prev = _token_shift(x, last)
+    mu = p["mix"].astype(jnp.float32)
+    xk = _lerp(x, prev, mu[0])
+    xr = _lerp(x, prev, mu[1])
+    k = jnp.einsum("bsd,df->bsf", xk, p["wk"].astype(x.dtype))
+    kv = jnp.einsum("bsf,fd->bsd", jnp.square(jax.nn.relu(k)),
+                    p["wv"].astype(x.dtype))
+    rgate = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, p["wr"].astype(x.dtype)))
+    return logical(rgate * kv, "batch", "seq", "embed"), x[:, -1:]

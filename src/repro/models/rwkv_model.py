@@ -1,0 +1,74 @@
+"""RWKV-6 full model: scanned (time_mix + channel_mix) layers over the
+shared embedding/head.  State pytree (per layer): last-token streams for
+both mixes + the (B,H,K,V) WKV state -- O(1) in sequence length, which is
+why rwkv6 runs the long_500k decode cell."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import ModelConfig
+from repro.models import layers as nn
+from repro.models import rwkv6
+from repro.models.base import ParamDef
+
+
+def param_defs(cfg: ModelConfig):
+    L = cfg.n_layers
+    return {
+        "blocks": {
+            "ln1": ParamDef((L, cfg.d_model), ("layers", None), init="ones"),
+            "ln2": ParamDef((L, cfg.d_model), ("layers", None), init="ones"),
+            "tm": rwkv6.timemix_defs(cfg, L),
+            "cm": rwkv6.chanmix_defs(cfg, L),
+        },
+        **nn.embed_defs(cfg),
+    }
+
+
+def init_state(cfg: ModelConfig, batch: int):
+    H, hd = rwkv6.rwkv_dims(cfg)
+    L, D = cfg.n_layers, cfg.d_model
+    return {
+        "tm_last": jnp.zeros((L, batch, 1, D), jnp.dtype(cfg.dtype)),
+        "cm_last": jnp.zeros((L, batch, 1, D), jnp.dtype(cfg.dtype)),
+        "wkv": jnp.zeros((L, batch, H, hd, hd), jnp.float32),
+    }
+
+
+def forward(params, tokens, cfg: ModelConfig, state=None):
+    dtype = jnp.dtype(cfg.dtype)
+    h = nn.embed(params, tokens, cfg, dtype)
+    B = h.shape[0]
+    if state is None:
+        state = init_state(cfg, B)
+
+    def body(h, xs):
+        lp, tm_last, cm_last, wkv = xs
+        a_in = nn.rmsnorm(h, lp["ln1"], cfg.norm_eps)
+        a, (tm_last2, wkv2) = rwkv6.time_mix(lp["tm"], a_in, cfg, tm_last, wkv)
+        h = h + a
+        c_in = nn.rmsnorm(h, lp["ln2"], cfg.norm_eps)
+        c, cm_last2 = rwkv6.channel_mix(lp["cm"], c_in, cfg, cm_last)
+        h = h + c
+        return h, (tm_last2.astype(tm_last.dtype),
+                   cm_last2.astype(cm_last.dtype), wkv2)
+
+    xs = (params["blocks"], state["tm_last"], state["cm_last"], state["wkv"])
+    if cfg.remat and tokens.shape[1] > 1:
+        body = jax.checkpoint(body, policy=None)
+    h, (tm2, cm2, wkv2) = jax.lax.scan(body, h, xs)
+    return h, {"tm_last": tm2, "cm_last": cm2, "wkv": wkv2}
+
+
+def loss_fn(params, batch, cfg: ModelConfig):
+    tokens = batch["tokens"]
+    h, _ = forward(params, tokens[:, :-1], cfg)
+    loss = nn.chunked_xent(params, h, tokens[:, 1:], cfg)
+    return loss, {"xent": loss}
+
+
+def decode_step(params, state, token, cfg: ModelConfig, pos=None):
+    h, new_state = forward(params, token, cfg, state=state)
+    logits = nn.lm_logits(params, h, cfg)
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32), new_state

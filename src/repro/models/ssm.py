@@ -1,0 +1,175 @@
+"""Mamba2-style selective SSM block (SSD, scalar-per-head decay), chunked.
+
+Production path is the chunked (SSD) algorithm: within a chunk the
+contribution matrix is dense (MXU-friendly einsums); across chunks a scan
+carries the (B, H, hd, N) state.  A naive per-token scan oracle lives in
+tests for equivalence checking.  Decode is the O(1) recurrence step.
+
+Simplifications vs the full Mamba2 (noted in DESIGN.md): single B/C group,
+conv only on the x-branch, no RMSNorm-in-block variants.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.base import ParamDef
+from repro.parallel.sharding import logical
+
+
+def ssm_dims(cfg):
+    d_inner = cfg.ssm.expand * cfg.d_model
+    hd = cfg.ssm.head_dim
+    nheads = d_inner // hd
+    return d_inner, nheads, hd, cfg.ssm.state_dim
+
+
+def ssm_defs(cfg, L: int) -> Dict[str, ParamDef]:
+    D = cfg.d_model
+    d_inner, H, hd, N = ssm_dims(cfg)
+    cw = cfg.ssm.conv_width
+    lead = (L,) if L else ()
+    la = ("layers",) if L else ()
+    return {
+        # fused in-projection: [z, x, B, C, dt]
+        "w_in": ParamDef(lead + (D, 2 * d_inner + 2 * N + H),
+                         la + ("w_embed", "mlp")),
+        "conv": ParamDef(lead + (cw, d_inner), la + ("conv", "mlp"),
+                         init="normal", scale=0.5),
+        "A_log": ParamDef(lead + (H,), la + ("heads",), init="zeros"),
+        "dt_bias": ParamDef(lead + (H,), la + ("heads",), init="zeros"),
+        "Dskip": ParamDef(lead + (H,), la + ("heads",), init="ones"),
+        "w_out": ParamDef(lead + (d_inner, D), la + ("mlp", "w_embed")),
+    }
+
+
+def _split_proj(proj, cfg):
+    d_inner, H, hd, N = ssm_dims(cfg)
+    z, xc, b, c, dt = jnp.split(
+        proj, [d_inner, 2 * d_inner, 2 * d_inner + N, 2 * d_inner + 2 * N], axis=-1
+    )
+    return z, xc, b, c, dt
+
+
+def _causal_conv(x, w, state: Optional[jax.Array] = None):
+    """Depthwise causal conv over seq.  x:(B,S,C), w:(cw,C).
+
+    state (B, cw-1, C) carries the left context for decode; returns
+    (y, new_state)."""
+    cw = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (cw - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    y = sum(w[i].astype(x.dtype) * xp[:, i : i + x.shape[1]] for i in range(cw))
+    new_state = xp[:, -(cw - 1):] if cw > 1 else None
+    return y, new_state
+
+
+def _segsum(lw):
+    """lw: (..., C) log-decays -> (..., C, C) lower-tri pairwise sums.
+
+    out[i, j] = sum_{s=j+1..i} lw[s]  (j < i),  0 on diagonal, -inf above.
+    """
+    C = lw.shape[-1]
+    cs = jnp.cumsum(lw, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]      # cum[i] - cum[j]
+    mask = jnp.tril(jnp.ones((C, C), bool), 0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssm_scan_chunked(xh, b, c, dt, A, state, chunk: int = 64):
+    """Chunked SSD.  xh:(B,S,H,hd)  b,c:(B,S,N)  dt:(B,S,H)  A:(H,) < 0.
+
+    state: (B,H,hd,N) carried across chunks.  Returns (y, final_state).
+    """
+    B, S, H, hd = xh.shape
+    N = b.shape[-1]
+    nchunks = max(1, S // chunk)
+    chunk = S // nchunks
+
+    lw = (dt * A[None, None, :]).astype(jnp.float32)        # log-decay (B,S,H)
+    xdt = xh * dt[..., None].astype(xh.dtype)               # dt-weighted input
+
+    def scanned(carry, inputs):
+        st = carry                                          # (B,H,hd,N) f32
+        xc_, bc_, cc_, lwc_ = inputs                        # chunk slices
+        # (B,H,C,C) pairwise decay factors
+        seg = _segsum(jnp.moveaxis(lwc_, 1, -1))            # (B,H,C,C)
+        decay = jnp.exp(seg)
+        # intra-chunk: scores_ij = (c_i . b_j) * decay_ij   (causal incl diag)
+        g = jnp.einsum("bin,bjn->bij", cc_.astype(jnp.float32),
+                       bc_.astype(jnp.float32))             # (B,C,C)
+        scores = g[:, None] * decay                         # (B,H,C,C)
+        y_intra = jnp.einsum("bhij,bjhd->bihd", scores, xdt_f(xc_))
+        # inter-chunk: y_i += c_i . (decay_to_i * state)
+        cum = jnp.cumsum(jnp.moveaxis(lwc_, 1, -1), axis=-1)  # (B,H,C)
+        dec_in = jnp.exp(cum)                               # decay incl token i
+        y_inter = jnp.einsum("bin,bhdn,bhi->bihd", cc_.astype(jnp.float32),
+                             st, dec_in)
+        # state update: st' = exp(cum_C) st + sum_j exp(cum_C - cum_j) b_j x_j
+        dec_out = jnp.exp(cum[..., -1:] - cum)              # (B,H,C)
+        st_new = jnp.exp(cum[..., -1])[..., None, None] * st + jnp.einsum(
+            "bjn,bjhd,bhj->bhdn", bc_.astype(jnp.float32), xdt_f(xc_), dec_out
+        )
+        return st_new, (y_intra + y_inter)
+
+    def xdt_f(xc_):
+        return xc_.astype(jnp.float32)
+
+    xr = xdt.reshape(B, nchunks, chunk, H, hd).transpose(1, 0, 2, 3, 4)
+    br = b.reshape(B, nchunks, chunk, N).transpose(1, 0, 2, 3)
+    cr = c.reshape(B, nchunks, chunk, N).transpose(1, 0, 2, 3)
+    lr = lw.reshape(B, nchunks, chunk, H).transpose(1, 0, 2, 3)
+    final, ys = jax.lax.scan(scanned, state.astype(jnp.float32), (xr, br, cr, lr))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, S, H, hd)
+    return y.astype(xh.dtype), final
+
+
+def ssm_step(xh, b, c, dt, A, state):
+    """O(1) decode step.  xh:(B,1,H,hd) -> (y, new_state)."""
+    lw = (dt[:, 0] * A[None, :]).astype(jnp.float32)        # (B,H)
+    a = jnp.exp(lw)[..., None, None]                        # (B,H,1,1)
+    upd = jnp.einsum("bn,bhd->bhdn", b[:, 0].astype(jnp.float32),
+                     (xh[:, 0] * dt[:, 0, :, None]).astype(jnp.float32))
+    st = a * state + upd
+    y = jnp.einsum("bn,bhdn->bhd", c[:, 0].astype(jnp.float32), st)
+    return y[:, None].astype(xh.dtype), st
+
+
+def mamba_block(p, x, cfg, state=None, conv_state=None, chunk: int = 64):
+    """Full Mamba2 block.  state None => chunked full-sequence training path.
+
+    Returns (y, (ssm_state, conv_state)).
+    """
+    B, S, D = x.shape
+    d_inner, H, hd, N = ssm_dims(cfg)
+    proj = jnp.einsum("bsd,dp->bsp", x, p["w_in"].astype(x.dtype))
+    z, xc, b, c, dt_raw = _split_proj(proj, cfg)
+    xc, conv_state = _causal_conv(xc, p["conv"], conv_state)
+    xc = jax.nn.silu(xc)
+    xc = logical(xc, "batch", None, "mlp")
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) +
+                         p["dt_bias"].astype(jnp.float32))  # (B,S,H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))            # (H,) < 0
+    xh = xc.reshape(B, S, H, hd)
+    if state is None:
+        state0 = jnp.zeros((B, H, hd, N), jnp.float32)
+        y, new_state = ssm_scan_chunked(xh, b, c, dt, A, state0, chunk)
+    else:
+        y, new_state = ssm_step(xh, b, c, dt, A, state)
+    y = y + p["Dskip"].astype(y.dtype)[None, None, :, None] * xh
+    y = y.reshape(B, S, d_inner) * jax.nn.silu(z)
+    out = jnp.einsum("bsp,pd->bsd", y, p["w_out"].astype(x.dtype))
+    return logical(out, "batch", "seq", "embed"), (new_state, conv_state)
+
+
+def init_ssm_cache(cfg, batch: int):
+    d_inner, H, hd, N = ssm_dims(cfg)
+    cw = cfg.ssm.conv_width
+    return {
+        "ssm": jnp.zeros((batch, H, hd, N), jnp.float32),
+        "conv": jnp.zeros((batch, cw - 1, d_inner), jnp.float32),
+    }

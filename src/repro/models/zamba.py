@@ -1,0 +1,145 @@
+"""Zamba2-style hybrid: Mamba2 backbone + a SHARED attention block applied
+every ``ssm.shared_attn_every`` layers (weights shared, activations and KV
+caches distinct per application site).
+
+Layer scan carries (h, aux) and the stacked per-site KV cache; the shared
+block fires under ``lax.cond`` on the layer index (both branches traced
+once -- HLO stays one-layer-sized).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import ModelConfig
+from repro.models import layers as nn
+from repro.models import ssm as ssm_lib
+from repro.models.base import ParamDef
+from repro.parallel.sharding import logical
+
+
+def n_shared_sites(cfg) -> int:
+    k = cfg.ssm.shared_attn_every
+    return (cfg.n_layers + k - 1) // k
+
+
+def param_defs(cfg: ModelConfig):
+    L = cfg.n_layers
+    return {
+        "mamba": {
+            "ln": ParamDef((L, cfg.d_model), ("layers", None), init="ones"),
+            "block": ssm_lib.ssm_defs(cfg, L),
+        },
+        "shared": {                       # ONE set of weights, many sites
+            "ln1": ParamDef((cfg.d_model,), (None,), init="ones"),
+            "ln2": ParamDef((cfg.d_model,), (None,), init="ones"),
+            "attn": nn.attn_defs(cfg, 0),
+            "mlp": nn.mlp_defs(cfg, 0),
+        },
+        **nn.embed_defs(cfg),
+    }
+
+
+def _shared_block(cfg, params, h, positions, cache=None):
+    sp = params["shared"]
+    a_in = nn.rmsnorm(h, sp["ln1"], cfg.norm_eps)
+    attn_out, new_cache = nn.attention(sp["attn"], a_in, cfg, positions,
+                                       cache=cache)
+    h = h + attn_out
+    m_in = nn.rmsnorm(h, sp["ln2"], cfg.norm_eps)
+    h = h + nn.mlp(sp["mlp"], m_in, cfg)
+    return h, new_cache
+
+
+def forward(params, tokens, cfg: ModelConfig, caches=None, positions=None):
+    """caches: {"kv": stacked (sites,...) KV, "ssm": (L,...), "conv": (L,...)}"""
+    dtype = jnp.dtype(cfg.dtype)
+    h = nn.embed(params, tokens, cfg, dtype)
+    B, S, _ = h.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    every = cfg.ssm.shared_attn_every
+    L = cfg.n_layers
+    decode = caches is not None
+
+    if decode:
+        kv_cache = caches["kv"]
+        lp_st = ({"ln": params["mamba"]["ln"], "block": params["mamba"]["block"]},
+                 caches["ssm"], caches["conv"])
+
+        def body2(carry, xs):
+            h, kv = carry
+            (lp, st, cv), idx = xs
+
+            def with_attn(h, kv):
+                site = idx // every
+                c = jax.tree.map(lambda x: jax.lax.dynamic_index_in_dim(
+                    x, site, 0, keepdims=False), kv)
+                h2, new_c = _shared_block(cfg, params, h, positions, cache=c)
+                kv2 = jax.tree.map(
+                    lambda full, one: jax.lax.dynamic_update_index_in_dim(
+                        full, one.astype(full.dtype), site, 0),
+                    kv, new_c)
+                return h2, kv2
+
+            h, kv = jax.lax.cond(idx % every == 0, with_attn,
+                                 lambda h, kv: (h, kv), h, kv)
+            m_in = nn.rmsnorm(h, lp["ln"], cfg.norm_eps)
+            out, (st2, cv2) = ssm_lib.mamba_block(lp["block"], m_in, cfg,
+                                                  state=st, conv_state=cv)
+            return (h + out, kv), (st2, cv2)
+
+        (h, kv_cache), (ssm2, conv2) = jax.lax.scan(
+            body2, (h, kv_cache), (lp_st, jnp.arange(L)))
+        new_caches = {"kv": kv_cache, "ssm": ssm2, "conv": conv2}
+        return h, new_caches, jnp.zeros((), jnp.float32)
+
+    # ---- training / full-sequence path (no KV cache: chunked attention)
+    def body(carry, xs):
+        h = carry
+        lp, idx = xs
+
+        def with_attn(h):
+            h2, _ = _shared_block(cfg, params, h, positions)
+            return h2
+
+        h = jax.lax.cond(idx % every == 0, with_attn, lambda h: h, h)
+        m_in = nn.rmsnorm(h, lp["ln"], cfg.norm_eps)
+        out, _ = ssm_lib.mamba_block(lp["block"], m_in, cfg)
+        return h + out, None
+
+    body_fn = jax.checkpoint(body, policy=None) if cfg.remat else body
+    lp = {"ln": params["mamba"]["ln"], "block": params["mamba"]["block"]}
+    h, _ = jax.lax.scan(body_fn, h, (lp, jnp.arange(L)))
+    return h, None, jnp.zeros((), jnp.float32)
+
+
+def loss_fn(params, batch, cfg: ModelConfig):
+    tokens = batch["tokens"]
+    h, _, _ = forward(params, tokens[:, :-1], cfg)
+    loss = nn.chunked_xent(params, h, tokens[:, 1:], cfg)
+    return loss, {"xent": loss}
+
+
+def init_caches(cfg: ModelConfig, batch: int, max_seq: int):
+    sites = n_shared_sites(cfg)
+    kv = nn.init_kv_cache(cfg, batch, max_seq, jnp.dtype(cfg.dtype))
+    kv = jax.tree.map(lambda x: jnp.broadcast_to(x[None], (sites,) + x.shape), kv)
+    s = ssm_lib.init_ssm_cache(cfg, batch)
+    L = cfg.n_layers
+    return {
+        "kv": kv,
+        "ssm": jnp.broadcast_to(s["ssm"][None], (L,) + s["ssm"].shape),
+        "conv": jnp.broadcast_to(s["conv"][None], (L,) + s["conv"].shape),
+    }
+
+
+def decode_step(params, caches, token, cfg: ModelConfig, pos):
+    B = token.shape[0]
+    positions = jnp.broadcast_to(pos[None, None], (B, 1)).astype(jnp.int32)
+    h, new_caches, _ = forward(params, token, cfg, caches=caches,
+                               positions=positions)
+    logits = nn.lm_logits(params, h, cfg)
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32), new_caches

@@ -1,0 +1,203 @@
+"""Logical-axis -> mesh-axis rules (t5x-style), DP/TP/SP/EP/FSDP.
+
+Mesh axes:
+  * ``pod``   -- inter-pod axis (multi-pod mesh only); folds into data
+                 parallelism by default, or hosts pipeline stages.
+  * ``data``  -- data parallelism (+ FSDP parameter sharding when enabled).
+  * ``model`` -- tensor parallelism (heads / mlp / vocab / experts) and
+                 sequence parallelism for the residual stream & KV caches.
+
+Logical axes used by the models:
+  batch, seq(residual seq), kv_seq, heads, head_dim, embed, mlp, vocab,
+  experts, expert_mlp, layers, state, conv
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import base
+
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """Mesh axes that implement data parallelism (pod folds into data)."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def make_rules(mesh: Mesh, fsdp: bool = False, pure_dp: bool = False):
+    """logical axis -> mesh axes (None = replicated).
+
+    ``pure_dp``: fold the `model` axis into data parallelism -- for
+    attention-free/low-width archs where tensor parallelism only buys
+    collectives (EXPERIMENTS.md §Perf A4).  Weights shard over everything
+    (ZeRO), activations shard batch over all axes."""
+    dp = data_axes(mesh)
+    msize = mesh.shape["model"]
+    if pure_dp:
+        alldp = dp + ("model",)
+        return {
+            "batch": alldp, "seq": None, "kv_seq": None, "embed": None,
+            "w_embed": alldp if fsdp else None,
+            "heads": None, "head_dim": None, "mlp": None, "vocab": None,
+            "experts": None, "expert_mlp": None, "layers": None,
+            "state": None, "conv": None, None: None,
+        }
+    rules = {
+        # --- activations ---
+        "batch": dp,
+        "seq": "model",        # Megatron-style sequence sharding of residuals
+        "kv_seq": "model",     # decode KV caches sharded along sequence
+        "embed": None,         # residual d_model dim: replicated
+        # --- weights ---
+        "w_embed": dp if fsdp else None,  # ZeRO-3: weight d_model dim over data
+        "heads": "model",
+        "head_dim": None,
+        "mlp": "model",
+        "vocab": "model",
+        "experts": "model",
+        "expert_mlp": None,
+        "layers": None,
+        "state": None,
+        "conv": None,
+        None: None,
+    }
+    return rules
+
+
+def resolve_axes(axes: Tuple[Optional[str], ...], rules, shape=None, mesh=None) -> P:
+    """Logical axes tuple -> PartitionSpec, dropping non-divisible shardings.
+
+    Tuple mesh-axis assignments degrade gracefully: if the dim doesn't
+    divide the full product, progressively drop trailing mesh axes (e.g.
+    batch 256 on (pod,data,model)=512 chips falls back to (pod,data)=32)
+    instead of replicating outright."""
+    out = []
+    for i, a in enumerate(axes):
+        m = rules.get(a, None)
+        if m is not None and shape is not None and mesh is not None:
+            if isinstance(m, str):
+                if shape[i] % _mesh_size(mesh, m) != 0:
+                    m = None  # e.g. kv_heads=2 on model=16 -> replicate
+            else:
+                m = tuple(m)
+                while m and shape[i] % _mesh_size(mesh, m) != 0:
+                    m = m[:-1]
+                m = m or None
+        out.append(m)
+    return P(*out)
+
+
+def _mesh_size(mesh: Mesh, axes) -> int:
+    if isinstance(axes, str):
+        return mesh.shape[axes]
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def param_pspecs(defs, mesh: Mesh, fsdp: bool = False, pure_dp: bool = False):
+    """Pytree of PartitionSpec for a ParamDef tree (divisibility-checked)."""
+    rules = make_rules(mesh, fsdp, pure_dp)
+    return jax.tree.map(
+        lambda d: resolve_axes(d.axes, rules, d.shape, mesh),
+        defs, is_leaf=base.is_def,
+    )
+
+
+def param_shardings(defs, mesh: Mesh, fsdp: bool = False):
+    return jax.tree.map(
+        lambda spec: NamedSharding(mesh, spec),
+        param_pspecs(defs, mesh, fsdp),
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+class _Ctx:
+    mesh: Optional[Mesh] = None
+    rules = None
+
+
+_CTX = _Ctx()
+
+
+class use_mesh:
+    """Context manager binding the mesh+rules used by ``logical()`` below.
+
+    Model code stays mesh-agnostic: ``logical(h, "batch", "seq", "embed")``
+    is a no-op outside the context (single-device smoke tests) and a
+    ``with_sharding_constraint`` inside it (pjit dry-runs / training).
+    """
+
+    def __init__(self, mesh: Optional[Mesh], fsdp: bool = False,
+                 pure_dp: bool = False):
+        self.mesh = mesh
+        self.rules = (make_rules(mesh, fsdp, pure_dp)
+                      if mesh is not None else None)
+
+    def __enter__(self):
+        self._prev = (_CTX.mesh, _CTX.rules)
+        _CTX.mesh, _CTX.rules = self.mesh, self.rules
+        return self
+
+    def __exit__(self, *exc):
+        _CTX.mesh, _CTX.rules = self._prev
+        return False
+
+
+def logical(x: jax.Array, *axes):
+    """with_sharding_constraint by logical axis names (no-op off-mesh)."""
+    mesh = _CTX.mesh
+    if mesh is None or mesh.empty:
+        return x
+    spec = resolve_axes(tuple(axes), _CTX.rules, x.shape, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# Decode-state (KV cache / SSM state) shardings, keyed by leaf name
+# ---------------------------------------------------------------------------
+_CACHE_AXES = {
+    # leaf-name -> logical axes (leading stacked "layers"/"sites" dim first)
+    "k": ("layers", "batch", "kv_seq", None, None),
+    "v": ("layers", "batch", "kv_seq", None, None),
+    "cross_k": ("layers", "batch", "kv_seq", None, None),
+    "cross_v": ("layers", "batch", "kv_seq", None, None),
+    "ssm": ("layers", "batch", "heads", None, None),
+    "conv": ("layers", "batch", None, "mlp"),
+    "tm_last": ("layers", "batch", None, None),
+    "cm_last": ("layers", "batch", None, None),
+    "wkv": ("layers", "batch", "heads", None, None),
+    "pos": (),
+}
+
+
+def cache_pspecs(caches_aval, mesh: Mesh):
+    """PartitionSpec pytree for a decode-state pytree (by leaf name)."""
+    rules = make_rules(mesh)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(caches_aval)
+    specs = []
+    for path, leaf in flat:
+        name = None
+        for p in reversed(path):
+            if hasattr(p, "key"):
+                name = str(p.key)
+                break
+        axes = _CACHE_AXES.get(name)
+        if axes is None or len(axes) != len(leaf.shape):
+            axes = (None,) * len(leaf.shape)
+        specs.append(resolve_axes(axes, rules, leaf.shape, mesh))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def batch_pspecs(batch_aval, mesh: Mesh):
+    """Shard every batch input on dim 0 over the DP axes."""
+    rules = make_rules(mesh)
+
+    def one(x):
+        axes = ("batch",) + (None,) * (len(x.shape) - 1)
+        return resolve_axes(axes, rules, x.shape, mesh)
+
+    return jax.tree.map(one, batch_aval)

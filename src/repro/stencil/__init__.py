@@ -1,0 +1,14 @@
+"""Stencil problem domain: specs, weights, references, distribution."""
+from .spec import StencilSpec, box, star
+from .weights import make_weights, jacobi_weights, fuse_weights, fused_num_points, alpha
+
+__all__ = [
+    "StencilSpec",
+    "box",
+    "star",
+    "make_weights",
+    "jacobi_weights",
+    "fuse_weights",
+    "fused_num_points",
+    "alpha",
+]

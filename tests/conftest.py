@@ -1,0 +1,7 @@
+import os
+import sys
+
+# Make `repro` importable without installation.  NOTE: we deliberately do
+# NOT set xla_force_host_platform_device_count here -- smoke tests must see
+# the real single CPU device; multi-device tests spawn subprocesses.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

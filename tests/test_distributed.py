@@ -1,0 +1,171 @@
+"""Multi-device tests (distributed stencil halo exchange, sharded train
+step, HLO cost analyzer on partitioned programs).
+
+jax pins the device count at first init, and the suite must see ONE device
+(per the dry-run contract), so every test here runs in a subprocess with
+its own XLA_FLAGS."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def run_with_devices(n, code):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n}"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       capture_output=True, text=True, env=env, timeout=560)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    return r.stdout
+
+
+class TestDistributedStencil:
+    def test_halo_exchange_matches_global(self):
+        out = run_with_devices(4, """
+            import jax, numpy as np, jax.numpy as jnp
+            from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+            from repro.stencil import StencilSpec, make_weights
+            from repro.stencil.reference import apply_stencil_steps
+            from repro.stencil.distributed import make_distributed_stepper
+            mesh = Mesh(np.array(jax.devices()).reshape(2,2), ("x","y"))
+            for shape in ("box","star"):
+                for mode in ("stepwise","fused"):
+                    spec = StencilSpec(shape,2,1); w = make_weights(spec, seed=1)
+                    x = np.random.default_rng(0).normal(size=(64,64)).astype(np.float32)
+                    xs = jax.device_put(x, NamedSharding(mesh, P("x","y")))
+                    step = make_distributed_stepper(mesh, ("x","y"), w, t=3, mode=mode)
+                    with mesh:
+                        y = jax.jit(step)(xs)
+                    ref = apply_stencil_steps(jnp.asarray(x), jnp.asarray(w), 3)
+                    err = float(jnp.abs(y - ref).max())
+                    assert err < 1e-5, (shape, mode, err)
+            print("OK")
+        """)
+        assert "OK" in out
+
+    def test_1d_sharding_and_3d_grid(self):
+        out = run_with_devices(4, """
+            import jax, numpy as np, jax.numpy as jnp
+            from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+            from repro.stencil import StencilSpec, make_weights
+            from repro.stencil.reference import apply_stencil_steps
+            from repro.stencil.distributed import make_distributed_stepper
+            mesh = Mesh(np.array(jax.devices()).reshape(4,), ("x",))
+            spec = StencilSpec("box",3,1); w = make_weights(spec, seed=2)
+            x = np.random.default_rng(1).normal(size=(32,16,16)).astype(np.float32)
+            xs = jax.device_put(x, NamedSharding(mesh, P("x")))
+            step = make_distributed_stepper(mesh, ("x",None,None), w, t=2, mode="fused")
+            with mesh:
+                y = jax.jit(step)(xs)
+            ref = apply_stencil_steps(jnp.asarray(x), jnp.asarray(w), 2)
+            assert float(jnp.abs(y-ref).max()) < 1e-5
+            print("OK")
+        """)
+        assert "OK" in out
+
+    def test_fused_mode_fewer_collectives(self):
+        """Temporal fusion amortizes halo exchanges: the fused program
+        must contain fewer collective-permutes than stepwise (paper's
+        communication-side redundancy trade)."""
+        out = run_with_devices(4, """
+            import jax, numpy as np, jax.numpy as jnp
+            from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+            from repro.stencil import StencilSpec, make_weights
+            from repro.stencil.distributed import make_distributed_stepper
+            from repro.core.hlo_cost import analyze_hlo
+            mesh = Mesh(np.array(jax.devices()).reshape(2,2), ("x","y"))
+            w = make_weights(StencilSpec("box",2,1), seed=1)
+            aval = jax.ShapeDtypeStruct((64,64), jnp.float32)
+            sh = NamedSharding(mesh, P("x","y"))
+            counts = {}
+            for mode in ("stepwise","fused"):
+                step = make_distributed_stepper(mesh, ("x","y"), w, t=4, mode=mode)
+                c = jax.jit(step, in_shardings=sh, out_shardings=sh).lower(aval).compile()
+                pc = analyze_hlo(c.as_text())
+                counts[mode] = pc.coll_counts.get("collective-permute", 0)
+            assert counts["fused"] < counts["stepwise"], counts
+            print("OK", counts)
+        """)
+        assert "OK" in out
+
+
+class TestShardedTraining:
+    def test_sharded_train_step_runs(self):
+        """End-to-end pjit train step on a 2x2 (data, model) mesh with the
+        production sharding rules, executed for real (not just lowered)."""
+        out = run_with_devices(4, """
+            import jax, numpy as np, jax.numpy as jnp
+            from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+            from repro.configs import SMOKE
+            from repro.models.api import get_model
+            from repro.models import base
+            from repro.optim import adamw
+            from repro.parallel import sharding
+            from repro.train.steps import make_train_step
+            mesh = jax.make_mesh((2,2), ("data","model"))
+            cfg = SMOKE["llama3.2-1b"]
+            model = get_model(cfg)
+            defs = model.param_defs()
+            pspecs = sharding.param_pspecs(defs, mesh, cfg.fsdp)
+            shards = sharding.param_shardings(defs, mesh, cfg.fsdp)
+            params = model.init_params(jax.random.PRNGKey(0))
+            params = jax.tree.map(jax.device_put, params, shards)
+            opt = adamw.init(params)
+            batch = {"tokens": np.random.default_rng(0).integers(
+                0, cfg.vocab, size=(4, 33)).astype(np.int32)}
+            step = make_train_step(model, adamw.AdamWConfig(lr=1e-3))
+            with sharding.use_mesh(mesh, cfg.fsdp):
+                p2, o2, m = jax.jit(step)(params, opt, batch)
+            loss = float(m["loss"])
+            assert np.isfinite(loss) and loss > 0
+            # sharded == single-device result
+            loss_ref, _ = model.loss_fn(jax.device_get(params), batch)
+            assert abs(loss - float(loss_ref)) < 0.05, (loss, float(loss_ref))
+            print("OK", loss)
+        """)
+        assert "OK" in out
+
+    def test_cache_pspecs_resolve(self):
+        out = run_with_devices(4, """
+            import jax, jax.numpy as jnp
+            from repro.configs import ARCHS
+            from repro.models.api import get_model
+            from repro.parallel import sharding
+            mesh = jax.make_mesh((2,2), ("data","model"))
+            for arch in ("llama3.2-1b","zamba2-1.2b","rwkv6-1.6b","whisper-base"):
+                model = get_model(ARCHS[arch])
+                caches = jax.eval_shape(lambda: model.init_caches(8, 64))
+                specs = sharding.cache_pspecs(caches, mesh)
+                jax.tree.map(lambda a, s: None, caches, specs)  # structure match
+            print("OK")
+        """)
+        assert "OK" in out
+
+
+class TestHloCostPartitioned:
+    def test_collectives_counted(self):
+        out = run_with_devices(4, """
+            import jax, jax.numpy as jnp
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            from repro.core.hlo_cost import analyze_hlo
+            mesh = jax.make_mesh((4,), ("m",))
+            def f(a, b):
+                return a @ b
+            sh_a = NamedSharding(mesh, P(None, "m"))
+            sh_b = NamedSharding(mesh, P("m", None))
+            a = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+            c = jax.jit(f, in_shardings=(sh_a, sh_b),
+                        out_shardings=NamedSharding(mesh, P())).lower(a, a).compile()
+            pc = analyze_hlo(c.as_text())
+            # contracting-dim sharding => all-reduce of the (256,256) output
+            assert pc.coll.get("all-reduce", 0) >= 256*256*4, pc.coll
+            # per-partition flops = full / 4
+            assert abs(pc.flops - 2*256**3/4) / (2*256**3/4) < 0.05
+            print("OK")
+        """)
+        assert "OK" in out

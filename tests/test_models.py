@@ -1,0 +1,123 @@
+"""Per-architecture smoke tests (reduced configs): forward shapes, loss
+finite, one train step, decode step; decode<->forward consistency."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import SMOKE, ARCHS, SHAPES, cells_for
+from repro.models.api import get_model
+from repro.optim import adamw
+from repro.train.steps import make_train_step, make_serve_step
+
+RNG = np.random.default_rng(0)
+
+
+def _batch(cfg, B=2, S=32):
+    b = {"tokens": RNG.integers(0, cfg.vocab, size=(B, S + 1)).astype(np.int32)}
+    if cfg.family == "whisper":
+        b["frames"] = RNG.standard_normal((B, S, cfg.d_model)).astype(np.float32)
+    if cfg.family == "vlm":
+        b["img_embeds"] = RNG.standard_normal(
+            (B, cfg.n_img_patches, cfg.d_model)).astype(np.float32)
+    return b
+
+
+@pytest.mark.parametrize("arch", list(SMOKE))
+class TestArchSmoke:
+    def test_loss_finite(self, arch):
+        cfg = SMOKE[arch]
+        model = get_model(cfg)
+        params = model.init_params(jax.random.PRNGKey(0))
+        loss, aux = jax.jit(model.loss_fn)(params, _batch(cfg))
+        assert np.isfinite(float(loss))
+        assert float(loss) > 0
+
+    def test_train_step_reduces_loss(self, arch):
+        cfg = SMOKE[arch]
+        model = get_model(cfg)
+        params = model.init_params(jax.random.PRNGKey(0))
+        step = jax.jit(make_train_step(
+            model, adamw.AdamWConfig(lr=1e-3, warmup_steps=1, total_steps=8)))
+        st = adamw.init(params)
+        batch = _batch(cfg)
+        losses = []
+        for _ in range(4):
+            params, st, m = step(params, st, batch)
+            losses.append(float(m["loss"]))
+        assert losses[-1] < losses[0]
+        assert all(np.isfinite(l) for l in losses)
+
+    def test_decode_step_shapes(self, arch):
+        cfg = SMOKE[arch]
+        model = get_model(cfg)
+        params = model.init_params(jax.random.PRNGKey(0))
+        B, S = 2, 16
+        caches = model.init_caches(B, S)
+        step = jax.jit(make_serve_step(model))
+        tok = jnp.zeros((B, 1), jnp.int32)
+        nxt, caches2 = step(params, caches, tok, jnp.asarray(0, jnp.int32))
+        assert nxt.shape == (B, 1)
+        assert nxt.dtype == jnp.int32
+        assert (np.asarray(nxt) >= 0).all() and (np.asarray(nxt) < cfg.vocab).all()
+        # cache structure preserved
+        jax.tree.map(lambda a, b: None, caches, caches2)
+
+
+class TestDecodeConsistency:
+    """Greedy decode with KV cache == argmax of the full forward pass."""
+
+    @pytest.mark.parametrize("arch", ["llama3.2-1b", "rwkv6-1.6b"])
+    def test_cached_decode_matches_forward(self, arch):
+        cfg = SMOKE[arch]
+        model = get_model(cfg)
+        params = model.init_params(jax.random.PRNGKey(1))
+        B, S = 2, 8
+        toks = RNG.integers(0, cfg.vocab, size=(B, S)).astype(np.int32)
+
+        if cfg.family == "rwkv":
+            from repro.models import rwkv_model
+            from repro.models import layers as nn
+            h, _ = rwkv_model.forward(params, jnp.asarray(toks), cfg)
+            full_logits = nn.lm_logits(params, h, cfg)
+            # feed tokens one by one through the decode state
+            state = rwkv_model.init_state(cfg, B)
+            outs = []
+            for t in range(S):
+                nxt, state = rwkv_model.decode_step(
+                    params, state, jnp.asarray(toks[:, t:t+1]), cfg)
+                outs.append(np.asarray(nxt))
+            want = np.asarray(jnp.argmax(full_logits, -1))
+            got = np.concatenate(outs, axis=1)
+            np.testing.assert_array_equal(got[:, :-1], want[:, :-1])
+        else:
+            from repro.models import transformer
+            from repro.models import layers as nn
+            h, _, _ = transformer.forward(params, jnp.asarray(toks), cfg)
+            full_logits = nn.lm_logits(params, h, cfg)
+            want = np.asarray(jnp.argmax(full_logits, -1))
+            caches = transformer.init_caches(cfg, B, S + 1)
+            outs = []
+            for t in range(S):
+                nxt, caches = transformer.decode_step(
+                    params, caches, jnp.asarray(toks[:, t:t+1]), cfg,
+                    jnp.asarray(t, jnp.int32))
+                outs.append(np.asarray(nxt))
+            got = np.concatenate(outs, axis=1)
+            np.testing.assert_array_equal(got, want)
+
+
+class TestInputSpecs:
+    @pytest.mark.parametrize("arch", list(ARCHS))
+    def test_all_cells_have_specs(self, arch):
+        model = get_model(ARCHS[arch])
+        for cell_name in cells_for(arch):
+            specs = model.input_specs(SHAPES[cell_name])
+            leaves = jax.tree.leaves(specs)
+            assert leaves, f"{arch}/{cell_name} produced no input specs"
+            for leaf in leaves:
+                assert isinstance(leaf, jax.ShapeDtypeStruct)
+
+    def test_long500k_skips_full_attention(self):
+        runs_long = [a for a in ARCHS if "long_500k" in cells_for(a)]
+        assert set(runs_long) == {"zamba2-1.2b", "rwkv6-1.6b"}

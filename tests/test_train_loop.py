@@ -1,0 +1,98 @@
+"""Fault-tolerance behaviour of the training loop: crash-resume continuity,
+watchdog, and gradient-compression training."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.registry import ModelConfig
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.models.api import get_model
+from repro.optim import adamw
+from repro.train.loop import LoopConfig, StragglerWatchdog, train
+
+TINY = ModelConfig("loop-tiny", "dense", 2, 32, 2, 1, 64, 128,
+                   rope_theta=10000.0)
+
+
+def _setup():
+    model = get_model(TINY)
+    data = SyntheticLM(DataConfig(vocab=TINY.vocab, seq_len=16,
+                                  global_batch=4, seed=1))
+    ocfg = adamw.AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=30)
+    return model, data, ocfg
+
+
+class TestLoop:
+    def test_loss_improves(self, tmp_path):
+        model, data, ocfg = _setup()
+        _, _, hist = train(model, data, ocfg,
+                           LoopConfig(steps=25, ckpt_dir=None, log_every=100))
+        assert hist[-1]["loss"] < hist[0]["loss"]
+
+    def test_crash_resume_continues_exactly(self, tmp_path):
+        """Train 20 straight vs 10 + resume 10: same final loss (stateless
+        data + checkpointed params+opt make restarts bit-reproducible)."""
+        model, data, ocfg = _setup()
+        _, _, hist_straight = train(
+            model, data, ocfg, LoopConfig(steps=20, ckpt_dir=None,
+                                          log_every=100))
+
+        ck = str(tmp_path / "ck")
+        train(model, data, ocfg,
+              LoopConfig(steps=10, ckpt_every=10, ckpt_dir=ck, log_every=100))
+        _, _, hist_resumed = train(
+            model, data, ocfg,
+            LoopConfig(steps=20, ckpt_every=10, ckpt_dir=ck, log_every=100))
+        assert hist_resumed[0]["step"] == 11       # resumed, not restarted
+        a = hist_straight[-1]["loss"]
+        b = hist_resumed[-1]["loss"]
+        assert a == pytest.approx(b, rel=1e-4), (a, b)
+
+    def test_watchdog_flags_outliers(self):
+        dog = StragglerWatchdog(factor=3.0)
+        for _ in range(10):
+            assert not dog.observe(0.1)
+        assert dog.observe(1.0)                    # 10x median -> straggler
+        assert dog.flagged == 1
+
+    def test_int8_compressed_training_converges(self):
+        model, data, ocfg = _setup()
+        _, _, hist = train(model, data, ocfg,
+                           LoopConfig(steps=25, ckpt_dir=None, log_every=100,
+                                      grad_compression="int8"))
+        assert hist[-1]["loss"] < hist[0]["loss"]
+
+
+class TestShardingRules:
+    def test_divisibility_fallback(self):
+        """Non-divisible dims silently fall back to replication."""
+        import jax
+        from repro.parallel import sharding
+        # needs >= 2 devices to be meaningful; on 1 device mesh sizes are 1
+        # so everything divides -- test the resolver logic directly instead
+        from jax.sharding import PartitionSpec as P
+
+        class FakeMesh:
+            shape = {"data": 16, "model": 16}
+            axis_names = ("data", "model")
+
+        rules = {"heads": "model", "batch": ("data",), None: None}
+        spec = sharding.resolve_axes(("batch", "heads"), rules, (32, 8),
+                                     FakeMesh())
+        assert spec == P("data", None)             # 8 heads % 16 -> replicate
+        spec = sharding.resolve_axes(("batch", "heads"), rules, (32, 32),
+                                     FakeMesh())
+        assert spec == P("data", "model")
+
+    def test_param_pspecs_cover_all_leaves(self):
+        import jax
+        from repro.configs import SMOKE
+        from repro.models.api import get_model
+        from repro.models import base
+
+        for arch in ("llama3.2-1b", "qwen3-moe-235b-a22b", "rwkv6-1.6b"):
+            defs = get_model(SMOKE[arch]).param_defs()
+            n_defs = len(jax.tree.leaves(defs, is_leaf=base.is_def))
+            axes = jax.tree.leaves(base.axes_tree(defs),
+                                   is_leaf=lambda x: isinstance(x, tuple))
+            assert len(axes) == n_defs
