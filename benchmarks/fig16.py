@@ -10,12 +10,16 @@ Two complementary views (no TPU in this container):
 """
 from __future__ import annotations
 
-import time
+import os
+import sys
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)), ".."))
+
+from benchmarks.timing import time_us
 from repro.core import perfmodel as pm
 from repro.stencil import StencilSpec, make_weights
 from repro.stencil.reference import apply_stencil_steps, apply_stencil_conv
@@ -34,13 +38,7 @@ def _gstencils(spec, t, hw, backend) -> float:
     return p.stencil_throughput(w) * t / 1e9
 
 
-def _wall_us(fn, *args, iters=3):
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
-        jax.block_until_ready(fn(*args))
-    t0 = time.perf_counter()
-    for _ in range(iters):
-        jax.block_until_ready(fn(*args))
-    return (time.perf_counter() - t0) / iters * 1e6
+_wall_us = time_us   # warmup + block_until_ready per call (benchmarks.timing)
 
 
 def run() -> list[str]:

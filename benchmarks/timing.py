@@ -1,0 +1,22 @@
+"""Shared measurement plumbing for the benchmark harness.
+
+Every wall-clock number a benchmark emits must come from ``time_us``: it
+warms the call up (triggering trace+compile OUTSIDE the timed region) and
+blocks on device completion per iteration, so BENCH_*.json numbers are
+comparable across PRs instead of measuring import+compile noise.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+
+
+def time_us(fn, *args, iters: int = 3, warmup: int = 1) -> float:
+    """Mean microseconds per call of ``fn(*args)``, warmed up and synced."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6

@@ -1,0 +1,132 @@
+"""Substrate HBM-traffic benchmark: seed 9-neighbor scheme vs strip pipeline.
+
+The paper's whole argument is that stencils are memory-bound (I = K/D,
+Eq. 6), so the substrate's HBM traffic model IS the experiment: the seed
+scheme streamed nine full (tile, tile) blocks per output tile (9x read
+amplification); the strip scheme loads three full-width strips (3x), with
+the horizontal periodic halo materialized in-VMEM for free (DESIGN.md §3).
+
+For Box/Star x r in {1,2,3} x t in {1,2,4,8} this emits, per substrate:
+  * neighbor-block loads issued per output tile (9 vs 3, analytic from the
+    BlockSpec structure),
+  * per-step HBM read bytes (analytic, including the banded operand on the
+    MXU paths),
+  * measured us/step of the Pallas kernels (interpret mode on CPU -- honest
+    relative numbers, labeled as such), VPU path and MXU path (seed
+    monolithic vs strip ``fused_matmul_reuse``).
+
+Results also land in BENCH_kernels.json (repo root) for cross-PR
+trajectory tracking.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)), ".."))
+
+from benchmarks.timing import time_us
+from repro.kernels import common, legacy
+from repro.kernels.stencil_direct import stencil_direct
+from repro.kernels.stencil_matmul import build_bands, stencil_matmul
+from repro.stencil import StencilSpec, fuse_weights, make_weights
+
+N = 128            # grid edge (small: interpret-mode kernels on CPU)
+TILE = 32          # seed tile edge == strip height (fair per-cell VMEM)
+SHAPES = ("box", "star")
+RADII = (1, 2, 3)
+DEPTHS = (1, 2, 4, 8)
+#: BENCH_QUICK=1 trims the sweep (CI / verify.sh); default is the full
+#: Box/Star x r{1,2,3} x t{1,2,4,8} grid of the ISSUE.
+QUICK_RADII = (1,)
+QUICK_DEPTHS = (1, 4)
+DTYPE_BYTES = 4
+#: Full sweeps land in BENCH_kernels.json (the cross-PR trajectory file);
+#: BENCH_QUICK=1 sweeps go to a sibling .quick file so CI smoke runs never
+#: clobber tracked full-grid data.
+JSON_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_kernels.json")
+JSON_PATH_QUICK = os.path.join(os.path.dirname(__file__), "..",
+                               "BENCH_kernels.quick.json")
+
+
+def _case(shape: str, r: int, t: int, x) -> dict:
+    spec = StencilSpec(shape, 2, r)
+    w = make_weights(spec, seed=r)
+    wf = fuse_weights(w, t)
+    R = r * t
+
+    bands_new = build_bands(w.astype(np.float32), TILE).shape
+    bands_old = build_bands(wf.astype(np.float32), TILE).shape
+
+    row = {
+        "case": f"{spec.name}-t{t}", "shape": shape, "r": r, "t": t,
+        "loads_per_tile_old": len(legacy.NEIGHBOR_OFFSETS_2D),
+        "loads_per_tile_new": common.STRIP_NEIGHBOR_LOADS,
+        # one fused launch advances t steps: per-step read traffic
+        "read_bytes_step_direct_old": legacy.hbm_read_bytes_per_step(
+            (N, N), TILE, TILE, DTYPE_BYTES) / t,
+        "read_bytes_step_direct_new": common.hbm_read_bytes_per_step(
+            (N, N), TILE, DTYPE_BYTES) / t,
+        "read_bytes_step_matmul_old": legacy.hbm_read_bytes_per_step(
+            (N, N), TILE, TILE, DTYPE_BYTES, bands_shape=bands_old) / t,
+        "read_bytes_step_matmul_new": common.hbm_read_bytes_per_step(
+            (N, N), TILE, DTYPE_BYTES, bands_shape=bands_new) / t,
+    }
+
+    # jit so time_us's warmup absorbs trace+compile and the timed iterations
+    # measure steady-state execution only
+    paths = {
+        "us_step_direct_old": jax.jit(lambda x: legacy.stencil_direct_9pt(
+            x, w, t=t, tile_m=TILE, tile_n=TILE, interpret=True)),
+        "us_step_direct_new": jax.jit(lambda x: stencil_direct(
+            x, w, t=t, tile_m=TILE, interpret=True)),
+        # MXU paths: seed monolithic fusion vs strip intermediate reuse
+        "us_step_matmul_old": jax.jit(lambda x: legacy.stencil_matmul_9pt(
+            x, wf, tile_m=TILE, tile_n=TILE, interpret=True)),
+        "us_step_matmul_new": jax.jit(lambda x: stencil_matmul(
+            x, w, t=t, tile_m=TILE, tile_n=TILE, interpret=True)),
+    }
+    iters = 2 if os.environ.get("BENCH_QUICK") else 5
+    for key, fn in paths.items():
+        row[key] = time_us(fn, x, iters=iters) / t
+    return row
+
+
+def run() -> list[str]:
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(N, N)).astype(np.float32))
+    quick = bool(os.environ.get("BENCH_QUICK"))
+    radii = QUICK_RADII if quick else RADII
+    depths = QUICK_DEPTHS if quick else DEPTHS
+    rows = [_case(shape, r, t, x)
+            for shape in SHAPES for r in radii for t in depths]
+
+    with open(JSON_PATH_QUICK if quick else JSON_PATH, "w") as f:
+        json.dump({"grid": N, "tile": TILE, "dtype_bytes": DTYPE_BYTES,
+                   "quick": quick, "radii": list(radii),
+                   "depths": list(depths),
+                   "timing": "interpret-mode CPU (relative only)",
+                   "cases": rows}, f, indent=1)
+
+    out = ["traffic.case,loads/tile_old,loads/tile_new,read_amp_direct,"
+           "rdMB_step_matmul_old,rdMB_step_matmul_new,"
+           "us_step_dir_old,us_step_dir_new,us_step_mm_old,us_step_mm_new"]
+    for c in rows:
+        amp = c["read_bytes_step_direct_old"] / c["read_bytes_step_direct_new"]
+        out.append(
+            f"traffic.{c['case']},{c['loads_per_tile_old']},"
+            f"{c['loads_per_tile_new']},{amp:.2f}x,"
+            f"{c['read_bytes_step_matmul_old']/2**20:.3f},"
+            f"{c['read_bytes_step_matmul_new']/2**20:.3f},"
+            f"{c['us_step_direct_old']:.0f},{c['us_step_direct_new']:.0f},"
+            f"{c['us_step_matmul_old']:.0f},{c['us_step_matmul_new']:.0f}")
+    return out
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

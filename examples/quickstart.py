@@ -23,7 +23,8 @@ def main():
           f"C={spec.flops_per_point()} flops/pt, I={spec.arithmetic_intensity(4)}")
 
     ref = stencil_direct_ref(x, w, t)
-    for backend in ("direct", "fused_direct", "matmul", "fused_matmul"):
+    for backend in ("direct", "fused_direct", "matmul", "fused_matmul",
+                    "fused_matmul_reuse"):
         y = stencil_apply(x, w, t=t, backend=backend)
         err = float(jnp.abs(y - ref).max())
         print(f"  backend={backend:13s} max|err| vs oracle = {err:.2e}")

@@ -1,0 +1,23 @@
+#!/usr/bin/env bash
+# Tier-1 verification: the test suite plus the benchmark harness in
+# interpret mode (no TPU required).  Run from anywhere:
+#
+#   scripts/verify.sh            # quick benchmark sweep (BENCH_QUICK=1)
+#   BENCH_FULL=1 scripts/verify.sh   # full Box/Star x r x t traffic grid
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+if [ -z "${BENCH_FULL:-}" ]; then
+  export BENCH_QUICK=1
+fi
+
+# Tier-1 (ROADMAP.md).  Don't abort before the benchmark smoke runs -- a
+# known-failing test should still let the harness exercise the kernels.
+rc=0
+python -m pytest -x -q || rc=$?
+
+python benchmarks/run.py
+
+exit "$rc"

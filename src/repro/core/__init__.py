@@ -12,7 +12,9 @@ from .perfmodel import (
     compare,
     perf_vector,
     perf_matrix,
+    perf_matrix_reuse,
     perf_sparse_matrix,
+    halo_recompute_factor,
     sparsity_banded,
     sparsity_convstencil,
     sparsity_spider,

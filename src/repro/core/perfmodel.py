@@ -9,6 +9,11 @@ This module is the paper's primary contribution (§3--§4) in executable form:
     P_TC,actual = (S/alpha) * min(P_TC, B*I_TC)  (Eq. 11/12),
   * the four-scenario classification and the sweet-spot criterion
     ``alpha < S * P_TC / P_CU``  (Eq. 13--19),
+  * the intermediate-reuse matrix-unit regime (DESIGN.md §4): t radius-r
+    banded contractions with VMEM-resident intermediates -- alpha = 1, paid
+    for by the halo-recompute factor  beta = 1 + r*(t-1)/strip_m,  giving
+    I_TC,reuse^(t) = beta * t * K / (S * D)  with S evaluated at the BASE
+    radius r (not t*r as in monolithic fusion),
   * the Sparse-Tensor-Core extension (Eq. 20) -- kept analytical on TPU
     (no sparse-MXU hardware analogue; see DESIGN.md §8).
 
@@ -129,6 +134,44 @@ class StencilWorkload:
     def intensity_matrix(self, sparsity: float) -> float:
         return self.flops_matrix(sparsity) / self.bytes_per_output()
 
+    # ---- matrix-unit execution with intermediate reuse (DESIGN.md §4)
+    def flops_matrix_reuse(self, sparsity: float, strip_m: int = 128) -> float:
+        """C_TC,reuse^(t) = (beta/S) * C^(t) per output point.
+
+        t radius-r banded contractions with intermediates resident in VMEM:
+        the fused kernel never materializes so alpha drops to 1; instead the
+        shrinking vertical halo is recomputed, inflating executed work by
+        ``beta = halo_recompute_factor(r, t, strip_m)``.  ``sparsity`` is
+        the scheme's S at the BASE radius r.
+        """
+        _check_sparsity(sparsity)
+        beta = halo_recompute_factor(self.spec.radius, self.t, strip_m)
+        return (beta / sparsity) * self.flops_vector()
+
+    def intensity_matrix_reuse(self, sparsity: float, strip_m: int = 128) -> float:
+        return self.flops_matrix_reuse(sparsity, strip_m) / self.bytes_per_output()
+
+
+def halo_recompute_factor(radius: int, t: int, strip_m: int = 128) -> float:
+    """beta: executed rows / useful rows for the in-VMEM reuse pipeline.
+
+    A strip of ``strip_m`` useful rows enters step s of t with a vertical
+    halo of (t-s)*r rows per side; step s therefore computes
+    strip_m + 2*r*(t-1-s) rows.  Summing over s and dividing by t*strip_m:
+
+        beta = 1 + r*(t-1)/strip_m
+
+    beta -> 1 as strips grow; it plays the role alpha plays for monolithic
+    fusion but scales as r*t/strip_m instead of (r*t)^d/K -- the reason the
+    reuse regime stays in the sweet spot at depths where monolithic fusion
+    has long left it.
+    """
+    if t <= 1:
+        return 1.0
+    if strip_m <= 0:
+        raise ValueError(f"strip height must be positive, got {strip_m}")
+    return 1.0 + radius * (t - 1) / strip_m
+
 
 def _check_sparsity(s: float) -> None:
     if not (0.0 < s <= 1.0):
@@ -187,6 +230,21 @@ def perf_matrix(w: StencilWorkload, hw: HardwareSpec, sparsity: float) -> UnitPe
     raw = attainable(hw.p_matrix, hw.bandwidth, i)
     actual = (sparsity / w.alpha) * raw
     return UnitPerf("matrix", i, raw, actual,
+                    bound_state(hw.p_matrix, hw.bandwidth, i), hw.ridge_matrix)
+
+
+def perf_matrix_reuse(w: StencilWorkload, hw: HardwareSpec, sparsity: float,
+                      strip_m: int = 128) -> UnitPerf:
+    """Intermediate-reuse regime (DESIGN.md §4): alpha=1, halo-recompute beta.
+
+    ``sparsity`` is the scheme's S at the base radius r (the per-step banded
+    operand), NOT the monolithic S at radius t*r.
+    """
+    i = w.intensity_matrix_reuse(sparsity, strip_m)
+    raw = attainable(hw.p_matrix, hw.bandwidth, i)
+    beta = halo_recompute_factor(w.spec.radius, w.t, strip_m)
+    actual = (sparsity / beta) * raw
+    return UnitPerf("matrix_reuse", i, raw, actual,
                     bound_state(hw.p_matrix, hw.bandwidth, i), hw.ridge_matrix)
 
 

@@ -1,15 +1,18 @@
 """Analytic execution-unit selector -- the paper's criteria as a scheduler.
 
 Given a stencil workload and a hardware description, decide which execution
-path (vector unit vs matrix unit, fused or not) the runtime should take, and
-predict the speedup.  ``repro.kernels.ops.stencil_apply(backend="auto")``
-consults this module, making the paper's analytical criteria (§4.1) a
-first-class deployable feature rather than a post-hoc analysis.
+path the runtime should take among the five regimes the kernel substrate
+implements (vector unit fused/unfused, matrix unit sequential / monolithic
+fusion / intermediate reuse), and predict the speedup.
+``repro.kernels.ops.stencil_apply(backend="auto")`` consults this module,
+making the paper's analytical criteria (§4.1) -- extended with the
+intermediate-reuse regime of DESIGN.md §4 -- a first-class deployable
+feature rather than a post-hoc analysis.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Dict, Optional
 
 from repro.stencil.spec import StencilSpec
 from repro.core import perfmodel as pm
@@ -17,11 +20,14 @@ from repro.core import perfmodel as pm
 
 @dataclasses.dataclass(frozen=True)
 class Decision:
-    backend: str                  # "direct" | "fused_direct" | "matmul" | "fused_matmul"
+    backend: str                  # "direct" | "fused_direct" | "matmul" |
+                                  # "fused_matmul" | "fused_matmul_reuse"
     scenario: Optional[pm.Scenario]
-    predicted_speedup: float      # matrix-unit vs vector-unit, effective
-    comparison: pm.Comparison
+    predicted_speedup: float      # best matrix regime vs vector unit, effective
+    comparison: pm.Comparison     # vector vs MONOLITHIC matrix (paper Fig. 8)
     reason: str
+    candidates: Dict[str, float] = dataclasses.field(default_factory=dict)
+    #: effective stencil throughput (useful FLOP/s) per candidate backend
 
 
 def select_backend(
@@ -32,31 +38,54 @@ def select_backend(
     sparsity: Optional[float] = None,
     tile_n: int = 128,
     use_sparse_unit: bool = False,
+    strip_m: int = 128,
 ) -> Decision:
     """Pick the predicted-fastest backend for ``t`` fused steps of ``spec``.
 
-    ``sparsity`` defaults to the banded-matmul scheme's structural S for the
-    *fused* effective radius (the matrix-unit path always executes the fused
-    kernel as one banded contraction -- paper §2.2.3's "monolithic" fusion).
+    ``sparsity`` overrides the scheme's structural S for BOTH matrix
+    regimes (useful to model published schemes); by default the monolithic
+    regime uses the banded S at the fused radius t*r while the reuse regime
+    uses S at the base radius r -- the structural reason reuse keeps its
+    MXU efficiency at depth.
     """
     w = pm.StencilWorkload(spec, t, dtype_bytes)
-    if sparsity is None:
-        sparsity = pm.sparsity_banded(spec.radius * t, tile_n)
-    cmp_ = pm.compare(w, hw, sparsity, use_sparse_unit=use_sparse_unit)
+    s_mono = sparsity if sparsity is not None else \
+        pm.sparsity_banded(spec.radius * t, tile_n)
+    s_reuse = sparsity if sparsity is not None else \
+        pm.sparsity_banded(spec.radius, tile_n)
+    cmp_ = pm.compare(w, hw, s_mono, use_sparse_unit=use_sparse_unit)
 
-    matrix_wins = cmp_.profitable
-    if t == 1:
-        backend = "matmul" if matrix_wins else "direct"
+    vec = cmp_.vector.actual_flops
+    candidates = {
+        ("direct" if t == 1 else "fused_direct"): vec,
+        ("matmul" if t == 1 else "fused_matmul"): cmp_.matrix.actual_flops,
+    }
+    if t > 1:
+        # t=1 reuse degenerates to "matmul"; only offered at depth.  The
+        # sparse unit has no reuse analogue modeled (DESIGN.md §8).
+        reuse = pm.perf_matrix_reuse(w, hw, s_reuse, strip_m)
+        candidates["fused_matmul_reuse"] = reuse.actual_flops
+
+    backend = max(candidates, key=lambda k: candidates[k])
+    best_matrix = max(v for k, v in candidates.items() if "matmul" in k)
+
+    if backend == "fused_matmul_reuse":
+        beta = pm.halo_recompute_factor(spec.radius, t, strip_m)
+        reason = (
+            f"intermediate-reuse regime wins: alpha=1 (vs monolithic "
+            f"alpha={w.alpha:.3f}), S_r={s_reuse:.3f} at base radius (vs "
+            f"S_rt={s_mono:.3f} fused), halo-recompute beta={beta:.3f} "
+            f"(DESIGN.md §4)"
+        )
     else:
-        backend = "fused_matmul" if matrix_wins else "fused_direct"
-
-    reason = _explain(cmp_)
+        reason = _explain(cmp_)
     return Decision(
         backend=backend,
         scenario=cmp_.scenario,
-        predicted_speedup=cmp_.speedup,
+        predicted_speedup=best_matrix / vec,
         comparison=cmp_,
         reason=reason,
+        candidates=candidates,
     )
 
 

@@ -1,4 +1,7 @@
-"""Pallas TPU kernels for the stencil hot paths (VPU direct, MXU banded)."""
+"""Pallas TPU kernels for the stencil hot paths (VPU direct, MXU banded),
+on the strip-mined halo substrate (kernels.common; seed scheme preserved in
+kernels.legacy for traffic benchmarking)."""
 from .ops import stencil_apply, explain, BACKENDS
 from .stencil_direct import stencil_direct
 from .stencil_matmul import stencil_matmul, build_bands, band_sparsity
+from .common import choose_strip, choose_tile, strip_in_specs

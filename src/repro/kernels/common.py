@@ -1,55 +1,89 @@
-"""Shared Pallas plumbing: 9-strip halo BlockSpecs and tile assembly.
+"""Shared Pallas plumbing: strip-mined halo BlockSpecs and tile assembly.
 
 TPU Pallas BlockSpecs address non-overlapping blocks (element offset = block
 index * block shape), so halo reads cannot be expressed as one overlapping
-block.  The TPU-idiomatic pattern is to reference the SAME input array once
-per neighbor block with shifted ``index_map``s -- the Mosaic pipeline then
-streams center + neighbor tiles HBM->VMEM and the kernel assembles the
-halo-extended tile in VMEM.  Modulo wrap in the index maps yields periodic
-boundaries for free (matches the ppermute ring of the distributed runtime).
+block.  The seed substrate worked around that by referencing the SAME input
+nine times with shifted ``index_map``s -- one full (tile_m, tile_n) block
+per 2D neighbor -- which streams 9x the grid through HBM per step even
+though only halo-wide edges of eight of those blocks are ever read.
+
+The strip-mined scheme here fixes the traffic model (DESIGN.md §3):
+
+  * the grid is 1D over ROW STRIPS of shape (strip_m, N) -- each strip spans
+    the full grid width;
+  * the vertical halo comes from just the top/bottom neighbor strips, so one
+    input is referenced three times (modulo wrap in the index map = periodic
+    rows), i.e. 3 block loads per output strip instead of 9;
+  * the horizontal periodic halo costs no HBM traffic at all: every strip
+    holds complete rows, so the wrap columns are materialized in-VMEM by
+    concatenation (``wrap_columns``).
+
+Read amplification drops from 9x to 3x, and because every row of the
+extended strip is a TRUE global row, the horizontal wrap can be re-applied
+to in-VMEM intermediates at every fused step -- the property that enables
+the ``fused_matmul_reuse`` regime (DESIGN.md §4).
 """
 from __future__ import annotations
 
 import functools
-from typing import Sequence
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+#: Vertical neighbor offsets of the strip scheme (up, center, down) -- the
+#: strip analogue of the seed's 9-entry 2D offset table (kernels.legacy).
+NEIGHBOR_OFFSETS_STRIP = (-1, 0, 1)
 
-NEIGHBOR_OFFSETS_2D = [(-1, -1), (-1, 0), (-1, 1),
-                       (0, -1), (0, 0), (0, 1),
-                       (1, -1), (1, 0), (1, 1)]
+#: Per-output-strip input block loads issued by the strip substrate.  The
+#: seed scheme issued 9 (see kernels.legacy.NEIGHBOR_OFFSETS_2D).
+STRIP_NEIGHBOR_LOADS = len(NEIGHBOR_OFFSETS_STRIP)
+
+#: Default VMEM working-set budget for ``choose_strip`` (bytes).  ~16 MB per
+#: core on TPU v4/v5; leave half for double buffering and the output strip.
+VMEM_BUDGET_BYTES = 8 * 1024 * 1024
 
 
-def neighbor_in_specs(tile_m: int, tile_n: int, grid_m: int, grid_n: int):
-    """Nine BlockSpecs addressing (i+di, j+dj) mod grid for one 2D input."""
+def strip_in_specs(strip_m: int, n: int, grid_m: int):
+    """Three BlockSpecs addressing row strips (i-1, i, i+1) mod grid_m.
+
+    Each spec covers a full-width (strip_m, n) band; modulo wrap in the
+    index map yields periodic top/bottom boundaries for free (matching the
+    ppermute ring of the distributed runtime).
+    """
     specs = []
-    for di, dj in NEIGHBOR_OFFSETS_2D:
+    for di in NEIGHBOR_OFFSETS_STRIP:
         specs.append(
             pl.BlockSpec(
-                (tile_m, tile_n),
-                functools.partial(
-                    lambda i, j, di=di, dj=dj: ((i + di) % grid_m, (j + dj) % grid_n)
-                ),
+                (strip_m, n),
+                functools.partial(lambda i, di=di: ((i + di) % grid_m, 0)),
             )
         )
     return specs
 
 
-def assemble_extended(refs: Sequence, halo: int) -> jax.Array:
-    """Build the (tile_m + 2h, tile_n + 2h) halo-extended tile in VMEM.
+def assemble_strip(top_ref, mid_ref, bot_ref, halo: int) -> jax.Array:
+    """Build the (strip_m + 2h, n) vertically halo-extended strip in VMEM.
 
-    ``refs`` are the nine neighbor refs in NEIGHBOR_OFFSETS_2D order.  Only
-    the needed edges/corners of the neighbor tiles are read.
+    Only the bottom ``halo`` rows of the top neighbor and the top ``halo``
+    rows of the bottom neighbor are read.
     """
-    tl, t, tr, l, c, r, bl, b, br = [ref[...] for ref in refs]
     h = halo
-    top = jnp.concatenate([tl[-h:, -h:], t[-h:, :], tr[-h:, :h]], axis=1)
-    mid = jnp.concatenate([l[:, -h:], c, r[:, :h]], axis=1)
-    bot = jnp.concatenate([bl[:h, -h:], b[:h, :], br[:h, :h]], axis=1)
-    return jnp.concatenate([top, mid, bot], axis=0)
+    return jnp.concatenate(
+        [top_ref[...][-h:, :], mid_ref[...], bot_ref[...][:h, :]], axis=0
+    )
+
+
+def wrap_columns(x: jax.Array, halo: int) -> jax.Array:
+    """Materialize the periodic horizontal halo in-VMEM: (m, n) -> (m, n+2h).
+
+    Valid whenever every row of ``x`` is a complete global row -- true for
+    strips and for all intermediates derived from them, which is what lets
+    fused kernels re-wrap at every step instead of carrying a 2*t*r-wide
+    horizontal halo.
+    """
+    h = halo
+    return jnp.concatenate([x[:, -h:], x, x[:, :h]], axis=1)
 
 
 def choose_tile(n: int, preferred: int = 128) -> int:
@@ -62,12 +96,76 @@ def choose_tile(n: int, preferred: int = 128) -> int:
     return n
 
 
-def validate_tiling(shape, tile_m, tile_n, halo):
+def choose_strip(
+    h: int,
+    n: int,
+    halo: int,
+    dtype_bytes: int = 4,
+    vmem_budget: int = VMEM_BUDGET_BYTES,
+    preferred: int = 128,
+) -> int:
+    """Pick a strip height: a divisor of ``h``, >= halo, fitting VMEM.
+
+    The working set of one grid cell is the three input strips, the
+    vertically+horizontally extended tile, and the output strip.  Among
+    divisors that fit the budget, prefer the largest one <= ``preferred``
+    (fewer grid cells amortize the fixed per-cell cost); if none fits, fall
+    back to the smallest viable divisor so the kernel still launches and
+    the compiler surfaces the VMEM pressure.
+    """
+
+    def working_set(d: int) -> int:
+        return (3 * d * n + (d + 2 * halo) * (n + 2 * halo) + d * n) * dtype_bytes
+
+    divisors = [d for d in range(1, h + 1) if h % d == 0]
+    viable = [d for d in divisors if d >= halo] or [h]
+    fitting = [d for d in viable if working_set(d) <= vmem_budget]
+    pool = fitting or [min(viable)]
+    under = [d for d in pool if d <= preferred]
+    return max(under) if under else min(pool)
+
+
+def validate_tiling(shape, strip_m: int, tile_n: int, halo: int,
+                    radius: int = None) -> None:
+    """Strip-substrate tiling constraints.
+
+    ``strip_m`` is the strip height (rows per grid cell); ``tile_n`` is the
+    column-tile width of the banded MXU contraction (pass the full width for
+    the VPU path, which never column-tiles).  ``radius`` is the per-step
+    wrap radius -- the only width constraint, since the horizontal halo is
+    re-wrapped at radius r each step regardless of fusion depth (defaults
+    to ``halo`` for callers that run a single step at the full radius).
+    """
     h, w = shape
-    if h % tile_m or w % tile_n:
-        raise ValueError(f"grid {shape} not divisible by tiles ({tile_m},{tile_n})")
-    if tile_m < halo or tile_n < halo:
+    if h % strip_m or w % tile_n:
         raise ValueError(
-            f"halo {halo} exceeds tile ({tile_m},{tile_n}); "
-            "lower fusion depth or enlarge tiles"
+            f"grid {shape} not divisible by tiles ({strip_m},{tile_n})"
         )
+    if strip_m < halo:
+        raise ValueError(
+            f"halo {halo} exceeds strip height {strip_m}; "
+            "lower fusion depth or enlarge strips"
+        )
+    r = halo if radius is None else radius
+    if w < r:
+        raise ValueError(
+            f"wrap radius {r} exceeds grid width {w}; lower the radius"
+        )
+
+
+def hbm_read_bytes_per_step(shape, strip_m: int, dtype_bytes: int,
+                            bands_shape=None) -> int:
+    """Analytic HBM read traffic of one strip-substrate kernel launch.
+
+    Each of the ``h/strip_m`` grid cells streams three (strip_m, n) blocks,
+    so the grid is read 3x per step (vs 9x for kernels.legacy); the banded
+    operand (if any) is re-streamed per grid cell.
+    """
+    import numpy as np
+
+    h, w = shape
+    gm = h // strip_m
+    total = gm * STRIP_NEIGHBOR_LOADS * strip_m * w * dtype_bytes
+    if bands_shape is not None:
+        total += gm * int(np.prod(bands_shape)) * dtype_bytes
+    return total

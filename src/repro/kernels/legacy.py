@@ -1,0 +1,190 @@
+"""The seed 9-neighbor full-tile halo substrate, kept as a benchmark foil.
+
+This is the original BlockSpec scheme this repo shipped with: one grid cell
+per (tile_m, tile_n) output tile, with the SAME input referenced nine times
+through shifted ``index_map``s so the Mosaic pipeline streams center + all
+eight neighbor tiles HBM->VMEM, even though only halo-wide edges of the
+eight neighbors are ever read.  Per output tile that is 9 full tile loads
+-- a ~9x read amplification over the ideal 1x (DESIGN.md §3).
+
+The production kernels now live in ``stencil_direct`` / ``stencil_matmul``
+on the strip-mined substrate (3 loads per strip).  This module exists so
+``benchmarks/traffic.py`` can measure old-vs-new HBM traffic and wall time
+on identical problems; do not build new features on it.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from .stencil_matmul import build_bands
+
+NEIGHBOR_OFFSETS_2D = [(-1, -1), (-1, 0), (-1, 1),
+                       (0, -1), (0, 0), (0, 1),
+                       (1, -1), (1, 0), (1, 1)]
+
+
+def neighbor_in_specs(tile_m: int, tile_n: int, grid_m: int, grid_n: int):
+    """Nine BlockSpecs addressing (i+di, j+dj) mod grid for one 2D input."""
+    specs = []
+    for di, dj in NEIGHBOR_OFFSETS_2D:
+        specs.append(
+            pl.BlockSpec(
+                (tile_m, tile_n),
+                functools.partial(
+                    lambda i, j, di=di, dj=dj: ((i + di) % grid_m, (j + dj) % grid_n)
+                ),
+            )
+        )
+    return specs
+
+
+def assemble_extended(refs: Sequence, halo: int) -> jax.Array:
+    """Build the (tile_m + 2h, tile_n + 2h) halo-extended tile in VMEM.
+
+    ``refs`` are the nine neighbor refs in NEIGHBOR_OFFSETS_2D order.  Only
+    the needed edges/corners of the neighbor tiles are read.
+    """
+    tl, t, tr, l, c, r, bl, b, br = [ref[...] for ref in refs]
+    h = halo
+    top = jnp.concatenate([tl[-h:, -h:], t[-h:, :], tr[-h:, :h]], axis=1)
+    mid = jnp.concatenate([l[:, -h:], c, r[:, :h]], axis=1)
+    bot = jnp.concatenate([bl[:h, -h:], b[:h, :], br[:h, :h]], axis=1)
+    return jnp.concatenate([top, mid, bot], axis=0)
+
+
+def _direct_kernel(*refs, weights, t: int, radius: int, out_dtype):
+    """refs = 9 neighbor refs + out_ref; weights are host constants."""
+    out_ref = refs[-1]
+    halo = t * radius
+    ext = assemble_extended(refs[:9], halo).astype(jnp.float32)
+    k = 2 * radius + 1
+    for _ in range(t):
+        m = ext.shape[0] - 2 * radius
+        n = ext.shape[1] - 2 * radius
+        acc = jnp.zeros((m, n), jnp.float32)
+        for dy in range(k):
+            for dx in range(k):
+                w = float(weights[dy, dx])
+                if w == 0.0:   # star stencils: skip zero taps at trace time
+                    continue
+                acc = acc + w * ext[dy : dy + m, dx : dx + n]
+        ext = acc
+    out_ref[...] = ext.astype(out_dtype)
+
+
+def stencil_direct_9pt(
+    x: jax.Array,
+    weights,
+    t: int = 1,
+    tile_m: int = 128,
+    tile_n: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Seed VPU kernel: ``t`` fused steps on the 9-neighbor full-tile scheme."""
+    w = np.asarray(weights)
+    radius = (w.shape[0] - 1) // 2
+    halo = t * radius
+    h, wid = x.shape
+    tile_m = min(tile_m, h)
+    tile_n = min(tile_n, wid)
+    _validate_square(x.shape, tile_m, tile_n, halo)
+    gm, gn = h // tile_m, wid // tile_n
+
+    kern = functools.partial(
+        _direct_kernel, weights=w, t=t, radius=radius, out_dtype=x.dtype
+    )
+    return pl.pallas_call(
+        kern,
+        grid=(gm, gn),
+        in_specs=neighbor_in_specs(tile_m, tile_n, gm, gn),
+        out_specs=pl.BlockSpec((tile_m, tile_n), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=interpret,
+    )(*([x] * 9))
+
+
+def _matmul_kernel(*refs, radius: int, out_dtype, compute_dtype):
+    # refs: 9 neighbor refs, bands ref, out ref
+    out_ref = refs[-1]
+    bands_ref = refs[-2]
+    ext = assemble_extended(refs[:9], radius)          # (M+2R, N+2R)
+    m = ext.shape[0] - 2 * radius
+    n = ext.shape[1] - 2 * radius
+    k = 2 * radius + 1
+    acc = jnp.zeros((m, n), jnp.float32)
+    for dy in range(k):
+        a = ext[dy : dy + m, :].astype(compute_dtype)          # (M, N+2R)
+        b = bands_ref[dy].astype(compute_dtype)                # (N+2R, N)
+        acc = acc + jax.lax.dot(a, b, preferred_element_type=jnp.float32)
+    out_ref[...] = acc.astype(out_dtype)
+
+
+def stencil_matmul_9pt(
+    x: jax.Array,
+    weights,
+    tile_m: int = 128,
+    tile_n: int = 128,
+    interpret: bool = False,
+    compute_dtype=None,
+) -> jax.Array:
+    """Seed MXU kernel: one banded contraction on the 9-neighbor scheme."""
+    w = np.asarray(weights)
+    radius = (w.shape[0] - 1) // 2
+    h, wid = x.shape
+    tile_m = min(tile_m, h)
+    tile_n = min(tile_n, wid)
+    _validate_square(x.shape, tile_m, tile_n, radius)
+    gm, gn = h // tile_m, wid // tile_n
+    if compute_dtype is None:
+        compute_dtype = x.dtype
+
+    bands = jnp.asarray(build_bands(w.astype(np.float32), tile_n))
+
+    kern = functools.partial(
+        _matmul_kernel, radius=radius, out_dtype=x.dtype, compute_dtype=compute_dtype
+    )
+    in_specs = neighbor_in_specs(tile_m, tile_n, gm, gn) + [
+        pl.BlockSpec(bands.shape, lambda i, j: (0, 0, 0))
+    ]
+    return pl.pallas_call(
+        kern,
+        grid=(gm, gn),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((tile_m, tile_n), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=interpret,
+    )(*([x] * 9), bands)
+
+
+def _validate_square(shape, tile_m, tile_n, halo):
+    """Seed-era tiling constraints (both tile dims bounded by the halo)."""
+    h, w = shape
+    if h % tile_m or w % tile_n:
+        raise ValueError(f"grid {shape} not divisible by tiles ({tile_m},{tile_n})")
+    if tile_m < halo or tile_n < halo:
+        raise ValueError(
+            f"halo {halo} exceeds tile ({tile_m},{tile_n}); "
+            "lower fusion depth or enlarge tiles"
+        )
+
+
+def hbm_read_bytes_per_step(shape, tile_m: int, tile_n: int, dtype_bytes: int,
+                            bands_shape=None) -> int:
+    """Analytic HBM read traffic of one 9-neighbor kernel launch.
+
+    Every output tile streams nine full (tile_m, tile_n) input tiles, so the
+    grid is read 9x per step; the banded operand (if any) is re-streamed per
+    grid cell.
+    """
+    h, w = shape
+    gm, gn = h // tile_m, w // tile_n
+    total = gm * gn * 9 * tile_m * tile_n * dtype_bytes
+    if bands_shape is not None:
+        total += gm * gn * int(np.prod(bands_shape)) * dtype_bytes
+    return total

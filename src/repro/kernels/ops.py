@@ -2,16 +2,20 @@
 
 ``stencil_apply(x, weights, t, backend="auto")`` is the deployable form of
 the paper: the enhanced-roofline criteria (repro.core.selector) pick the
-execution unit, then the matching Pallas kernel runs.
+execution unit, then the matching Pallas kernel runs on the strip-mined
+halo substrate (3 neighbor-block loads per output strip, DESIGN.md §3).
 
 Backends
-  direct        t sequential VPU kernel steps         (halo r per step)
-  fused_direct  one VPU kernel, t in-VMEM steps        (paper's temporal fusion)
-  matmul        t sequential MXU banded contractions   (halo r per step)
-  fused_matmul  weights composed to radius t*r, one    (paper's monolithic
-                MXU banded contraction                  kernel fusion, alpha>1)
-  reference     jnp oracle (debug)
-  auto          selector decides among the above from the hardware model
+  direct              t sequential VPU kernel steps      (halo r per step)
+  fused_direct        one VPU kernel, t in-VMEM steps     (paper's temporal fusion)
+  matmul              t sequential MXU banded contractions (halo r per step)
+  fused_matmul        weights composed to radius t*r, one  (paper's monolithic
+                      MXU banded contraction                kernel fusion, alpha>1)
+  fused_matmul_reuse  one MXU kernel, t radius-r banded    (intermediate reuse:
+                      contractions w/ VMEM intermediates    alpha=1, halo-recompute
+                                                            beta -- DESIGN.md §4)
+  reference           jnp oracle (debug)
+  auto                selector decides among the above from the hardware model
 
 ``interpret`` defaults to True off-TPU so every path is CPU-checkable; on a
 real TPU it compiles through Mosaic.
@@ -33,7 +37,8 @@ from .stencil_direct import stencil_direct
 from .stencil_matmul import stencil_matmul
 from . import ref as _ref
 
-BACKENDS = ("direct", "fused_direct", "matmul", "fused_matmul", "reference", "auto")
+BACKENDS = ("direct", "fused_direct", "matmul", "fused_matmul",
+            "fused_matmul_reuse", "reference", "auto")
 
 
 def _default_interpret() -> bool:
@@ -57,21 +62,29 @@ def stencil_apply(
     t: int = 1,
     backend: str = "auto",
     hw: pm.HardwareSpec = pm.TPU_V5E_BF16,
-    tile_m: int = 128,
-    tile_n: int = 128,
+    tile_m: Optional[int] = None,
+    tile_n: Optional[int] = None,
     interpret: Optional[bool] = None,
     compute_dtype=None,
 ) -> jax.Array:
-    """Advance the grid ``t`` time steps with the selected backend."""
+    """Advance the grid ``t`` time steps with the selected backend.
+
+    ``tile_m``/``tile_n`` default to ``None`` = auto-sized by the kernels
+    (``choose_strip`` / ``choose_tile``); explicit values are validated
+    strictly."""
     if backend not in BACKENDS:
         raise ValueError(f"backend must be one of {BACKENDS}")
+    if t < 1:
+        raise ValueError(f"fusion depth must be >= 1, got {t}")
     if interpret is None:
         interpret = _default_interpret()
 
     if backend == "auto":
         spec = spec_from_weights(weights)
         decision = select_backend(
-            spec, t, dtype_bytes=x.dtype.itemsize, hw=hw, tile_n=tile_n
+            spec, t, dtype_bytes=x.dtype.itemsize, hw=hw,
+            tile_n=tile_n if tile_n is not None else 128,
+            strip_m=tile_m if tile_m is not None else 128,
         )
         backend = decision.backend
 
@@ -89,12 +102,15 @@ def stencil_apply(
     if backend == "matmul":
         y = x
         for _ in range(t):
-            y = stencil_matmul(y, weights, tile_m=tile_m, tile_n=tile_n,
+            y = stencil_matmul(y, weights, t=1, tile_m=tile_m, tile_n=tile_n,
                                interpret=interpret, compute_dtype=compute_dtype)
         return y
     if backend == "fused_matmul":
         wf = fuse_weights(np.asarray(weights), t)
-        return stencil_matmul(x, wf, tile_m=tile_m, tile_n=tile_n,
+        return stencil_matmul(x, wf, t=1, tile_m=tile_m, tile_n=tile_n,
+                              interpret=interpret, compute_dtype=compute_dtype)
+    if backend == "fused_matmul_reuse":
+        return stencil_matmul(x, weights, t=t, tile_m=tile_m, tile_n=tile_n,
                               interpret=interpret, compute_dtype=compute_dtype)
     raise AssertionError(backend)
 
@@ -102,7 +118,8 @@ def stencil_apply(
 def explain(
     weights, t: int, dtype_bytes: int = 4,
     hw: pm.HardwareSpec = pm.TPU_V5E_BF16, tile_n: int = 128,
+    strip_m: int = 128,
 ) -> Decision:
     """Expose the dispatch decision (scenario, predicted speedup, reason)."""
     return select_backend(spec_from_weights(weights), t, dtype_bytes, hw,
-                          tile_n=tile_n)
+                          tile_n=tile_n, strip_m=strip_m)

@@ -1,15 +1,19 @@
 """VPU-path 2D stencil kernel (the "CUDA core" baseline of the paper).
 
-One grid cell computes a (TILE_M, TILE_N) output tile: the halo-extended
-input tile is assembled in VMEM from nine neighbor blocks, then the stencil
-is an unrolled sum of shifted tile slices times scalar taps -- pure
+One grid cell computes a (STRIP_M, N) output strip: the vertically
+halo-extended strip is assembled in VMEM from three neighbor strips (top,
+center, bottom -- 3 block loads instead of the seed's 9, DESIGN.md §3),
+the periodic horizontal halo is materialized in-VMEM by column wrap, and
+the stencil is an unrolled sum of shifted slices times scalar taps -- pure
 element-wise VPU work, accumulated in f32.
 
 Supports an in-kernel temporal-fusion depth ``t`` (the paper's CUDA-core
-temporal fusion, §3.2.2): ``t`` sequential updates on a halo of ``t*r``,
-intermediates living entirely in VMEM => per-point HBM traffic stays 2D
-while compute scales by t (I = t*K/D).  This kernel IS `stencil_fused`'s
-engine; ``t=1`` is the plain baseline.
+temporal fusion, §3.2.2): ``t`` sequential updates on a vertical halo of
+``t*r``, intermediates living entirely in VMEM => per-point HBM traffic
+stays 2D while compute scales by t (I = t*K/D).  Because every row of the
+extended strip is a true global row, the horizontal wrap is re-applied per
+step at radius ``r`` -- no 2*t*r horizontal halo is ever carried.  This
+kernel IS `stencil_fused`'s engine; ``t=1`` is the plain baseline.
 """
 from __future__ import annotations
 
@@ -19,60 +23,67 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from .common import assemble_extended, neighbor_in_specs, validate_tiling
+from .common import (assemble_strip, choose_strip, strip_in_specs,
+                     validate_tiling, wrap_columns)
 
 
-def _kernel(*refs, weights, t: int, radius: int, out_dtype):
-    """refs = 9 neighbor refs + out_ref; weights are host constants."""
-    out_ref = refs[-1]
+def _kernel(top_ref, mid_ref, bot_ref, out_ref, *, weights, t: int,
+            radius: int, out_dtype):
+    """Three neighbor-strip refs + out_ref; weights are host constants."""
     halo = t * radius
-    ext = assemble_extended(refs[:9], halo).astype(jnp.float32)
+    cur = assemble_strip(top_ref, mid_ref, bot_ref, halo).astype(jnp.float32)
     k = 2 * radius + 1
+    n = cur.shape[1]
     for _ in range(t):
-        m = ext.shape[0] - 2 * radius
-        n = ext.shape[1] - 2 * radius
+        z = wrap_columns(cur, radius)              # (m_cur, n + 2r), periodic
+        m = cur.shape[0] - 2 * radius
         acc = jnp.zeros((m, n), jnp.float32)
         for dy in range(k):
             for dx in range(k):
                 w = float(weights[dy, dx])
                 if w == 0.0:   # star stencils: skip zero taps at trace time
                     continue
-                acc = acc + w * ext[dy : dy + m, dx : dx + n]
-        ext = acc
-    out_ref[...] = ext.astype(out_dtype)
+                acc = acc + w * z[dy : dy + m, dx : dx + n]
+        cur = acc
+    out_ref[...] = cur.astype(out_dtype)
 
 
 def stencil_direct(
     x: jax.Array,
     weights,
     t: int = 1,
-    tile_m: int = 128,
-    tile_n: int = 128,
+    tile_m: int = None,
+    tile_n: int = None,
     interpret: bool = False,
 ) -> jax.Array:
     """``t`` fused time steps of a 2D stencil, periodic boundary.
 
     ``weights``: host-side (2r+1, 2r+1) ndarray (zeros outside support).
+    ``tile_m`` is the strip height -- ``None`` (default) picks one via
+    ``choose_strip`` (divisor of H, >= halo, VMEM-budgeted); an explicit
+    value is validated strictly.  ``tile_n`` is accepted for signature
+    parity with the MXU kernel but unused (the VPU path never column-tiles).
     """
     import numpy as np
 
+    del tile_n  # strips always span the full width
     w = np.asarray(weights)
     radius = (w.shape[0] - 1) // 2
     halo = t * radius
     h, wid = x.shape
-    tile_m = min(tile_m, h)
-    tile_n = min(tile_n, wid)
-    validate_tiling(x.shape, tile_m, tile_n, halo)
-    gm, gn = h // tile_m, wid // tile_n
+    strip_m = choose_strip(h, wid, halo, x.dtype.itemsize) if tile_m is None \
+        else min(tile_m, h)
+    validate_tiling(x.shape, strip_m, wid, halo, radius)
+    gm = h // strip_m
 
     kern = functools.partial(
         _kernel, weights=w, t=t, radius=radius, out_dtype=x.dtype
     )
     return pl.pallas_call(
         kern,
-        grid=(gm, gn),
-        in_specs=neighbor_in_specs(tile_m, tile_n, gm, gn),
-        out_specs=pl.BlockSpec((tile_m, tile_n), lambda i, j: (i, j)),
+        grid=(gm,),
+        in_specs=strip_in_specs(strip_m, wid, gm),
+        out_specs=pl.BlockSpec((strip_m, wid), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
         interpret=interpret,
-    )(*([x] * 9))
+    )(x, x, x)

@@ -11,14 +11,25 @@ Transformation (DESIGN.md §2):
     (paper §2.2.2 "sparse redundancy"), with structural sparsity
         S = (2R+1) / (TILE_N + 2R)
     (see perfmodel.sparsity_banded);
-  * contraction: out += A_dy @ B_dy  where A_dy is the dy-shifted
-    (TILE_M, TILE_N + 2R) slab of the halo-extended input tile.  Matmuls
-    run in the input dtype with f32 accumulation (MXU semantics).
+  * contraction: out[:, j] += A_dy @ B_dy  where A_dy is the dy-shifted
+    (STRIP_M, TILE_N + 2R) slab of the column tile j of the halo-extended
+    strip.  Matmuls run in the input dtype with f32 accumulation (MXU
+    semantics).  The strip substrate (common.py) supplies the vertical halo
+    from 3 neighbor-strip loads and the horizontal halo by in-VMEM wrap.
 
-Kernel fusion (paper §2.2.3) is weight composition: the wrapper fuses t
-steps into a single monolithic kernel of radius R = t*r before building the
-bands -- no intermediate reuse, compute inflated by alpha, exactly the
-monolithic-fusion regime the paper models.
+Two fusion regimes share this kernel (paper §2.2.3 + DESIGN.md §4):
+
+  * monolithic (``t=1`` on composed weights): the wrapper is handed a
+    fused kernel of radius R = t*r and runs ONE banded contraction -- no
+    intermediate reuse, compute inflated by alpha, exactly the
+    monolithic-fusion regime the paper models;
+  * intermediate reuse (``t>1`` on base weights): ``t`` radius-r banded
+    contractions execute inside one kernel with every intermediate resident
+    in VMEM (vertical halo t*r, horizontal wrap re-applied per step).  The
+    fused kernel never materializes, so alpha = 1; the price is a
+    shrinking-halo recompute factor beta = 1 + r*(t-1)/strip_m
+    (perfmodel.halo_recompute_factor) -- the paper's taxonomy implies this
+    fifth regime but never implements it.
 """
 from __future__ import annotations
 
@@ -29,7 +40,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
-from .common import assemble_extended, neighbor_in_specs, validate_tiling
+from .common import (assemble_strip, choose_strip, choose_tile,
+                     strip_in_specs, validate_tiling, wrap_columns)
 
 
 def build_bands(weights: np.ndarray, tile_n: int) -> np.ndarray:
@@ -53,58 +65,87 @@ def band_sparsity(weights: np.ndarray, tile_n: int) -> float:
     return float(np.count_nonzero(bands)) / bands.size
 
 
-def _kernel(*refs, radius: int, out_dtype, compute_dtype):
-    # refs: 9 neighbor refs, bands ref, out ref
-    out_ref = refs[-1]
-    bands_ref = refs[-2]
-    ext = assemble_extended(refs[:9], radius)          # (M+2R, N+2R)
-    m = ext.shape[0] - 2 * radius
-    n = ext.shape[1] - 2 * radius
+def _banded_step(z: jax.Array, bands_ref, radius: int, tile_n: int,
+                 compute_dtype) -> jax.Array:
+    """One radius-r banded contraction on full-width rows.
+
+    ``z``: (m_cur, n) rows that are complete global rows; returns the
+    (m_cur - 2r, n) update, accumulated in f32 across column tiles.
+    """
+    n = z.shape[1]
+    m = z.shape[0] - 2 * radius
     k = 2 * radius + 1
-    acc = jnp.zeros((m, n), jnp.float32)
-    for dy in range(k):
-        a = ext[dy : dy + m, :].astype(compute_dtype)          # (M, N+2R)
-        b = bands_ref[dy].astype(compute_dtype)                # (N+2R, N)
-        acc = acc + jax.lax.dot(a, b, preferred_element_type=jnp.float32)
-    out_ref[...] = acc.astype(out_dtype)
+    zw = wrap_columns(z, radius)                       # (m_cur, n + 2r)
+    cols = []
+    for j in range(n // tile_n):
+        acc = jnp.zeros((m, tile_n), jnp.float32)
+        for dy in range(k):
+            a = zw[dy : dy + m,
+                   j * tile_n : j * tile_n + tile_n + 2 * radius]
+            b = bands_ref[dy].astype(compute_dtype)    # (tile_n + 2r, tile_n)
+            acc = acc + jax.lax.dot(a.astype(compute_dtype), b,
+                                    preferred_element_type=jnp.float32)
+        cols.append(acc)
+    return cols[0] if len(cols) == 1 else jnp.concatenate(cols, axis=1)
+
+
+def _kernel(top_ref, mid_ref, bot_ref, bands_ref, out_ref, *, t: int,
+            radius: int, tile_n: int, out_dtype, compute_dtype):
+    halo = t * radius
+    cur = assemble_strip(top_ref, mid_ref, bot_ref, halo).astype(jnp.float32)
+    for _ in range(t):
+        cur = _banded_step(cur, bands_ref, radius, tile_n, compute_dtype)
+    out_ref[...] = cur.astype(out_dtype)
 
 
 def stencil_matmul(
     x: jax.Array,
     weights,
-    tile_m: int = 128,
-    tile_n: int = 128,
+    t: int = 1,
+    tile_m: int = None,
+    tile_n: int = None,
     interpret: bool = False,
     compute_dtype=None,
 ) -> jax.Array:
-    """One stencil step via banded MXU contractions, periodic boundary.
+    """``t`` stencil steps via banded MXU contractions, periodic boundary.
 
-    ``weights`` may be a fused kernel (radius R = t*r) -- the monolithic
-    kernel-fusion execution of the paper.
+    ``t=1``: one contraction of ``weights`` -- which may itself be a fused
+    kernel of radius t*r (the paper's monolithic kernel fusion).
+    ``t>1``: the intermediate-reuse regime -- t radius-r contractions of the
+    BASE kernel with intermediates resident in VMEM (``fused_matmul_reuse``
+    in repro.kernels.ops).
+
+    ``tile_m`` is the strip height; ``tile_n`` the column-tile width of each
+    contraction (the banded operand is (2r+1, tile_n + 2r, tile_n)).  Either
+    left ``None`` is auto-chosen (``choose_strip`` / ``choose_tile``);
+    explicit values are validated strictly.
     """
     w = np.asarray(weights)
     radius = (w.shape[0] - 1) // 2
+    halo = t * radius
     h, wid = x.shape
-    tile_m = min(tile_m, h)
-    tile_n = min(tile_n, wid)
-    validate_tiling(x.shape, tile_m, tile_n, radius)
-    gm, gn = h // tile_m, wid // tile_n
+    strip_m = choose_strip(h, wid, halo, x.dtype.itemsize) if tile_m is None \
+        else min(tile_m, h)
+    tile_n = choose_tile(wid) if tile_n is None else min(tile_n, wid)
+    validate_tiling(x.shape, strip_m, tile_n, halo, radius)
+    gm = h // strip_m
     if compute_dtype is None:
         compute_dtype = x.dtype
 
     bands = jnp.asarray(build_bands(w.astype(np.float32), tile_n))
 
     kern = functools.partial(
-        _kernel, radius=radius, out_dtype=x.dtype, compute_dtype=compute_dtype
+        _kernel, t=t, radius=radius, tile_n=tile_n,
+        out_dtype=x.dtype, compute_dtype=compute_dtype,
     )
-    in_specs = neighbor_in_specs(tile_m, tile_n, gm, gn) + [
-        pl.BlockSpec(bands.shape, lambda i, j: (0, 0, 0))
+    in_specs = strip_in_specs(strip_m, wid, gm) + [
+        pl.BlockSpec(bands.shape, lambda i: (0, 0, 0))
     ]
     return pl.pallas_call(
         kern,
-        grid=(gm, gn),
+        grid=(gm,),
         in_specs=in_specs,
-        out_specs=pl.BlockSpec((tile_m, tile_n), lambda i, j: (i, j)),
+        out_specs=pl.BlockSpec((strip_m, wid), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
         interpret=interpret,
-    )(*([x] * 9), bands)
+    )(x, x, x, bands)

@@ -143,6 +143,44 @@ def make_distributed_stepper(
                      check_rep=False)
 
 
+def pallas_local_apply(
+    backend: str = "fused_matmul_reuse",
+    interpret: Optional[bool] = None,
+    tile_m: Optional[int] = None,
+    tile_n: Optional[int] = None,
+) -> Callable:
+    """Build a ``local_apply`` plug-in running the strip-mined Pallas kernels.
+
+    The returned callable matches ``make_distributed_stepper``'s contract:
+    it receives each shard's halo-extended block (depth ``steps * r``) and
+    returns the valid interior.  The kernel's own modulo-wrap periodicity is
+    harmless because the halo ring it wraps into is discarded.
+
+    ``backend`` is any non-auto entry of ``repro.kernels.BACKENDS`` --
+    notably ``"fused_matmul_reuse"``, which keeps all t intermediates in
+    VMEM so the shard pays HBM traffic once per exchange, not per step.
+    By default the whole extended block is one strip (``tile_m=None``);
+    pass explicit tiles to exercise the multi-strip path.
+    """
+    import numpy as _np
+
+    def local_apply(xe, w, steps):
+        from repro.kernels.ops import stencil_apply  # deferred: avoid cycle
+
+        wn = _np.asarray(w)
+        radius = (wn.shape[0] - 1) // 2
+        h = steps * radius
+        full = stencil_apply(
+            xe, wn, t=steps, backend=backend,
+            tile_m=tile_m if tile_m is not None else xe.shape[0],
+            tile_n=tile_n if tile_n is not None else xe.shape[1],
+            interpret=interpret,
+        )
+        return full[h:-h, h:-h] if h else full
+
+    return local_apply
+
+
 def halo_bytes_per_step(
     local_shape: Sequence[int],
     dim_axis_names: Sequence[Optional[str]],
@@ -165,6 +203,10 @@ def halo_bytes_per_step(
         face = 1
         for d2, n in enumerate(shape):
             if d2 != dim:
-                face *= n + (2 * h if dim_axis_names[d2] is not None and d2 < dim else 0)
+                # ``_extend`` processes dims in order, so by the time dim is
+                # exchanged EVERY earlier dim is already halo-extended --
+                # whether by ppermute (sharded) or periodic pad (local) --
+                # and the exchanged face spans n + 2h along it.
+                face *= n + (2 * h if d2 < dim else 0)
         total += 2 * h * face * dtype_bytes
     return total * exchanges

@@ -94,6 +94,62 @@ class TestDistributedStencil:
         assert "OK" in out
 
 
+class TestHaloBytes:
+    """Unit coverage for the analytic halo-traffic formula (no devices).
+
+    Cross-checked against a direct simulation of ``_extend``'s exchange
+    order: when dim ``d`` is exchanged, EVERY earlier dim -- sharded
+    (ppermute) or not (periodic pad) -- is already extended by 2h, so the
+    exchanged face spans n+2h along it.  The seed formula skipped the
+    extension for unsharded earlier dims, undercounting traffic whenever a
+    later-processed dim is sharded."""
+
+    @staticmethod
+    def _simulated(local_shape, dim_axis_names, h, dtype_bytes):
+        shape = list(local_shape)
+        total = 0
+        for dim, ax in enumerate(dim_axis_names):
+            if ax is not None:
+                face = 1
+                for d2, n in enumerate(shape):
+                    if d2 != dim:
+                        face *= n
+                total += 2 * h * face * dtype_bytes
+            shape[dim] += 2 * h          # _extend grows every dim in order
+        return total
+
+    def test_matches_exchange_simulation(self):
+        from repro.stencil.distributed import halo_bytes_per_step
+        cases = [
+            ((64, 64), ("x", "y"), 1),
+            ((64, 64), (None, "y"), 2),          # later-sharded dim: the bug
+            ((64, 64), ("x", None), 3),
+            ((32, 16, 16), ("x", None, "z"), 2),
+            ((32, 16, 16), (None, None, "z"), 4),
+        ]
+        for local, dims, h in cases:
+            got = halo_bytes_per_step(local, dims, h, 1, "stepwise", 4)
+            want = self._simulated(local, dims, h, 4)
+            assert got == want, (local, dims, h, got, want)
+
+    def test_fused_vs_stepwise_accounting(self):
+        from repro.stencil.distributed import halo_bytes_per_step
+        # fused: ONE exchange at depth t*r; stepwise: t exchanges at r
+        st = halo_bytes_per_step((64, 64), ("x", "y"), 1, 4, "stepwise", 4)
+        fu = halo_bytes_per_step((64, 64), ("x", "y"), 1, 4, "fused", 4)
+        assert st == 4 * halo_bytes_per_step((64, 64), ("x", "y"), 1, 1,
+                                             "stepwise", 4)
+        # same leading-order bytes, but the fused face is wider (h=4)
+        assert fu > st / 4
+
+    def test_later_sharded_dim_not_undercounted(self):
+        from repro.stencil.distributed import halo_bytes_per_step
+        h = 2
+        got = halo_bytes_per_step((64, 64), (None, "y"), h, 1, "stepwise", 4)
+        # face along dim 0 is 64 + 2h (dim 0 already periodic-padded)
+        assert got == 2 * h * (64 + 2 * h) * 4
+
+
 class TestShardedTraining:
     def test_sharded_train_step_runs(self):
         """End-to-end pjit train step on a 2x2 (data, model) mesh with the

@@ -72,3 +72,35 @@ class TestKernelAsLocalApply:
             print("OK", err, err2)
         """)
         assert "OK" in out
+
+    def test_pallas_local_apply_plugin(self):
+        """The packaged plug-in (stencil.distributed.pallas_local_apply)
+        drives every fused kernel regime -- including the new
+        intermediate-reuse MXU path -- inside shard_map."""
+        out = run_with_devices(4, """
+            import jax, numpy as np, jax.numpy as jnp
+            from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+            from repro.stencil import StencilSpec, make_weights
+            from repro.stencil.reference import apply_stencil_steps
+            from repro.stencil.distributed import (make_distributed_stepper,
+                                                   pallas_local_apply)
+
+            mesh = Mesh(np.array(jax.devices()).reshape(2,2), ("x","y"))
+            w = make_weights(StencilSpec("box", 2, 1), seed=3)
+            t, n = 2, 64
+            x = np.random.default_rng(0).normal(size=(n,n)).astype(np.float32)
+            xs = jax.device_put(x, NamedSharding(mesh, P("x","y")))
+            ref = apply_stencil_steps(jnp.asarray(x), jnp.asarray(w), t)
+
+            for backend in ("fused_direct", "fused_matmul",
+                            "fused_matmul_reuse"):
+                la = pallas_local_apply(backend, interpret=True)
+                step = make_distributed_stepper(mesh, ("x","y"), w, t=t,
+                                                mode="fused", local_apply=la)
+                with mesh:
+                    y = step(xs)
+                err = float(jnp.abs(y - ref).max())
+                assert err < 1e-4, (backend, err)
+            print("OK")
+        """)
+        assert "OK" in out

@@ -118,6 +118,7 @@ class TestOps:
     @pytest.mark.parametrize("backend,t", [
         ("direct", 1), ("direct", 2), ("fused_direct", 3),
         ("matmul", 1), ("matmul", 2), ("fused_matmul", 3),
+        ("fused_matmul_reuse", 2), ("fused_matmul_reuse", 3),
         ("reference", 2), ("auto", 2),
     ])
     def test_all_backends_agree(self, backend, t):
@@ -131,8 +132,13 @@ class TestOps:
     def test_explain_decision(self):
         w = make_weights(StencilSpec("box", 2, 1), seed=0)
         d = explain(w, 4, 4)
-        assert d.backend in ("fused_direct", "fused_matmul")
+        assert d.backend in ("fused_direct", "fused_matmul",
+                             "fused_matmul_reuse")
         assert d.predicted_speedup > 0
+        # every t>1 regime is priced
+        assert set(d.candidates) == {"fused_direct", "fused_matmul",
+                                     "fused_matmul_reuse"}
+        assert all(v > 0 for v in d.candidates.values())
 
     def test_invalid_backend(self):
         w = make_weights(StencilSpec("box", 2, 1), seed=0)

@@ -162,7 +162,7 @@ class TestSelector:
         for t in (1, 3, 8):
             d = select_backend(B21, t, 4)
             expect = ("direct", "matmul") if t == 1 else \
-                ("fused_direct", "fused_matmul")
+                ("fused_direct", "fused_matmul", "fused_matmul_reuse")
             assert d.backend in expect
             assert d.reason
 
@@ -170,3 +170,52 @@ class TestSelector:
         s1 = pm.sparsity_banded(1, 128)
         s8 = pm.sparsity_banded(8, 128)
         assert 0 < s1 < s8 < 1
+
+
+class TestReuseRegime:
+    """The intermediate-reuse MXU regime (DESIGN.md §4): alpha=1, priced by
+    the halo-recompute factor beta instead."""
+
+    def test_beta_formula(self):
+        assert pm.halo_recompute_factor(1, 1) == 1.0
+        assert pm.halo_recompute_factor(2, 4, strip_m=32) == \
+            pytest.approx(1 + 2 * 3 / 32)
+        # beta -> 1 as strips grow; monotone in t and r
+        assert pm.halo_recompute_factor(1, 8, 1024) < \
+            pm.halo_recompute_factor(1, 8, 32) < \
+            pm.halo_recompute_factor(3, 8, 32)
+
+    def test_intensity_formula(self):
+        # I_reuse = beta * t * K / (S * D)  (ISSUE: t*K/(S*D) as beta -> 1)
+        w = pm.StencilWorkload(B21, 4, 4)
+        S = pm.sparsity_banded(1, 128)
+        beta = pm.halo_recompute_factor(1, 4, 128)
+        assert w.intensity_matrix_reuse(S, 128) == \
+            pytest.approx(beta * 4 * 9 / (S * 4))
+        # no alpha anywhere: executed flops scale with beta, not alpha
+        assert w.flops_matrix_reuse(S) < w.flops_matrix(S)
+
+    def test_actual_deflates_by_s_over_beta(self):
+        w = pm.StencilWorkload(B21, 7, 4)
+        p = pm.perf_matrix_reuse(w, pm.A100_FLOAT, 0.47, strip_m=128)
+        beta = pm.halo_recompute_factor(1, 7, 128)
+        assert p.actual_flops == pytest.approx(0.47 / beta * p.raw_flops)
+        assert p.unit == "matrix_reuse"
+
+    def test_reuse_beats_monolithic_at_depth(self):
+        """At SPIDER-like S the reuse regime dominates monolithic fusion
+        (beta ~ 1.05 vs alpha ~ 3.57 at t=7) -- and the selector says so."""
+        from repro.core.selector import select_backend
+        w = pm.StencilWorkload(B21, 7, 4)
+        mono = pm.perf_matrix(w, pm.A100_FLOAT, 0.47)
+        reuse = pm.perf_matrix_reuse(w, pm.A100_FLOAT, 0.47)
+        assert reuse.actual_flops > mono.actual_flops
+        d = select_backend(B21, 7, 4, hw=pm.A100_FLOAT, sparsity=0.47)
+        assert d.backend == "fused_matmul_reuse"
+        assert "alpha=1" in d.reason
+        assert d.predicted_speedup > 1.0
+
+    def test_t1_reuse_degenerates_to_matmul(self):
+        w = pm.StencilWorkload(B21, 1, 4)
+        S = pm.sparsity_banded(1, 128)
+        assert w.flops_matrix_reuse(S) == pytest.approx(w.flops_matrix(S))
