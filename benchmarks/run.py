@@ -26,6 +26,7 @@ def main() -> None:
     # any timed region.
     from benchmarks import (fig10, fig16, halo, scaling, table2, table3,
                             table4, traffic)
+    from repro.kernels import plan_cache_stats
 
     for mod in (table2, table3, table4, fig10, fig16, halo, scaling, traffic):
         t0 = time.perf_counter()
@@ -39,6 +40,12 @@ def main() -> None:
         except Exception as e:
             traceback.print_exc()
             print(f"bench.{mod.__name__.split('.')[-1]}.FAILED,0,{e}")
+
+    # bookkeeping: one plan per distinct kernel signature across the whole
+    # harness; hits = timed paths that reused an already-built plan
+    st = plan_cache_stats()
+    print(f"bench.plan_cache,{st['misses']},plans_built,"
+          f"{st['hits']},cache_hits")
 
 
 if __name__ == "__main__":

@@ -13,7 +13,10 @@ For Box/Star x r in {1,2,3} x t in {1,2,4,8} this emits, per substrate:
     MXU paths),
   * measured us/step of the Pallas kernels (interpret mode on CPU -- honest
     relative numbers, labeled as such), VPU path and MXU path (seed
-    monolithic vs strip ``fused_matmul_reuse``).
+    monolithic vs strip ``fused_matmul_reuse``), executed through compiled
+    ``stencil_plan`` objects so per-trial timing excludes selection, tile
+    sizing and weight composition -- plan-build time is recorded separately
+    (``plan_build_us_*`` in the JSON).
 
 Results also land in BENCH_kernels.json (repo root) for cross-PR
 trajectory tracking.
@@ -24,16 +27,14 @@ import json
 import os
 import sys
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)), ".."))
 
 from benchmarks.timing import time_us
-from repro.kernels import common, legacy
-from repro.kernels.stencil_direct import stencil_direct
-from repro.kernels.stencil_matmul import build_bands, stencil_matmul
+from repro.kernels import common, legacy, stencil_plan
+from repro.kernels.stencil_matmul import build_bands
 from repro.stencil import StencilSpec, fuse_weights, make_weights
 
 N = 128            # grid edge (small: interpret-mode kernels on CPU)
@@ -78,22 +79,35 @@ def _case(shape: str, r: int, t: int, x) -> dict:
             (N, N), TILE, DTYPE_BYTES, bands_shape=bands_new) / t,
     }
 
-    # jit so time_us's warmup absorbs trace+compile and the timed iterations
-    # measure steady-state execution only
+    # Execution goes through compiled plans: selection/sizing/weight
+    # composition happen at build (accounted separately below), the plan's
+    # jitted callable is what gets timed -- time_us's warmup still absorbs
+    # trace+compile, so the timed iterations are steady-state execution with
+    # zero re-analysis.  Backends map old->new substrate: the seed 9-tile
+    # foil registers as legacy_*, the strip pipeline as fused_direct /
+    # fused_matmul_reuse (both degenerate to the plain kernels at t=1).
     paths = {
-        "us_step_direct_old": jax.jit(lambda x: legacy.stencil_direct_9pt(
-            x, w, t=t, tile_m=TILE, tile_n=TILE, interpret=True)),
-        "us_step_direct_new": jax.jit(lambda x: stencil_direct(
-            x, w, t=t, tile_m=TILE, interpret=True)),
+        "us_step_direct_old": stencil_plan(
+            w, x.shape, x.dtype, t, backend="legacy_direct",
+            tile_m=TILE, tile_n=TILE, interpret=True),
+        "us_step_direct_new": stencil_plan(
+            w, x.shape, x.dtype, t, backend="fused_direct",
+            tile_m=TILE, interpret=True),
         # MXU paths: seed monolithic fusion vs strip intermediate reuse
-        "us_step_matmul_old": jax.jit(lambda x: legacy.stencil_matmul_9pt(
-            x, wf, tile_m=TILE, tile_n=TILE, interpret=True)),
-        "us_step_matmul_new": jax.jit(lambda x: stencil_matmul(
-            x, w, t=t, tile_m=TILE, tile_n=TILE, interpret=True)),
+        "us_step_matmul_old": stencil_plan(
+            w, x.shape, x.dtype, t, backend="legacy_matmul",
+            tile_m=TILE, tile_n=TILE, interpret=True),
+        "us_step_matmul_new": stencil_plan(
+            w, x.shape, x.dtype, t, backend="fused_matmul_reuse",
+            tile_m=TILE, tile_n=TILE, interpret=True),
     }
     iters = 2 if os.environ.get("BENCH_QUICK") else 5
-    for key, fn in paths.items():
-        row[key] = time_us(fn, x, iters=iters) / t
+    for key, plan in paths.items():
+        row[key] = time_us(plan, x, iters=iters) / t
+        # host-side plan construction (selection + sizing + composition),
+        # paid once per signature -- never part of the per-step numbers
+        row[key.replace("us_step_", "plan_build_us_")] = \
+            plan.build_time_s * 1e6
     return row
 
 

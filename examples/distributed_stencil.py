@@ -18,9 +18,8 @@ import numpy as np                                            # noqa: E402
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P  # noqa: E402
 
 from repro.core.hlo_cost import analyze_hlo                   # noqa: E402
+from repro.kernels import stencil_plan                        # noqa: E402
 from repro.stencil import StencilSpec, make_weights           # noqa: E402
-from repro.stencil.distributed import (halo_bytes_per_step,   # noqa: E402
-                                       make_distributed_stepper)
 from repro.stencil.reference import apply_stencil_steps       # noqa: E402
 
 
@@ -36,16 +35,18 @@ def main():
 
     ref = apply_stencil_steps(jnp.asarray(x), jnp.asarray(w), t)
     for mode in ("stepwise", "fused"):
-        step = make_distributed_stepper(mesh, ("x", "y"), w, t=t, mode=mode)
-        sh = NamedSharding(mesh, P("x", "y"))
-        jf = jax.jit(step, in_shardings=sh, out_shardings=sh)
-        y = jf(xs)
+        # one plan object drives local AND distributed execution: mesh +
+        # shard_spec route it through the halo-exchange stepper, with the
+        # exchange schedule planned once at build time (plan.halo_plan)
+        plan = stencil_plan(w, (n, n), np.float32, t, mesh=mesh,
+                            shard_spec=("x", "y"), dist_mode=mode,
+                            backend="reference")
+        y = plan(xs)
         err = float(jnp.abs(y - ref).max())
-        pc = analyze_hlo(jf.lower(
+        pc = analyze_hlo(plan.fn.lower(
             jax.ShapeDtypeStruct(x.shape, jnp.float32)).compile().as_text())
         rounds = pc.coll_counts.get("collective-permute", 0)
-        hb = halo_bytes_per_step((n // 4, n // 2), ("x", "y"),
-                                 spec.radius, t, mode, 4)
+        hb = plan.halo_plan["halo_bytes_per_call"]
         print(f"  {mode:9s}: max|err|={err:.1e}  collective-permutes={rounds:.0f}"
               f"  halo-bytes/shard/{t}steps={hb}")
     print("fused mode: 1 exchange round instead of t -- latency amortized,")

@@ -1,5 +1,9 @@
-"""Quickstart: run a stencil through every backend and let the paper's
-criteria pick the execution unit.
+"""Quickstart: compile a stencil execution plan once, run it many times.
+
+``stencil_plan`` performs the paper's analytical backend selection, strip
+sizing and weight preprocessing exactly once; ``plan(x)`` then executes
+with zero re-analysis.  ``stencil_apply`` remains as the one-shot wrapper
+(it builds-or-fetches the same plan from the process cache).
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -7,7 +11,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import perfmodel as pm
-from repro.kernels import stencil_apply, explain
+from repro.kernels import (plan_cache_stats, registered_backends,
+                           stencil_apply, stencil_plan)
 from repro.kernels.ref import stencil_direct_ref
 from repro.stencil import StencilSpec, make_weights
 
@@ -22,23 +27,30 @@ def main():
     print(f"stencil {spec.name}: K={spec.num_points} points, "
           f"C={spec.flops_per_point()} flops/pt, I={spec.arithmetic_intensity(4)}")
 
+    # every registered backend executes through the same plan object
     ref = stencil_direct_ref(x, w, t)
-    for backend in ("direct", "fused_direct", "matmul", "fused_matmul",
-                    "fused_matmul_reuse"):
-        y = stencil_apply(x, w, t=t, backend=backend)
-        err = float(jnp.abs(y - ref).max())
-        print(f"  backend={backend:13s} max|err| vs oracle = {err:.2e}")
+    for backend in registered_backends():
+        plan = stencil_plan(w, x.shape, x.dtype, t, backend=backend)
+        err = float(jnp.abs(plan(x) - ref).max())
+        print(f"  backend={backend:18s} max|err| vs oracle = {err:.2e}")
 
-    # the paper's criteria as a scheduler (TPU v5e constants)
-    d = explain(w, t, dtype_bytes=4, hw=pm.TPU_V5E_BF16)
-    print(f"\nauto-dispatch on {pm.TPU_V5E_BF16.name}:")
-    print(f"  scenario           : {d.scenario}")
-    print(f"  predicted speedup  : {d.predicted_speedup:.2f}x (matrix vs vector)")
-    print(f"  chosen backend     : {d.backend}")
-    print(f"  reason             : {d.reason}")
+    # the paper's criteria as a scheduler (TPU v5e constants): selection runs
+    # ONCE at plan build; plan.decision exposes the priced Decision
+    plan = stencil_plan(w, x.shape, x.dtype, t, hw=pm.TPU_V5E_BF16)
+    print(f"\nauto plan on {pm.TPU_V5E_BF16.name} "
+          f"(built in {plan.build_time_s*1e3:.1f} ms):")
+    print(plan.explain())
 
-    y = stencil_apply(x, w, t=t, backend="auto", hw=pm.TPU_V5E_BF16)
-    print(f"  auto result err    : {float(jnp.abs(y - ref).max()):.2e}")
+    # serving loop: millions of steps would hit this line only
+    y = plan.run(x, n_steps=3)                 # 3 * t = 12 time steps
+    ref12 = stencil_direct_ref(x, w, 3 * t)
+    print(f"  plan.run(x, 3) err  : {float(jnp.abs(y - ref12).max()):.2e}")
+
+    # the compatibility wrapper fetches the SAME cached plan
+    y2 = stencil_apply(x, w, t=t, backend="auto", hw=pm.TPU_V5E_BF16)
+    print(f"  wrapper parity      : "
+          f"{'bit-identical' if bool((y2 == plan(x)).all()) else 'MISMATCH'}")
+    print(f"  plan cache          : {plan_cache_stats()}")
 
 
 if __name__ == "__main__":

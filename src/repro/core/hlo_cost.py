@@ -38,6 +38,20 @@ COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
 
 _SHAPE_ONE = re.compile(r"(\w+)\[([\d,]*)\]")
 _NAME_EQ = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*")
+_PCT_REF = re.compile(r"%([\w.\-]+)")
+
+
+def _operand_refs(argstr: str) -> List[str]:
+    """Operand names from an HLO argument list.
+
+    Modern XLA prints typed operands -- ``dot(f32[128,128]{1,0} %Arg_0.1,
+    f32[128,128]{1,0} %rhs)`` -- so bare-token scraping picks up dtype and
+    layout fragments instead of names.  Prefer the ``%``-sigiled refs;
+    fall back to loose tokens only for sigil-free dumps."""
+    refs = _PCT_REF.findall(argstr)
+    if refs:
+        return refs
+    return re.findall(r"([\w.\-]+)", argstr)
 
 
 def _parse_op_line(line: str):
@@ -164,13 +178,16 @@ def _entry_name(hlo: str) -> Optional[str]:
 
 def _dot_flops(line: str, shape_str: str, shapes: Dict[str, str]) -> float:
     """2 * prod(result) * prod(contracting dims of lhs)."""
-    _, rbytes = _shape_elems_bytes(shape_str)
     relems, _ = _shape_elems_bytes(shape_str)
     mc = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
-    mo = re.search(r"dot\((?:%?([\w.\-]+)),", line)
+    mo = re.search(r"dot\(([^)]*)\)", line)
+    lhs_ref = None
+    if mo:
+        refs = _operand_refs(mo.group(1))
+        lhs_ref = refs[0] if refs else None
     contract = 1
-    if mc and mo:
-        lhs_shape = shapes.get(mo.group(1))
+    if mc and lhs_ref:
+        lhs_shape = shapes.get(lhs_ref)
         if lhs_shape:
             dims_m = _SHAPE_ONE.search(lhs_shape)
             if dims_m:
@@ -203,7 +220,7 @@ def _dus_update_bytes(line: str, shapes: Dict[str, str]) -> Optional[int]:
     m = re.search(r"dynamic-update-slice\(([^)]*)\)", line)
     if not m:
         return None
-    refs = re.findall(r"%?([\w.\-]+)", m.group(1))
+    refs = _operand_refs(m.group(1))
     if len(refs) >= 2 and refs[1] in shapes:
         return _shape_elems_bytes(shapes[refs[1]])[1]
     return None
@@ -251,7 +268,7 @@ def analyze_computation(lines: List[str], shapes: Dict[str, str],
             cost.bytes += byts
             # operands: count only computation-external reads
             for opn in re.findall(r"dot\(([^)]*)\)", line)[:1]:
-                for ref in re.findall(r"%?([\w.\-]+)", opn):
+                for ref in _operand_refs(opn):
                     s = shapes.get(ref)
                     if s:
                         ob = _shape_elems_bytes(s)[1]
@@ -298,7 +315,7 @@ def analyze_computation(lines: List[str], shapes: Dict[str, str],
             cost.calls.append((cm.group(1), 1.0))
         bm = _BRANCHES.search(line)
         if bm:
-            for ref in re.findall(r"%?([\w.\-]+)", bm.group(1)):
+            for ref in _operand_refs(bm.group(1)):
                 cost.calls.append((ref, 1.0))
     return cost
 
@@ -315,7 +332,7 @@ def _while_trip_count(cond_lines: List[str]) -> Optional[int]:
         if "compare(" in line:
             args = re.search(r"compare\(([^)]*)\)", line)
             if args:
-                refs = re.findall(r"%?([\w.\-]+)", args.group(1))
+                refs = _operand_refs(args.group(1))
                 for r in refs:
                     if r in consts:
                         return consts[r]

@@ -30,6 +30,31 @@ class Decision:
     #: effective stencil throughput (useful FLOP/s) per candidate backend
 
 
+@dataclasses.dataclass(frozen=True)
+class PricingContext:
+    """Workload + hardware context handed to each registered backend's
+    ``price`` hook (repro.kernels.registry): everything shared across
+    candidates is computed once here, so adding a candidate costs only its
+    own throughput formula."""
+
+    workload: pm.StencilWorkload
+    hw: pm.HardwareSpec
+    comparison: pm.Comparison     # vector vs monolithic matrix (shared)
+    s_mono: float                 # structural S at the fused radius t*r
+    s_reuse: float                # structural S at the base radius r
+    strip_m: int
+    use_sparse_unit: bool = False
+
+
+#: Total ``select_backend`` invocations this process -- lets tests assert a
+#: cached plan never re-runs selection.
+_invocations = 0
+
+
+def invocation_count() -> int:
+    return _invocations
+
+
 def select_backend(
     spec: StencilSpec,
     t: int,
@@ -42,12 +67,23 @@ def select_backend(
 ) -> Decision:
     """Pick the predicted-fastest backend for ``t`` fused steps of ``spec``.
 
+    Candidates are enumerated from the backend registry
+    (``repro.kernels.registry``): every registered backend with a ``price``
+    hook that returns a throughput for this workload competes; the rest
+    (reference oracle, legacy foils) are never selected.
+
     ``sparsity`` overrides the scheme's structural S for BOTH matrix
     regimes (useful to model published schemes); by default the monolithic
     regime uses the banded S at the fused radius t*r while the reuse regime
     uses S at the base radius r -- the structural reason reuse keeps its
     MXU efficiency at depth.
     """
+    global _invocations
+    _invocations += 1
+    # Deferred: kernels.registry pulls in the Pallas kernel modules, which
+    # must not load just because repro.core was imported.
+    from repro.kernels.registry import candidate_units, priced_candidates
+
     w = pm.StencilWorkload(spec, t, dtype_bytes)
     s_mono = sparsity if sparsity is not None else \
         pm.sparsity_banded(spec.radius * t, tile_n)
@@ -55,19 +91,18 @@ def select_backend(
         pm.sparsity_banded(spec.radius, tile_n)
     cmp_ = pm.compare(w, hw, s_mono, use_sparse_unit=use_sparse_unit)
 
-    vec = cmp_.vector.actual_flops
-    candidates = {
-        ("direct" if t == 1 else "fused_direct"): vec,
-        ("matmul" if t == 1 else "fused_matmul"): cmp_.matrix.actual_flops,
-    }
-    if t > 1:
-        # t=1 reuse degenerates to "matmul"; only offered at depth.  The
-        # sparse unit has no reuse analogue modeled (DESIGN.md §8).
-        reuse = pm.perf_matrix_reuse(w, hw, s_reuse, strip_m)
-        candidates["fused_matmul_reuse"] = reuse.actual_flops
+    candidates = priced_candidates(PricingContext(
+        workload=w, hw=hw, comparison=cmp_, s_mono=s_mono, s_reuse=s_reuse,
+        strip_m=strip_m, use_sparse_unit=use_sparse_unit))
+    if not candidates:
+        raise RuntimeError("no registered backend priced this workload")
 
+    vec = cmp_.vector.actual_flops
+    units = candidate_units()
     backend = max(candidates, key=lambda k: candidates[k])
-    best_matrix = max(v for k, v in candidates.items() if "matmul" in k)
+    matrix_perfs = [v for k, v in candidates.items()
+                    if units.get(k) == "matrix"]
+    best_matrix = max(matrix_perfs) if matrix_perfs else vec
 
     if backend == "fused_matmul_reuse":
         beta = pm.halo_recompute_factor(spec.radius, t, strip_m)
@@ -77,8 +112,16 @@ def select_backend(
             f"S_rt={s_mono:.3f} fused), halo-recompute beta={beta:.3f} "
             f"(DESIGN.md §4)"
         )
-    else:
+    elif backend in ("direct", "fused_direct", "matmul", "fused_matmul"):
         reason = _explain(cmp_)
+    else:
+        # a registered plug-in won: the Fig. 8 scenario prose below only
+        # describes the built-in vector/monolithic-matrix comparison
+        reason = (
+            f"registered backend {backend!r} priced highest "
+            f"({candidates[backend]:.3g} effective FLOP/s) among "
+            f"{sorted(candidates)}"
+        )
     return Decision(
         backend=backend,
         scenario=cmp_.scenario,

@@ -1,7 +1,25 @@
 """Pallas TPU kernels for the stencil hot paths (VPU direct, MXU banded),
 on the strip-mined halo substrate (kernels.common; seed scheme preserved in
-kernels.legacy for traffic benchmarking)."""
-from .ops import stencil_apply, explain, BACKENDS
+kernels.legacy for traffic benchmarking).
+
+The public surface is the plan API: ``stencil_plan`` compiles the paper's
+decision procedure + kernel lowering into a reusable ``StencilPlan``;
+``stencil_apply`` is the one-shot compatibility wrapper over it; backends
+register through ``repro.kernels.registry``."""
+from .ops import stencil_apply, explain
+from .plan import (StencilPlan, stencil_plan, spec_from_weights,
+                   plan_cache_stats, clear_plan_cache)
+from .registry import (register_backend, unregister_backend,
+                       registered_backends, get_backend)
 from .stencil_direct import stencil_direct
 from .stencil_matmul import stencil_matmul, build_bands, band_sparsity
 from .common import choose_strip, choose_tile, strip_in_specs
+
+
+def __getattr__(name):
+    # Delegates to ops.__getattr__: BACKENDS is computed on access so
+    # late-registered plug-in backends show up.
+    if name == "BACKENDS":
+        from . import ops
+        return ops.BACKENDS
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

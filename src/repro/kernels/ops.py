@@ -1,11 +1,13 @@
-"""Jit'd public entry points for the stencil kernels, with analytic dispatch.
+"""Compatibility entry points over the plan API (repro.kernels.plan).
 
-``stencil_apply(x, weights, t, backend="auto")`` is the deployable form of
-the paper: the enhanced-roofline criteria (repro.core.selector) pick the
-execution unit, then the matching Pallas kernel runs on the strip-mined
-halo substrate (3 neighbor-block loads per output strip, DESIGN.md §3).
+``stencil_apply(x, weights, t, backend="auto")`` is the historical one-shot
+form: it builds-or-fetches a :class:`~repro.kernels.plan.StencilPlan` for
+the call signature and executes it.  Selection, strip/tile sizing, and
+weight preprocessing therefore run once per DISTINCT signature and are
+served from the plan cache afterwards -- serving-scale callers should hold
+a plan directly (``stencil_plan``) instead.
 
-Backends
+Backends (see ``repro.kernels.registry``; any registered name is accepted)
   direct              t sequential VPU kernel steps      (halo r per step)
   fused_direct        one VPU kernel, t in-VMEM steps     (paper's temporal fusion)
   matmul              t sequential MXU banded contractions (halo r per step)
@@ -15,45 +17,30 @@ Backends
                       contractions w/ VMEM intermediates    alpha=1, halo-recompute
                                                             beta -- DESIGN.md §4)
   reference           jnp oracle (debug)
-  auto                selector decides among the above from the hardware model
+  legacy_direct/      seed 9-tile substrate (benchmark foil)
+  legacy_matmul
+  auto                selector decides among the priced backends
 
 ``interpret`` defaults to True off-TPU so every path is CPU-checkable; on a
 real TPU it compiles through Mosaic.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.core import perfmodel as pm
-from repro.core.selector import Decision, select_backend
-from repro.stencil.spec import StencilSpec
-from repro.stencil.weights import fuse_weights
-from .stencil_direct import stencil_direct
-from .stencil_matmul import stencil_matmul
-from . import ref as _ref
+from repro.core.selector import Decision
+from . import registry
+from .plan import decide, spec_from_weights, stencil_plan
 
-BACKENDS = ("direct", "fused_direct", "matmul", "fused_matmul",
-            "fused_matmul_reuse", "reference", "auto")
-
-
-def _default_interpret() -> bool:
-    return jax.default_backend() != "tpu"
-
-
-def spec_from_weights(weights) -> StencilSpec:
-    """Infer (shape, d, r) from a dense kernel's support."""
-    w = np.asarray(weights)
-    radius = (w.shape[0] - 1) // 2
-    dim = w.ndim
-    box_points = np.count_nonzero(w)
-    star_points = 2 * dim * radius + 1
-    shape = "star" if box_points <= star_points else "box"
-    return StencilSpec(shape, dim, radius)
+def __getattr__(name):
+    # BACKENDS is computed on access so late-registered plug-in backends
+    # are visible: registered names + the "auto" selection policy.
+    if name == "BACKENDS":
+        return registry.registered_backends() + ("auto",)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 def stencil_apply(
@@ -69,50 +56,18 @@ def stencil_apply(
 ) -> jax.Array:
     """Advance the grid ``t`` time steps with the selected backend.
 
-    ``tile_m``/``tile_n`` default to ``None`` = auto-sized by the kernels
-    (``choose_strip`` / ``choose_tile``); explicit values are validated
-    strictly."""
-    if backend not in BACKENDS:
-        raise ValueError(f"backend must be one of {BACKENDS}")
-    if t < 1:
-        raise ValueError(f"fusion depth must be >= 1, got {t}")
-    if interpret is None:
-        interpret = _default_interpret()
-
-    if backend == "auto":
-        spec = spec_from_weights(weights)
-        decision = select_backend(
-            spec, t, dtype_bytes=x.dtype.itemsize, hw=hw,
-            tile_n=tile_n if tile_n is not None else 128,
-            strip_m=tile_m if tile_m is not None else 128,
-        )
-        backend = decision.backend
-
-    if backend == "reference":
-        return _ref.stencil_direct_ref(x, weights, t)
-    if backend == "direct":
-        y = x
-        for _ in range(t):
-            y = stencil_direct(y, weights, t=1, tile_m=tile_m, tile_n=tile_n,
-                               interpret=interpret)
-        return y
-    if backend == "fused_direct":
-        return stencil_direct(x, weights, t=t, tile_m=tile_m, tile_n=tile_n,
-                              interpret=interpret)
-    if backend == "matmul":
-        y = x
-        for _ in range(t):
-            y = stencil_matmul(y, weights, t=1, tile_m=tile_m, tile_n=tile_n,
-                               interpret=interpret, compute_dtype=compute_dtype)
-        return y
-    if backend == "fused_matmul":
-        wf = fuse_weights(np.asarray(weights), t)
-        return stencil_matmul(x, wf, t=1, tile_m=tile_m, tile_n=tile_n,
-                              interpret=interpret, compute_dtype=compute_dtype)
-    if backend == "fused_matmul_reuse":
-        return stencil_matmul(x, weights, t=t, tile_m=tile_m, tile_n=tile_n,
-                              interpret=interpret, compute_dtype=compute_dtype)
-    raise AssertionError(backend)
+    Thin wrapper: equivalent to building ``stencil_plan(weights, x.shape,
+    x.dtype, t, ...)`` and calling it -- identical signatures share one
+    cached plan.  ``tile_m``/``tile_n`` default to ``None`` = auto-sized by
+    the kernels (``choose_strip`` / ``choose_tile``); explicit values are
+    validated strictly."""
+    plan = stencil_plan(
+        weights, x.shape, x.dtype, t, hw=hw,
+        backend=None if backend == "auto" else backend,
+        tile_m=tile_m, tile_n=tile_n, interpret=interpret,
+        compute_dtype=compute_dtype,
+    )
+    return plan(x)
 
 
 def explain(
@@ -120,6 +75,10 @@ def explain(
     hw: pm.HardwareSpec = pm.TPU_V5E_BF16, tile_n: int = 128,
     strip_m: int = 128,
 ) -> Decision:
-    """Expose the dispatch decision (scenario, predicted speedup, reason)."""
-    return select_backend(spec_from_weights(weights), t, dtype_bytes, hw,
-                          tile_n=tile_n, strip_m=strip_m)
+    """Expose the dispatch decision (scenario, predicted speedup, reason).
+
+    Delegates to ``repro.kernels.plan.decide`` -- the same single decision
+    path plan building and the ``auto`` backend consult, so ``explain`` can
+    never disagree with what actually runs."""
+    return decide(spec_from_weights(weights), t, dtype_bytes, hw,
+                  tile_n=tile_n, strip_m=strip_m)

@@ -1,0 +1,349 @@
+"""StencilPlan: compile-once execution plans for the stencil runtime.
+
+The paper's decision procedure (§4.1 criteria) is analytic -- it depends
+only on (spec, t, dtype, hardware), never on the grid values -- so a
+serving deployment (ROADMAP north star: millions of steps over a fixed
+grid/spec) should run it ONCE.  ``stencil_plan`` does exactly that:
+
+  * spec inference from dense weights (or an explicit ``StencilSpec``),
+  * backend selection (``repro.core.selector.select_backend``, enumerating
+    the backend registry's priced candidates),
+  * strip/tile sizing and weight preprocessing (fused-kernel composition,
+    tiling validation) inside the chosen backend's ``build`` hook,
+  * halo-exchange planning when a device ``mesh`` is given,
+
+then returns a :class:`StencilPlan` whose ``plan(x)`` / ``plan.step(x)`` /
+``plan.run(x, n)`` execute with zero re-analysis -- the executable is a
+single jitted callable, so repeated calls hit XLA's compile cache and
+never re-enter selection, sizing, or weight composition.
+
+Plans are cached process-wide, keyed on the full execution signature
+(weights digest, grid shape, dtype, t, hardware, tiling, interpret,
+compute dtype, sharding, backend override) with hit/miss counters
+(:func:`plan_cache_stats`).  ``repro.kernels.ops.stencil_apply`` survives
+as a thin wrapper that builds-or-fetches a plan per call.
+"""
+from __future__ import annotations
+
+import hashlib
+import time
+from typing import Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+
+from repro.core import perfmodel as pm
+from repro.core.selector import Decision, select_backend
+from repro.stencil.spec import StencilSpec
+from repro.stencil.weights import jacobi_weights
+from . import registry
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def spec_from_weights(weights) -> StencilSpec:
+    """Infer (shape, d, r) from a dense kernel's support."""
+    w = np.asarray(weights)
+    radius = (w.shape[0] - 1) // 2
+    dim = w.ndim
+    box_points = np.count_nonzero(w)
+    star_points = 2 * dim * radius + 1
+    shape = "star" if box_points <= star_points else "box"
+    return StencilSpec(shape, dim, radius)
+
+
+def decide(
+    spec: StencilSpec, t: int, dtype_bytes: int,
+    hw: pm.HardwareSpec = pm.TPU_V5E_BF16,
+    tile_n: int = 128, strip_m: int = 128,
+) -> Decision:
+    """THE decision path: plan building, ``stencil_apply(backend="auto")``
+    and ``ops.explain`` all consult this one function, so they can never
+    disagree about the priced ``Decision``."""
+    return select_backend(spec, t, dtype_bytes=dtype_bytes, hw=hw,
+                          tile_n=tile_n, strip_m=strip_m)
+
+
+class StencilPlan:
+    """A compiled, reusable stencil execution plan.
+
+    Built by :func:`stencil_plan`; calling the plan advances the grid ``t``
+    time steps.  Attributes of interest:
+
+      * ``decision``  -- the priced :class:`Decision` (what "auto" picks and
+        why), always populated, even under a backend override;
+      * ``backend``   -- the backend the plan actually executes;
+      * ``halo_plan`` -- dict describing the halo-exchange schedule
+        (distributed plans only, else ``None``);
+      * ``build_time_s`` -- host seconds spent building (selection, sizing,
+        weight composition; excludes XLA compilation, which happens on the
+        first call);
+      * ``fn``        -- the underlying jitted callable.
+    """
+
+    def __init__(self, *, spec, weights, grid_shape, dtype, t, hw, backend,
+                 decision, fn, tile_m, tile_n, interpret, compute_dtype,
+                 mesh=None, shard_spec=None, dist_mode=None, halo_plan=None,
+                 key=None, build_time_s=0.0):
+        self.spec = spec
+        self.weights = weights
+        self.grid_shape = grid_shape
+        self.dtype = dtype
+        self.t = t
+        self.hw = hw
+        self.backend = backend
+        self.decision = decision
+        self.fn = fn
+        self.tile_m = tile_m
+        self.tile_n = tile_n
+        self.interpret = interpret
+        self.compute_dtype = compute_dtype
+        self.mesh = mesh
+        self.shard_spec = shard_spec
+        self.dist_mode = dist_mode
+        self.halo_plan = halo_plan
+        self.key = key
+        self.build_time_s = build_time_s
+
+    # -- execution ------------------------------------------------------
+    def __call__(self, x: jax.Array) -> jax.Array:
+        if tuple(x.shape) != self.grid_shape:
+            raise ValueError(
+                f"plan was built for grid {self.grid_shape}, got {x.shape}; "
+                "build a new plan for a new geometry")
+        return self.fn(x)
+
+    def step(self, x: jax.Array) -> jax.Array:
+        """Alias for ``plan(x)``: one invocation = ``t`` time steps."""
+        return self(x)
+
+    def run(self, x: jax.Array, n_steps: int) -> jax.Array:
+        """``n_steps`` plan invocations (``n_steps * t`` time steps)."""
+        if n_steps < 0:
+            raise ValueError(f"n_steps must be >= 0, got {n_steps}")
+        for _ in range(n_steps):
+            x = self(x)
+        return x
+
+    # -- introspection --------------------------------------------------
+    def explain(self) -> str:
+        """Human-readable account of what the plan does and why."""
+        d = self.decision
+        lines = [
+            f"StencilPlan {self.spec.name} t={self.t} grid={self.grid_shape} "
+            f"dtype={np.dtype(self.dtype).name} on {self.hw.name}",
+            f"  executes : {self.backend}"
+            + ("" if self.backend == d.backend
+               else f" (override; auto would pick {d.backend})"),
+            f"  scenario : {d.scenario}",
+            f"  speedup  : {d.predicted_speedup:.2f}x (best matrix vs vector)",
+            f"  reason   : {d.reason}",
+            "  candidates (effective FLOP/s): "
+            + ", ".join(f"{k}={v:.3g}" for k, v in d.candidates.items()),
+        ]
+        if self.halo_plan is not None:
+            hp = self.halo_plan
+            lines.append(
+                f"  halo plan: mode={hp['mode']} depth={hp['halo_depth']} "
+                f"exchanges/call={hp['exchanges_per_call']} "
+                f"bytes/shard/call={hp['halo_bytes_per_call']}")
+        return "\n".join(lines)
+
+    def __repr__(self) -> str:
+        return (f"StencilPlan({self.spec.name}, t={self.t}, "
+                f"grid={self.grid_shape}, backend={self.backend!r}, "
+                f"distributed={self.mesh is not None})")
+
+
+# ---------------------------------------------------------------------------
+# Plan cache: bounded LRU (plans pin weights, jitted executables, and --
+# for distributed plans -- the mesh, so a long-running server sweeping
+# geometries must not grow without bound).
+# ---------------------------------------------------------------------------
+from collections import OrderedDict
+
+#: Maximum cached plans; least-recently-used entries are evicted beyond it.
+PLAN_CACHE_MAX = 512
+
+_CACHE: "OrderedDict" = OrderedDict()
+_STATS = {"hits": 0, "misses": 0}
+
+
+def plan_cache_stats() -> dict:
+    """``{"hits": int, "misses": int, "size": int}`` for the process cache."""
+    return {"hits": _STATS["hits"], "misses": _STATS["misses"],
+            "size": len(_CACHE)}
+
+
+def clear_plan_cache() -> None:
+    _CACHE.clear()
+    _STATS["hits"] = _STATS["misses"] = 0
+
+
+def _weights_key(w: np.ndarray) -> Tuple:
+    digest = hashlib.sha1(np.ascontiguousarray(w).tobytes()).hexdigest()
+    return (w.shape, str(w.dtype), digest)
+
+
+def _dtype_key(dt) -> str:
+    return np.dtype(dt).name
+
+
+# ---------------------------------------------------------------------------
+# Plan construction
+# ---------------------------------------------------------------------------
+def stencil_plan(
+    spec_or_weights: Union[StencilSpec, np.ndarray],
+    grid_shape: Sequence[int],
+    dtype,
+    t: int = 1,
+    *,
+    hw: pm.HardwareSpec = pm.TPU_V5E_BF16,
+    mesh=None,
+    shard_spec: Optional[Sequence[Optional[str]]] = None,
+    dist_mode: str = "fused",
+    backend: Optional[str] = None,
+    tile_m: Optional[int] = None,
+    tile_n: Optional[int] = None,
+    interpret: Optional[bool] = None,
+    compute_dtype=None,
+    use_cache: bool = True,
+) -> StencilPlan:
+    """Build (or fetch from cache) a compiled stencil execution plan.
+
+    Args:
+      spec_or_weights: a dense ``(2r+1)^d`` kernel, or a ``StencilSpec``
+        (then the deterministic Jacobi weights of that spec are used).
+      grid_shape: global grid shape the plan is specialized to.
+      dtype: grid dtype.
+      t: fusion depth -- time steps advanced per plan invocation.
+      hw: hardware model consulted by the selector.
+      mesh / shard_spec: when given, the plan drives the distributed
+        halo-exchange stepper; ``shard_spec`` names one mesh axis per grid
+        dim (``None`` entries = unsharded dims).  ``dist_mode`` is
+        ``"fused"`` (one depth-``t*r`` exchange per invocation) or
+        ``"stepwise"`` (``t`` depth-``r`` exchanges).
+      backend: override the selector's choice with any registered backend
+        name (``repro.kernels.registry.registered_backends()``).
+      tile_m/tile_n: explicit strip height / column-tile width (``None`` =
+        auto-sized exactly as the kernels themselves would).
+      interpret: Pallas interpret mode; ``None`` = off-TPU default.
+      use_cache: bypass the process-wide plan cache when ``False``.
+    """
+    if t < 1:
+        raise ValueError(f"fusion depth must be >= 1, got {t}")
+    if backend is not None:
+        registry.get_backend(backend)          # fail fast on unknown names
+    if mesh is not None and shard_spec is None:
+        raise ValueError("a mesh-parameterized plan needs shard_spec "
+                         "(one mesh-axis name per grid dim, None=unsharded)")
+
+    if isinstance(spec_or_weights, StencilSpec):
+        weights = jacobi_weights(spec_or_weights)
+    else:
+        weights = np.asarray(spec_or_weights)
+    grid_shape = tuple(int(n) for n in grid_shape)
+    if interpret is None:
+        interpret = _default_interpret()
+
+    shard_key = None
+    if mesh is not None:
+        shard_key = (id(mesh), tuple(shard_spec), dist_mode)
+    # registry.generation() invalidates plans whose selection (or builder,
+    # under overwrite=True) predates a registry change -- a newly priced
+    # backend must win future auto plans, not be masked by the cache
+    key = (_weights_key(weights), grid_shape, _dtype_key(dtype), t, hw,
+           shard_key, backend, tile_m, tile_n, interpret,
+           None if compute_dtype is None else _dtype_key(compute_dtype),
+           registry.generation())
+    if use_cache and key in _CACHE:
+        _STATS["hits"] += 1
+        _CACHE.move_to_end(key)
+        return _CACHE[key]
+    _STATS["misses"] += 1
+
+    t0 = time.perf_counter()
+    spec = spec_from_weights(weights)
+    # Selection prices tiles at the historical defaults (128) unless the
+    # caller pinned them -- identical to the pre-plan "auto" branch.
+    decision = decide(
+        spec, t, dtype_bytes=np.dtype(dtype).itemsize, hw=hw,
+        tile_n=tile_n if tile_n is not None else 128,
+        strip_m=tile_m if tile_m is not None else 128,
+    )
+    exec_backend = backend if backend is not None else decision.backend
+
+    ctx = registry.PlanContext(
+        spec=spec, weights=weights, grid_shape=grid_shape,
+        dtype=np.dtype(dtype), t=t, tile_m=tile_m, tile_n=tile_n,
+        interpret=interpret, compute_dtype=compute_dtype,
+    )
+
+    halo_plan = None
+    if mesh is None:
+        run = registry.get_backend(exec_backend).build(ctx)
+        fn = jax.jit(run)
+    else:
+        fn, halo_plan = _build_distributed(
+            mesh, tuple(shard_spec), dist_mode, ctx, exec_backend)
+
+    plan = StencilPlan(
+        spec=spec, weights=weights, grid_shape=grid_shape,
+        dtype=np.dtype(dtype), t=t, hw=hw, backend=exec_backend,
+        decision=decision, fn=fn, tile_m=tile_m, tile_n=tile_n,
+        interpret=interpret, compute_dtype=compute_dtype, mesh=mesh,
+        shard_spec=None if shard_spec is None else tuple(shard_spec),
+        dist_mode=dist_mode if mesh is not None else None,
+        halo_plan=halo_plan, key=key,
+        build_time_s=time.perf_counter() - t0,
+    )
+    if use_cache:
+        _CACHE[key] = plan
+        while len(_CACHE) > PLAN_CACHE_MAX:
+            _CACHE.popitem(last=False)
+    return plan
+
+
+def _build_distributed(mesh, axis_names, dist_mode, ctx, exec_backend):
+    """Wire the halo-exchange stepper around the chosen local backend."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.stencil.distributed import (halo_bytes_per_step,
+                                           make_distributed_stepper,
+                                           pallas_local_apply)
+
+    if len(axis_names) != len(ctx.grid_shape):
+        raise ValueError(f"shard_spec {axis_names} must name one mesh axis "
+                         f"per grid dim of {ctx.grid_shape}")
+    local_shape = []
+    for n, ax in zip(ctx.grid_shape, axis_names):
+        parts = mesh.shape[ax] if ax is not None else 1
+        if n % parts:
+            raise ValueError(f"grid dim {n} not divisible by mesh axis "
+                             f"{ax!r} ({parts} shards)")
+        local_shape.append(n // parts)
+    local_shape = tuple(local_shape)
+
+    # reference executes through the stepper's built-in jnp local update;
+    # every other registered backend plugs in as a Pallas local apply.
+    local = None if exec_backend == "reference" else pallas_local_apply(
+        exec_backend, interpret=ctx.interpret,
+        tile_m=ctx.tile_m, tile_n=ctx.tile_n)
+    stepper = make_distributed_stepper(
+        mesh, axis_names, ctx.weights, t=ctx.t, mode=dist_mode,
+        local_apply=local)
+    sharding = NamedSharding(mesh, P(*axis_names))
+    fn = jax.jit(stepper, in_shardings=sharding, out_shardings=sharding)
+
+    r = ctx.radius
+    halo_plan = {
+        "mode": dist_mode,
+        "halo_depth": r if dist_mode == "stepwise" else r * ctx.t,
+        "exchanges_per_call": ctx.t if dist_mode == "stepwise" else 1,
+        "halo_bytes_per_call": halo_bytes_per_step(
+            local_shape, axis_names, r, ctx.t, dist_mode,
+            np.dtype(ctx.dtype).itemsize),
+        "local_shape": local_shape,
+    }
+    return fn, halo_plan

@@ -1,0 +1,326 @@
+"""Backend registry: every execution regime registers through one interface.
+
+A *backend* is one way to advance the grid ``t`` time steps -- the five
+regimes of the strip substrate (VPU direct/fused, MXU sequential /
+monolithic / intermediate-reuse), the seed 9-tile foil (``legacy_*``), and
+the pure-jnp reference oracle all register here via :func:`register_backend`
+and are addressed by name from ``stencil_plan`` / ``stencil_apply``.
+
+Each :class:`BackendDef` carries two callables:
+
+  * ``build(ctx)`` -- consume a :class:`PlanContext` (stencil spec, dense
+    weights, grid geometry, tiling, dtype) and return the executable
+    ``run(x) -> y`` for ``t`` steps.  All host-side analysis (tile sizing,
+    weight composition, validation) happens HERE, once per plan; ``run`` is
+    jitted by the plan, so nothing in it re-executes per call.
+  * ``price(pctx)`` -- optional analytic throughput (effective stencil
+    FLOP/s) under a :class:`repro.core.selector.PricingContext`, or ``None``
+    when the backend is not a candidate for that workload (e.g. the reuse
+    regime degenerates at t=1).  ``select_backend`` enumerates priced
+    backends instead of a hard-coded dict, so new regimes (sparse unit,
+    halo sub-blocked strips) become selectable just by registering.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.core import perfmodel as pm
+from repro.stencil.spec import StencilSpec
+from repro.stencil.weights import fuse_weights
+from .common import choose_strip, choose_tile, validate_tiling
+from . import legacy as _legacy
+from . import ref as _ref
+from .stencil_direct import stencil_direct
+from .stencil_matmul import stencil_matmul
+
+
+# ---------------------------------------------------------------------------
+# Plan-build context handed to backend builders
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class PlanContext:
+    """Everything a backend builder may consume, resolved once per plan."""
+
+    spec: StencilSpec
+    weights: np.ndarray          # dense (2r+1)^2 base kernel, host-side
+    grid_shape: Tuple[int, int]
+    dtype: np.dtype
+    t: int
+    tile_m: Optional[int]        # user-requested; None = auto per kernel rule
+    tile_n: Optional[int]
+    interpret: bool
+    compute_dtype: object = None
+
+    @property
+    def radius(self) -> int:
+        return (self.weights.shape[0] - 1) // 2
+
+    def fused_weights(self) -> np.ndarray:
+        """Radius-``t*r`` composed kernel (monolithic fusion operand)."""
+        return fuse_weights(self.weights, self.t)
+
+    def resolve_strip(self, halo: int) -> int:
+        """Strip height under the kernels' own auto-sizing rule."""
+        h, _ = self.grid_shape
+        if self.tile_m is None:
+            return choose_strip(h, self.grid_shape[1], halo,
+                                np.dtype(self.dtype).itemsize)
+        return min(self.tile_m, h)
+
+    def resolve_tile_n(self) -> int:
+        """Column-tile width of the banded contraction (MXU paths)."""
+        wid = self.grid_shape[1]
+        return choose_tile(wid) if self.tile_n is None else min(self.tile_n, wid)
+
+    def validate(self, strip_m: int, tile_n: int, halo: int,
+                 radius: int) -> None:
+        validate_tiling(self.grid_shape, strip_m, tile_n, halo, radius)
+
+
+@dataclasses.dataclass(frozen=True)
+class BackendDef:
+    name: str
+    build: Callable[[PlanContext], Callable]
+    price: Optional[Callable] = None   # price(PricingContext) -> float | None
+    description: str = ""
+    unit: Optional[str] = None         # "vector" | "matrix" | None (other)
+
+
+_REGISTRY: Dict[str, BackendDef] = {}
+#: Bumped on every (un)registration; folded into plan-cache keys so plans
+#: built against an older registry never mask a newly registered candidate.
+_generation = 0
+
+
+def generation() -> int:
+    return _generation
+
+
+def register_backend(name: str, build: Callable, price: Callable = None,
+                     description: str = "", unit: str = None,
+                     overwrite: bool = False) -> BackendDef:
+    """Register an execution backend under ``name``.
+
+    ``build(ctx: PlanContext) -> run(x)`` constructs the executable;
+    ``price(pctx) -> Optional[float]`` (optional) makes it an auto-selection
+    candidate; ``unit`` classifies it for Decision bookkeeping ("vector" or
+    "matrix" -- the predicted matrix-vs-vector speedup considers only
+    matrix-unit candidates).  Re-registering an existing name raises unless
+    ``overwrite``.
+    """
+    global _generation
+    if name == "auto":
+        raise ValueError("'auto' is the selection policy, not a backend")
+    if name in _REGISTRY and not overwrite:
+        raise ValueError(f"backend {name!r} already registered "
+                         "(pass overwrite=True to replace)")
+    bd = BackendDef(name=name, build=build, price=price,
+                    description=description, unit=unit)
+    _REGISTRY[name] = bd
+    _generation += 1
+    return bd
+
+
+def unregister_backend(name: str) -> None:
+    """Remove a registered backend (primarily for tests/plug-in teardown)."""
+    global _generation
+    if _REGISTRY.pop(name, None) is not None:
+        _generation += 1
+
+
+def get_backend(name: str) -> BackendDef:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown backend {name!r}; registered: "
+            f"{tuple(_REGISTRY)} (or 'auto')") from None
+
+
+def registered_backends() -> Tuple[str, ...]:
+    """Names of all registered backends, in registration order."""
+    return tuple(_REGISTRY)
+
+
+def priced_candidates(pctx) -> Dict[str, float]:
+    """Evaluate every priced backend under ``pctx``; skip non-candidates."""
+    out: Dict[str, float] = {}
+    for bd in _REGISTRY.values():
+        if bd.price is None:
+            continue
+        v = bd.price(pctx)
+        if v is not None:
+            out[bd.name] = v
+    return out
+
+
+def candidate_units() -> Dict[str, Optional[str]]:
+    """Registered name -> unit classification ("vector"/"matrix"/None)."""
+    return {name: bd.unit for name, bd in _REGISTRY.items()}
+
+
+# ---------------------------------------------------------------------------
+# Builders: the five strip-substrate regimes + reference + legacy foil.
+# Each resolves its tiling/operands at build time and closes over them, so
+# plan execution re-derives nothing.
+# ---------------------------------------------------------------------------
+def _build_reference(ctx: PlanContext) -> Callable:
+    w, t = ctx.weights, ctx.t
+
+    def run(x):
+        return _ref.stencil_direct_ref(x, w, t)
+    return run
+
+
+def _build_direct(ctx: PlanContext) -> Callable:
+    """t sequential VPU kernel launches, halo r per step."""
+    w, t, r = ctx.weights, ctx.t, ctx.radius
+    strip_m = ctx.resolve_strip(r)
+    ctx.validate(strip_m, ctx.grid_shape[1], r, r)
+    interp = ctx.interpret
+
+    def run(x):
+        for _ in range(t):
+            x = stencil_direct(x, w, t=1, tile_m=strip_m, interpret=interp)
+        return x
+    return run
+
+
+def _build_fused_direct(ctx: PlanContext) -> Callable:
+    """One VPU kernel, t in-VMEM steps (temporal fusion, halo t*r)."""
+    w, t, r = ctx.weights, ctx.t, ctx.radius
+    strip_m = ctx.resolve_strip(t * r)
+    ctx.validate(strip_m, ctx.grid_shape[1], t * r, r)
+    interp = ctx.interpret
+
+    def run(x):
+        return stencil_direct(x, w, t=t, tile_m=strip_m, interpret=interp)
+    return run
+
+
+def _build_matmul(ctx: PlanContext) -> Callable:
+    """t sequential MXU banded contractions, halo r per step."""
+    w, t, r = ctx.weights, ctx.t, ctx.radius
+    strip_m, tile_n = ctx.resolve_strip(r), ctx.resolve_tile_n()
+    ctx.validate(strip_m, tile_n, r, r)
+    interp, cdt = ctx.interpret, ctx.compute_dtype
+
+    def run(x):
+        for _ in range(t):
+            x = stencil_matmul(x, w, t=1, tile_m=strip_m, tile_n=tile_n,
+                               interpret=interp, compute_dtype=cdt)
+        return x
+    return run
+
+
+def _build_fused_matmul(ctx: PlanContext) -> Callable:
+    """Monolithic fusion: ONE contraction of the composed radius-t*r kernel."""
+    wf = ctx.fused_weights()
+    R = (wf.shape[0] - 1) // 2
+    strip_m, tile_n = ctx.resolve_strip(R), ctx.resolve_tile_n()
+    ctx.validate(strip_m, tile_n, R, R)
+    interp, cdt = ctx.interpret, ctx.compute_dtype
+
+    def run(x):
+        return stencil_matmul(x, wf, t=1, tile_m=strip_m, tile_n=tile_n,
+                              interpret=interp, compute_dtype=cdt)
+    return run
+
+
+def _build_fused_matmul_reuse(ctx: PlanContext) -> Callable:
+    """Intermediate reuse: t radius-r contractions, VMEM intermediates."""
+    w, t, r = ctx.weights, ctx.t, ctx.radius
+    strip_m, tile_n = ctx.resolve_strip(t * r), ctx.resolve_tile_n()
+    ctx.validate(strip_m, tile_n, t * r, r)
+    interp, cdt = ctx.interpret, ctx.compute_dtype
+
+    def run(x):
+        return stencil_matmul(x, w, t=t, tile_m=strip_m, tile_n=tile_n,
+                              interpret=interp, compute_dtype=cdt)
+    return run
+
+
+def _build_legacy_direct(ctx: PlanContext) -> Callable:
+    """Seed 9-neighbor full-tile VPU scheme (benchmark foil)."""
+    w, t = ctx.weights, ctx.t
+    tile_m = 128 if ctx.tile_m is None else ctx.tile_m
+    tile_n = 128 if ctx.tile_n is None else ctx.tile_n
+    interp = ctx.interpret
+
+    def run(x):
+        return _legacy.stencil_direct_9pt(x, w, t=t, tile_m=tile_m,
+                                          tile_n=tile_n, interpret=interp)
+    return run
+
+
+def _build_legacy_matmul(ctx: PlanContext) -> Callable:
+    """Seed 9-neighbor monolithic MXU scheme on the composed kernel."""
+    wf = ctx.fused_weights()
+    tile_m = 128 if ctx.tile_m is None else ctx.tile_m
+    tile_n = 128 if ctx.tile_n is None else ctx.tile_n
+    interp, cdt = ctx.interpret, ctx.compute_dtype
+
+    def run(x):
+        return _legacy.stencil_matmul_9pt(x, wf, tile_m=tile_m, tile_n=tile_n,
+                                          interpret=interp, compute_dtype=cdt)
+    return run
+
+
+# ---------------------------------------------------------------------------
+# Pricers: the selector's candidate set, one per selectable regime.  The
+# unfused/fused VPU and MXU pairs share a throughput model and partition on
+# fusion depth, preserving the historical candidate naming (``direct`` vs
+# ``fused_direct`` etc.).  Legacy and reference backends are unpriced: they
+# exist for benchmarking/debugging and must never win selection.
+# ---------------------------------------------------------------------------
+def _price_direct(p):
+    return p.comparison.vector.actual_flops if p.workload.t == 1 else None
+
+
+def _price_fused_direct(p):
+    return p.comparison.vector.actual_flops if p.workload.t > 1 else None
+
+
+def _price_matmul(p):
+    return p.comparison.matrix.actual_flops if p.workload.t == 1 else None
+
+
+def _price_fused_matmul(p):
+    return p.comparison.matrix.actual_flops if p.workload.t > 1 else None
+
+
+def _price_fused_matmul_reuse(p):
+    # t=1 reuse degenerates to "matmul"; only offered at depth.  The sparse
+    # unit has no reuse analogue modeled (DESIGN.md §8).
+    if p.workload.t == 1:
+        return None
+    return pm.perf_matrix_reuse(p.workload, p.hw, p.s_reuse,
+                                p.strip_m).actual_flops
+
+
+register_backend("direct", _build_direct, _price_direct,
+                 "t sequential VPU kernel steps (halo r per step)",
+                 unit="vector")
+register_backend("fused_direct", _build_fused_direct, _price_fused_direct,
+                 "one VPU kernel, t in-VMEM steps (temporal fusion)",
+                 unit="vector")
+register_backend("matmul", _build_matmul, _price_matmul,
+                 "t sequential MXU banded contractions", unit="matrix")
+register_backend("fused_matmul", _build_fused_matmul, _price_fused_matmul,
+                 "monolithic fusion: one radius-t*r banded contraction",
+                 unit="matrix")
+register_backend("fused_matmul_reuse", _build_fused_matmul_reuse,
+                 _price_fused_matmul_reuse,
+                 "one MXU kernel, t radius-r contractions, VMEM intermediates",
+                 unit="matrix")
+register_backend("reference", _build_reference,
+                 description="pure-jnp oracle (debug)")
+register_backend("legacy_direct", _build_legacy_direct,
+                 description="seed 9-tile VPU scheme (benchmark foil)",
+                 unit="vector")
+register_backend("legacy_matmul", _build_legacy_matmul,
+                 description="seed 9-tile monolithic MXU scheme (foil)",
+                 unit="matrix")

@@ -156,26 +156,30 @@ def pallas_local_apply(
     returns the valid interior.  The kernel's own modulo-wrap periodicity is
     harmless because the halo ring it wraps into is discarded.
 
-    ``backend`` is any non-auto entry of ``repro.kernels.BACKENDS`` --
-    notably ``"fused_matmul_reuse"``, which keeps all t intermediates in
-    VMEM so the shard pays HBM traffic once per exchange, not per step.
-    By default the whole extended block is one strip (``tile_m=None``);
-    pass explicit tiles to exercise the multi-strip path.
+    ``backend`` is any registered backend name
+    (``repro.kernels.registered_backends()``) -- notably
+    ``"fused_matmul_reuse"``, which keeps all t intermediates in VMEM so the
+    shard pays HBM traffic once per exchange, not per step.  Execution goes
+    through the plan cache (``repro.kernels.plan``): the per-shard plan is
+    built once per (block shape, depth) signature and reused across steps
+    and traces.  By default the whole extended block is one strip
+    (``tile_m=None``); pass explicit tiles to exercise the multi-strip path.
     """
     import numpy as _np
 
     def local_apply(xe, w, steps):
-        from repro.kernels.ops import stencil_apply  # deferred: avoid cycle
+        from repro.kernels.plan import stencil_plan  # deferred: avoid cycle
 
         wn = _np.asarray(w)
         radius = (wn.shape[0] - 1) // 2
         h = steps * radius
-        full = stencil_apply(
-            xe, wn, t=steps, backend=backend,
+        plan = stencil_plan(
+            wn, xe.shape, xe.dtype, steps, backend=backend,
             tile_m=tile_m if tile_m is not None else xe.shape[0],
             tile_n=tile_n if tile_n is not None else xe.shape[1],
             interpret=interpret,
         )
+        full = plan(xe)
         return full[h:-h, h:-h] if h else full
 
     return local_apply

@@ -104,3 +104,54 @@ class TestKernelAsLocalApply:
             print("OK")
         """)
         assert "OK" in out
+
+
+class TestDistributedPlan:
+    def test_mesh_parameterized_plan(self):
+        """A mesh-parameterized StencilPlan drives the halo-exchange stepper
+        through the same object as local plans: plan(x) on the sharded grid,
+        plan.halo_plan matching the analytic traffic model, and a cache key
+        that separates sharded from local signatures."""
+        out = run_with_devices(4, """
+            import jax, numpy as np, jax.numpy as jnp
+            from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+            from repro.stencil import StencilSpec, make_weights
+            from repro.stencil.distributed import halo_bytes_per_step
+            from repro.stencil.reference import apply_stencil_steps
+            from repro.kernels import stencil_plan, plan_cache_stats
+
+            mesh = Mesh(np.array(jax.devices()).reshape(2,2), ("x","y"))
+            w = make_weights(StencilSpec("box", 2, 1), seed=3)
+            t, n = 2, 64
+            x = np.random.default_rng(0).normal(size=(n,n)).astype(np.float32)
+            xs = jax.device_put(x, NamedSharding(mesh, P("x","y")))
+            ref = apply_stencil_steps(jnp.asarray(x), jnp.asarray(w), t)
+
+            for mode in ("stepwise", "fused"):
+                plan = stencil_plan(w, (n, n), np.float32, t, mesh=mesh,
+                                    shard_spec=("x", "y"), dist_mode=mode)
+                err = float(jnp.abs(plan(xs) - ref).max())
+                assert err < 1e-4, (mode, err)
+                hp = plan.halo_plan
+                assert hp["local_shape"] == (n//2, n//2)
+                assert hp["exchanges_per_call"] == (t if mode == "stepwise"
+                                                    else 1)
+                assert hp["halo_bytes_per_call"] == halo_bytes_per_step(
+                    (n//2, n//2), ("x","y"), 1, t, mode, 4)
+                assert "halo plan" in plan.explain()
+
+            # same signature => cached; local signature => distinct plan
+            before = plan_cache_stats()
+            again = stencil_plan(w, (n, n), np.float32, t, mesh=mesh,
+                                 shard_spec=("x", "y"), dist_mode="fused")
+            assert plan_cache_stats()["hits"] == before["hits"] + 1
+            local = stencil_plan(w, (n, n), np.float32, t)
+            assert local is not again
+            err = float(jnp.abs(again.run(xs, 2)
+                                - apply_stencil_steps(jnp.asarray(x),
+                                                      jnp.asarray(w),
+                                                      2*t)).max())
+            assert err < 1e-4, err
+            print("OK")
+        """)
+        assert "OK" in out

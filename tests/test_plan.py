@@ -1,0 +1,266 @@
+"""Plan API: compile-once plans, backend registry, cache keying/counters,
+and the single-decision-path guarantee (``explain`` vs ``auto``)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import perfmodel as pm
+from repro.core import selector
+from repro.kernels import (BACKENDS, clear_plan_cache, explain, get_backend,
+                           plan_cache_stats, register_backend,
+                           registered_backends, stencil_apply, stencil_plan,
+                           unregister_backend)
+from repro.kernels.ref import stencil_direct_ref
+from repro.stencil import StencilSpec, jacobi_weights, make_weights
+
+RNG = np.random.default_rng(0)
+
+
+def _x(h, w, dtype=np.float32):
+    return jnp.asarray(RNG.normal(size=(h, w)).astype(dtype))
+
+
+class TestPlanExecution:
+    @pytest.mark.parametrize("backend", [b for b in BACKENDS if b != "auto"])
+    def test_every_registered_backend_executes(self, backend):
+        """plan(x) runs all five regimes + reference + legacy via the
+        registry and matches the oracle."""
+        w = make_weights(StencilSpec("box", 2, 1), seed=1)
+        x = _x(64, 64)
+        t = 3
+        plan = stencil_plan(w, x.shape, x.dtype, t, backend=backend,
+                            tile_m=32, tile_n=32)
+        ref = stencil_direct_ref(x, w, t)
+        np.testing.assert_allclose(np.asarray(plan(x)), np.asarray(ref),
+                                   atol=1e-4)
+
+    @pytest.mark.parametrize("backend", [b for b in BACKENDS if b != "auto"])
+    def test_wrapper_parity_bitwise(self, backend):
+        """stencil_apply == direct plan execution, bit-for-bit in f32."""
+        w = make_weights(StencilSpec("star", 2, 2), seed=2)
+        x = _x(64, 64)
+        t = 2
+        plan = stencil_plan(w, x.shape, x.dtype, t, backend=backend,
+                            tile_m=32, tile_n=32)
+        via_wrapper = stencil_apply(x, w, t=t, backend=backend,
+                                    tile_m=32, tile_n=32)
+        assert np.array_equal(np.asarray(plan(x)), np.asarray(via_wrapper))
+
+    def test_step_and_run(self):
+        w = make_weights(StencilSpec("box", 2, 1), seed=0)
+        x = _x(32, 32)
+        plan = stencil_plan(w, x.shape, x.dtype, 2, tile_m=16, tile_n=16)
+        np.testing.assert_array_equal(np.asarray(plan.step(x)),
+                                      np.asarray(plan(x)))
+        two = plan(plan(x))
+        np.testing.assert_array_equal(np.asarray(plan.run(x, 2)),
+                                      np.asarray(two))
+        np.testing.assert_array_equal(np.asarray(plan.run(x, 0)),
+                                      np.asarray(x))
+
+    def test_spec_input_uses_jacobi_weights(self):
+        spec = StencilSpec("box", 2, 1)
+        x = _x(32, 32)
+        plan = stencil_plan(spec, x.shape, x.dtype, 1, tile_m=16, tile_n=16)
+        ref = stencil_direct_ref(x, jacobi_weights(spec), 1)
+        np.testing.assert_allclose(np.asarray(plan(x)), np.asarray(ref),
+                                   atol=2e-5)
+
+    def test_geometry_mismatch_raises(self):
+        w = make_weights(StencilSpec("box", 2, 1), seed=0)
+        plan = stencil_plan(w, (32, 32), np.float32, 1, tile_m=16, tile_n=16)
+        with pytest.raises(ValueError, match="grid"):
+            plan(_x(64, 64))
+
+    def test_bad_depth_and_missing_shard_spec(self):
+        w = make_weights(StencilSpec("box", 2, 1), seed=0)
+        with pytest.raises(ValueError, match="fusion depth"):
+            stencil_plan(w, (32, 32), np.float32, 0)
+        with pytest.raises(ValueError, match="shard_spec"):
+            stencil_plan(w, (32, 32), np.float32, 1, mesh=object())
+
+    def test_explain_mentions_override(self):
+        w = make_weights(StencilSpec("box", 2, 1), seed=0)
+        plan = stencil_plan(w, (32, 32), np.float32, 4, backend="reference",
+                            tile_m=16, tile_n=16)
+        assert plan.backend == "reference"
+        assert plan.decision.backend != "reference"   # oracle is unpriced
+        assert "override" in plan.explain()
+        assert plan.build_time_s >= 0.0
+
+
+class TestPlanCache:
+    def test_hit_miss_counters_and_keying(self):
+        """Distinct dtype/t/hw/backend/tiling signatures get distinct plans;
+        identical signatures hit."""
+        clear_plan_cache()
+        w = make_weights(StencilSpec("box", 2, 1), seed=5)
+        base = dict(tile_m=16, tile_n=16)
+
+        p1 = stencil_plan(w, (32, 32), np.float32, 2, **base)
+        assert plan_cache_stats() == {"hits": 0, "misses": 1, "size": 1}
+
+        assert stencil_plan(w, (32, 32), np.float32, 2, **base) is p1
+        assert plan_cache_stats()["hits"] == 1
+
+        variants = [
+            stencil_plan(w, (32, 32), jnp.bfloat16, 2, **base),     # dtype
+            stencil_plan(w, (32, 32), np.float32, 3, **base),       # t
+            stencil_plan(w, (32, 32), np.float32, 2,                # hw
+                         hw=pm.A100_FLOAT, **base),
+            stencil_plan(w, (32, 32), np.float32, 2,                # override
+                         backend="reference", **base),
+            stencil_plan(w, (32, 32), np.float32, 2,                # tiling
+                         tile_m=32, tile_n=16),
+            stencil_plan(w, (64, 32), np.float32, 2, **base),       # grid
+        ]
+        assert len({id(p) for p in variants + [p1]}) == len(variants) + 1
+        stats = plan_cache_stats()
+        assert stats["misses"] == 1 + len(variants)
+        assert stats["size"] == 1 + len(variants)
+
+    def test_distinct_weights_do_not_collide(self):
+        """Same spec, different tap values => different plans (the cache
+        keys on the weight content digest, not just the inferred spec)."""
+        clear_plan_cache()
+        wa = make_weights(StencilSpec("box", 2, 1), seed=1)
+        wb = make_weights(StencilSpec("box", 2, 1), seed=2)
+        x = _x(32, 32)
+        pa = stencil_plan(wa, x.shape, x.dtype, 1, tile_m=16, tile_n=16)
+        pb = stencil_plan(wb, x.shape, x.dtype, 1, tile_m=16, tile_n=16)
+        assert pa is not pb
+        np.testing.assert_allclose(np.asarray(pa(x)),
+                                   np.asarray(stencil_direct_ref(x, wa, 1)),
+                                   atol=2e-5)
+        np.testing.assert_allclose(np.asarray(pb(x)),
+                                   np.asarray(stencil_direct_ref(x, wb, 1)),
+                                   atol=2e-5)
+
+    def test_wrapper_reuses_plan_without_reselection(self):
+        """Repeated stencil_apply with an identical signature: cache hits,
+        and select_backend is NOT invoked again (the acceptance criterion)."""
+        clear_plan_cache()
+        w = make_weights(StencilSpec("box", 2, 2), seed=7)
+        x = _x(32, 32)
+        y1 = stencil_apply(x, w, t=2, backend="auto", tile_m=16, tile_n=16)
+        after_first = selector.invocation_count()
+        s1 = plan_cache_stats()
+        for _ in range(3):
+            y = stencil_apply(x, w, t=2, backend="auto", tile_m=16, tile_n=16)
+            np.testing.assert_array_equal(np.asarray(y), np.asarray(y1))
+        s2 = plan_cache_stats()
+        assert selector.invocation_count() == after_first
+        assert s2["hits"] == s1["hits"] + 3
+        assert s2["misses"] == s1["misses"]
+
+    def test_use_cache_false_bypasses(self):
+        clear_plan_cache()
+        w = make_weights(StencilSpec("box", 2, 1), seed=0)
+        p1 = stencil_plan(w, (32, 32), np.float32, 1, tile_m=16, tile_n=16,
+                          use_cache=False)
+        p2 = stencil_plan(w, (32, 32), np.float32, 1, tile_m=16, tile_n=16,
+                          use_cache=False)
+        assert p1 is not p2
+        assert plan_cache_stats()["size"] == 0
+
+
+class TestSingleDecisionPath:
+    """ops.explain and the auto branch can never disagree: both ARE
+    plan.decision (regression for the pre-plan duplicated logic)."""
+
+    @pytest.mark.parametrize("shape", ["box", "star"])
+    @pytest.mark.parametrize("r", [1, 2])
+    @pytest.mark.parametrize("t", [1, 2, 4, 8])
+    def test_explain_equals_plan_decision(self, shape, r, t):
+        w = make_weights(StencilSpec(shape, 2, r), seed=r)
+        plan = stencil_plan(w, (128, 128), np.float32, t)
+        d = explain(w, t, dtype_bytes=4, hw=plan.hw)
+        assert d == plan.decision
+        assert plan.backend == plan.decision.backend   # no override => same
+
+    def test_decision_candidates_are_priced_registry_subset(self):
+        w = make_weights(StencilSpec("box", 2, 1), seed=0)
+        d = explain(w, 4, 4)
+        assert set(d.candidates) <= set(registered_backends())
+        # unpriced backends never show up as candidates
+        assert "reference" not in d.candidates
+        assert "legacy_direct" not in d.candidates
+
+
+class TestRegistry:
+    def test_unknown_backend_raises(self):
+        w = make_weights(StencilSpec("box", 2, 1), seed=0)
+        with pytest.raises(ValueError, match="unknown backend"):
+            stencil_apply(_x(32, 32), w, backend="gpu")
+        with pytest.raises(ValueError):
+            get_backend("gpu")
+
+    def test_duplicate_and_auto_registration_rejected(self):
+        with pytest.raises(ValueError, match="already registered"):
+            register_backend("direct", lambda ctx: None)
+        with pytest.raises(ValueError, match="auto"):
+            register_backend("auto", lambda ctx: None)
+
+    def test_custom_backend_is_additive(self):
+        """A plug-in backend (e.g. a future sparse unit) becomes dispatchable
+        through stencil_apply just by registering."""
+        name = "test_scaled_reference"
+
+        def build(ctx):
+            from repro.kernels import ref
+            w, t = ctx.weights, ctx.t
+
+            def run(x):
+                return ref.stencil_direct_ref(x, w, t)
+            return run
+
+        register_backend(name, build, description="test-only")
+        try:
+            assert name in registered_backends()
+            # BACKENDS is computed on access: plug-ins show up immediately
+            import repro.kernels as K
+            assert name in K.BACKENDS
+            w = make_weights(StencilSpec("box", 2, 1), seed=0)
+            x = _x(32, 32)
+            y = stencil_apply(x, w, t=2, backend=name)
+            np.testing.assert_allclose(np.asarray(y),
+                                       np.asarray(stencil_direct_ref(x, w, 2)),
+                                       atol=2e-5)
+            # unpriced: never appears in selection candidates
+            assert name not in explain(w, 2, 4).candidates
+        finally:
+            unregister_backend(name)
+        import repro.kernels as K
+        assert name not in K.BACKENDS
+
+    def test_priced_plugin_participates_in_selection(self):
+        """Registering a priced backend makes the selector consider it --
+        and invalidates previously cached 'auto' plans, so what executes
+        can never disagree with what explain() reports."""
+        name = "test_always_wins"
+        w = make_weights(StencilSpec("box", 2, 1), seed=0)
+        x = _x(32, 32)
+        stale = stencil_plan(w, x.shape, x.dtype, 3)     # cached pre-plugin
+
+        def build(ctx):
+            from repro.kernels import ref
+            wts, t = ctx.weights, ctx.t
+            return lambda x: ref.stencil_direct_ref(x, wts, t)
+
+        register_backend(name, build, price=lambda p: float("inf"))
+        try:
+            d = explain(w, 3, 4)
+            assert d.backend == name
+            assert name in d.reason      # plug-ins get a plug-in reason
+            plan = stencil_plan(w, x.shape, x.dtype, 3)  # NOT the stale plan
+            assert plan is not stale
+            assert plan.backend == name
+            np.testing.assert_allclose(
+                np.asarray(plan(x)),
+                np.asarray(stencil_direct_ref(x, w, 3)), atol=2e-5)
+        finally:
+            unregister_backend(name)
+        # after teardown a fresh build re-selects among the built-ins again
+        plan = stencil_plan(w, x.shape, x.dtype, 3)
+        assert plan.backend in registered_backends()
+        assert plan.backend != name
