@@ -1,16 +1,23 @@
-"""Substrate HBM-traffic benchmark: seed 9-neighbor scheme vs strip pipeline.
+"""Substrate HBM-traffic benchmark: seed 9-neighbor scheme vs whole-strip
+pipeline vs halo-row sub-blocked strips.
 
 The paper's whole argument is that stencils are memory-bound (I = K/D,
 Eq. 6), so the substrate's HBM traffic model IS the experiment: the seed
 scheme streamed nine full (tile, tile) blocks per output tile (9x read
-amplification); the strip scheme loads three full-width strips (3x), with
-the horizontal periodic halo materialized in-VMEM for free (DESIGN.md §3).
+amplification); the whole-strip scheme loads three full-width strips (3x);
+the sub-blocked scheme (DESIGN.md §3) loads each strip's own h-row blocks
+plus ONE h-block per vertical neighbor (1 + 2h/strip_m, ~1.1-1.25x at the
+benchmark strips), with the horizontal periodic halo materialized in-VMEM
+for free in all strip schemes.
 
 For Box/Star x r in {1,2,3} x t in {1,2,4,8} this emits, per substrate:
-  * neighbor-block loads issued per output tile (9 vs 3, analytic from the
-    BlockSpec structure),
+  * neighbor-block loads issued per output tile/strip (9 vs 3 vs
+    strip_m/h + 2, analytic from the BlockSpec structure),
   * per-step HBM read bytes (analytic, including the banded operand on the
-    MXU paths),
+    MXU paths) -- the ``read_bytes_step_*_subblocked`` columns show the
+    amplification falling from 3.0x to 1.125-1.25x for shallow halos
+    (halo <= strip_m/8, the whole BENCH_QUICK sweep), climbing back toward
+    3.0x only where t*r approaches the 32-row strip height,
   * measured us/step of the Pallas kernels (interpret mode on CPU -- honest
     relative numbers, labeled as such), VPU path and MXU path (seed
     monolithic vs strip ``fused_matmul_reuse``), executed through compiled
@@ -34,6 +41,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)), ".."
 
 from benchmarks.timing import time_us
 from repro.kernels import common, legacy, stencil_plan
+from repro.kernels.common import choose_hblock, substrate_read_amp
 from repro.kernels.stencil_matmul import build_bands
 from repro.stencil import StencilSpec, fuse_weights, make_weights
 
@@ -59,7 +67,8 @@ def _case(shape: str, r: int, t: int, x) -> dict:
     spec = StencilSpec(shape, 2, r)
     w = make_weights(spec, seed=r)
     wf = fuse_weights(w, t)
-    R = r * t
+    halo = r * t                      # fused-regime vertical halo at TILE strips
+    hb = choose_hblock(TILE, halo)
 
     bands_new = build_bands(w.astype(np.float32), TILE).shape
     bands_old = build_bands(wf.astype(np.float32), TILE).shape
@@ -68,38 +77,53 @@ def _case(shape: str, r: int, t: int, x) -> dict:
         "case": f"{spec.name}-t{t}", "shape": shape, "r": r, "t": t,
         "loads_per_tile_old": len(legacy.NEIGHBOR_OFFSETS_2D),
         "loads_per_tile_new": common.STRIP_NEIGHBOR_LOADS,
+        "loads_per_tile_subblocked": TILE // hb + 2,
+        "h_block": hb,
+        "read_amp_subblocked": substrate_read_amp(TILE, hb),
         # one fused launch advances t steps: per-step read traffic
         "read_bytes_step_direct_old": legacy.hbm_read_bytes_per_step(
             (N, N), TILE, TILE, DTYPE_BYTES) / t,
         "read_bytes_step_direct_new": common.hbm_read_bytes_per_step(
             (N, N), TILE, DTYPE_BYTES) / t,
+        "read_bytes_step_direct_subblocked": common.hbm_read_bytes_per_step(
+            (N, N), TILE, DTYPE_BYTES, h_block=hb) / t,
         "read_bytes_step_matmul_old": legacy.hbm_read_bytes_per_step(
             (N, N), TILE, TILE, DTYPE_BYTES, bands_shape=bands_old) / t,
         "read_bytes_step_matmul_new": common.hbm_read_bytes_per_step(
             (N, N), TILE, DTYPE_BYTES, bands_shape=bands_new) / t,
+        "read_bytes_step_matmul_subblocked": common.hbm_read_bytes_per_step(
+            (N, N), TILE, DTYPE_BYTES, bands_shape=bands_new,
+            h_block=hb) / t,
     }
 
     # Execution goes through compiled plans: selection/sizing/weight
     # composition happen at build (accounted separately below), the plan's
     # jitted callable is what gets timed -- time_us's warmup still absorbs
     # trace+compile, so the timed iterations are steady-state execution with
-    # zero re-analysis.  Backends map old->new substrate: the seed 9-tile
-    # foil registers as legacy_*, the strip pipeline as fused_direct /
-    # fused_matmul_reuse (both degenerate to the plain kernels at t=1).
+    # zero re-analysis.  Backends map the three substrates: the seed 9-tile
+    # foil registers as legacy_*, the whole-strip pipeline as
+    # *_wholestrip, and the default sub-blocked substrate as fused_direct /
+    # fused_matmul_reuse (all degenerate to the plain kernels at t=1).
     paths = {
         "us_step_direct_old": stencil_plan(
             w, x.shape, x.dtype, t, backend="legacy_direct",
             tile_m=TILE, tile_n=TILE, interpret=True),
         "us_step_direct_new": stencil_plan(
-            w, x.shape, x.dtype, t, backend="fused_direct",
+            w, x.shape, x.dtype, t, backend="fused_direct_wholestrip",
             tile_m=TILE, interpret=True),
+        "us_step_direct_subblocked": stencil_plan(
+            w, x.shape, x.dtype, t, backend="fused_direct",
+            tile_m=TILE, h_block=hb, interpret=True),
         # MXU paths: seed monolithic fusion vs strip intermediate reuse
         "us_step_matmul_old": stencil_plan(
             w, x.shape, x.dtype, t, backend="legacy_matmul",
             tile_m=TILE, tile_n=TILE, interpret=True),
         "us_step_matmul_new": stencil_plan(
-            w, x.shape, x.dtype, t, backend="fused_matmul_reuse",
+            w, x.shape, x.dtype, t, backend="fused_matmul_reuse_wholestrip",
             tile_m=TILE, tile_n=TILE, interpret=True),
+        "us_step_matmul_subblocked": stencil_plan(
+            w, x.shape, x.dtype, t, backend="fused_matmul_reuse",
+            tile_m=TILE, tile_n=TILE, h_block=hb, interpret=True),
     }
     iters = 2 if os.environ.get("BENCH_QUICK") else 5
     for key, plan in paths.items():
@@ -127,18 +151,25 @@ def run() -> list[str]:
                    "timing": "interpret-mode CPU (relative only)",
                    "cases": rows}, f, indent=1)
 
-    out = ["traffic.case,loads/tile_old,loads/tile_new,read_amp_direct,"
-           "rdMB_step_matmul_old,rdMB_step_matmul_new,"
-           "us_step_dir_old,us_step_dir_new,us_step_mm_old,us_step_mm_new"]
+    out = ["traffic.case,loads_old/new/sub,read_amp_direct_new,"
+           "read_amp_direct_sub,rdMB_step_mm_old,rdMB_step_mm_new,"
+           "rdMB_step_mm_sub,us_dir_old,us_dir_new,us_dir_sub,"
+           "us_mm_old,us_mm_new,us_mm_sub"]
+    grid_bytes = N * N * DTYPE_BYTES
     for c in rows:
-        amp = c["read_bytes_step_direct_old"] / c["read_bytes_step_direct_new"]
+        amp_new = c["read_bytes_step_direct_new"] * c["t"] / grid_bytes
+        amp_sub = c["read_bytes_step_direct_subblocked"] * c["t"] / grid_bytes
         out.append(
-            f"traffic.{c['case']},{c['loads_per_tile_old']},"
-            f"{c['loads_per_tile_new']},{amp:.2f}x,"
+            f"traffic.{c['case']},{c['loads_per_tile_old']}/"
+            f"{c['loads_per_tile_new']}/{c['loads_per_tile_subblocked']},"
+            f"{amp_new:.2f}x,{amp_sub:.2f}x,"
             f"{c['read_bytes_step_matmul_old']/2**20:.3f},"
             f"{c['read_bytes_step_matmul_new']/2**20:.3f},"
+            f"{c['read_bytes_step_matmul_subblocked']/2**20:.3f},"
             f"{c['us_step_direct_old']:.0f},{c['us_step_direct_new']:.0f},"
-            f"{c['us_step_matmul_old']:.0f},{c['us_step_matmul_new']:.0f}")
+            f"{c['us_step_direct_subblocked']:.0f},"
+            f"{c['us_step_matmul_old']:.0f},{c['us_step_matmul_new']:.0f},"
+            f"{c['us_step_matmul_subblocked']:.0f}")
     return out
 
 

@@ -13,11 +13,8 @@ if [ -z "${BENCH_FULL:-}" ]; then
   export BENCH_QUICK=1
 fi
 
-# Tier-1 (ROADMAP.md).  Don't abort before the benchmark smoke runs -- a
-# known-failing test should still let the harness exercise the kernels.
-rc=0
-python -m pytest -x -q || rc=$?
+# Tier-1 (ROADMAP.md).  The seed test debt is zero: any failure is a real
+# regression, so fail fast before the benchmark smoke.
+python -m pytest -x -q
 
 python benchmarks/run.py
-
-exit "$rc"

@@ -98,11 +98,21 @@ TPU_V5E_INT8_CEILING = dataclasses.replace(
 # ---------------------------------------------------------------------------
 @dataclasses.dataclass(frozen=True)
 class StencilWorkload:
-    """A stencil problem instance bound to a fusion depth and dtype."""
+    """A stencil problem instance bound to a fusion depth and dtype.
+
+    ``read_amp`` is the substrate's grid-read amplification: 1.0 models the
+    paper's ideal (each point read once), 1 + 2h/strip_m the halo-row
+    sub-blocked strip substrate, 3.0 whole neighbor strips, 9.0 the seed
+    scheme (see ``repro.kernels.common.substrate_read_amp``).  It scales
+    M and therefore every intensity below -- the substrate's traffic model
+    IS the experiment (Eq. 6), so the selector prices the substrate it
+    actually runs on.
+    """
 
     spec: StencilSpec
     t: int = 1                   # fusion depth
     dtype_bytes: int = 4         # D
+    read_amp: float = 1.0        # substrate read amplification (>= 1)
 
     @property
     def K(self) -> int:
@@ -119,8 +129,9 @@ class StencilWorkload:
         return self.t * 2 * self.K
 
     def bytes_per_output(self) -> float:
-        """M = 2D: one read + one write; fusion keeps this constant."""
-        return 2 * self.dtype_bytes
+        """M = (read_amp + 1)·D: amplified read + one write; fusion keeps
+        this constant (= the paper's 2D at the ideal read_amp of 1)."""
+        return (self.read_amp + 1.0) * self.dtype_bytes
 
     def intensity_vector(self) -> float:
         return self.flops_vector() / self.bytes_per_output()

@@ -43,6 +43,10 @@ class PricingContext:
     s_mono: float                 # structural S at the fused radius t*r
     s_reuse: float                # structural S at the base radius r
     strip_m: int
+    #: Resolved halo sub-block height (0 = whole-strip) -- INFORMATIONAL
+    #: for plug-in pricers: its read amplification is already folded into
+    #: ``workload.read_amp``, which is the canonical channel.
+    h_block: Optional[int] = None
     use_sparse_unit: bool = False
 
 
@@ -64,27 +68,41 @@ def select_backend(
     tile_n: int = 128,
     use_sparse_unit: bool = False,
     strip_m: int = 128,
+    h_block: Optional[int] = None,
 ) -> Decision:
     """Pick the predicted-fastest backend for ``t`` fused steps of ``spec``.
 
     Candidates are enumerated from the backend registry
     (``repro.kernels.registry``): every registered backend with a ``price``
     hook that returns a throughput for this workload competes; the rest
-    (reference oracle, legacy foils) are never selected.
+    (reference oracle, legacy/whole-strip foils) are never selected.
 
     ``sparsity`` overrides the scheme's structural S for BOTH matrix
     regimes (useful to model published schemes); by default the monolithic
     regime uses the banded S at the fused radius t*r while the reuse regime
     uses S at the base radius r -- the structural reason reuse keeps its
     MXU efficiency at depth.
+
+    ``h_block`` is the substrate's halo sub-block height (``None`` = the
+    kernels' own auto choice, ``0`` = whole-strip): the workload's memory
+    term M uses the resulting read amplification 1 + 2h/strip_m, so
+    intensities -- and the VPU-vs-MXU crossover -- price the substrate
+    that actually runs rather than the paper's ideal M = 2D.
     """
     global _invocations
     _invocations += 1
-    # Deferred: kernels.registry pulls in the Pallas kernel modules, which
-    # must not load just because repro.core was imported.
+    # Deferred: kernels.* pulls in the Pallas kernel modules, which must
+    # not load just because repro.core was imported.
+    from repro.kernels.common import choose_hblock, substrate_read_amp
     from repro.kernels.registry import candidate_units, priced_candidates
 
-    w = pm.StencilWorkload(spec, t, dtype_bytes)
+    # Auto h_block resolves at the FUSED-regime halo t*r.  This prices every
+    # candidate's substrate faithfully: the fused regimes build with exactly
+    # this halo, and the sequential regimes (direct/matmul) only price at
+    # t=1 -- their t>1 hooks return None -- where t*r == r.
+    hb = choose_hblock(strip_m, t * spec.radius) if h_block is None else h_block
+    read_amp = substrate_read_amp(strip_m, hb)
+    w = pm.StencilWorkload(spec, t, dtype_bytes, read_amp=read_amp)
     s_mono = sparsity if sparsity is not None else \
         pm.sparsity_banded(spec.radius * t, tile_n)
     s_reuse = sparsity if sparsity is not None else \
@@ -93,7 +111,7 @@ def select_backend(
 
     candidates = priced_candidates(PricingContext(
         workload=w, hw=hw, comparison=cmp_, s_mono=s_mono, s_reuse=s_reuse,
-        strip_m=strip_m, use_sparse_unit=use_sparse_unit))
+        strip_m=strip_m, h_block=hb, use_sparse_unit=use_sparse_unit))
     if not candidates:
         raise RuntimeError("no registered backend priced this workload")
 

@@ -13,7 +13,9 @@ from .registry import (register_backend, unregister_backend,
                        registered_backends, get_backend)
 from .stencil_direct import stencil_direct
 from .stencil_matmul import stencil_matmul, build_bands, band_sparsity
-from .common import choose_strip, choose_tile, strip_in_specs
+from .common import (choose_hblock, choose_strip, choose_strip_blocks,
+                     choose_tile, resolve_strip_blocks, strip_in_specs,
+                     substrate_read_amp)
 
 
 def __getattr__(name):

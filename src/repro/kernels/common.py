@@ -1,4 +1,4 @@
-"""Shared Pallas plumbing: strip-mined halo BlockSpecs and tile assembly.
+"""Shared Pallas plumbing: halo-row sub-blocked strip substrate.
 
 TPU Pallas BlockSpecs address non-overlapping blocks (element offset = block
 index * block shape), so halo reads cannot be expressed as one overlapping
@@ -7,21 +7,39 @@ nine times with shifted ``index_map``s -- one full (tile_m, tile_n) block
 per 2D neighbor -- which streams 9x the grid through HBM per step even
 though only halo-wide edges of eight of those blocks are ever read.
 
-The strip-mined scheme here fixes the traffic model (DESIGN.md §3):
+PR 1 replaced that with WHOLE row strips: a 1D grid over (strip_m, N)
+bands, each output strip loading itself plus its full top/bottom neighbor
+strips (3 loads, modulo wrap in the index map = periodic rows), with the
+horizontal periodic halo materialized in-VMEM (``wrap_columns``) at zero
+HBM cost.  3x read amplification -- but the two neighbor strips are still
+fetched whole although only ``halo`` rows of each are ever read.
 
-  * the grid is 1D over ROW STRIPS of shape (strip_m, N) -- each strip spans
-    the full grid width;
-  * the vertical halo comes from just the top/bottom neighbor strips, so one
-    input is referenced three times (modulo wrap in the index map = periodic
-    rows), i.e. 3 block loads per output strip instead of 9;
-  * the horizontal periodic halo costs no HBM traffic at all: every strip
-    holds complete rows, so the wrap columns are materialized in-VMEM by
-    concatenation (``wrap_columns``).
+This module now implements the halo-row SUB-BLOCKED scheme (DESIGN.md §3):
 
-Read amplification drops from 9x to 3x, and because every row of the
-extended strip is a TRUE global row, the horizontal wrap can be re-applied
-to in-VMEM intermediates at every fused step -- the property that enables
-the ``fused_matmul_reuse`` regime (DESIGN.md §4).
+  * the grid is 2D over (strip, h-block): block height ``h_block`` divides
+    ``strip_m`` (``nb = strip_m / h_block`` blocks per strip);
+  * ONE input reference of block shape (h_block, N) with index map
+    ``(i*nb + j - 1) mod (H/h_block)`` walks, for output strip i, the
+    top neighbor's LAST h-block (j=0), the strip's own nb blocks
+    (j=1..nb), and the bottom neighbor's FIRST h-block (j=nb+1) -- the
+    only neighbor rows that can contain halo rows (h_block >= halo);
+  * each block is copied into a VMEM scratch of (strip_m + 2*h_block, N);
+    on the final j the kernel computes on the assembled halo-extended
+    strip and writes the output strip (``pl.when``), so reads per strip
+    are ``strip_m + 2*h_block`` rows:
+
+        reads/step = (1 + 2*h_block/strip_m) * H*W*D
+
+    vs 3x for whole neighbor strips and 9x for the seed scheme.  The
+    modulo index map keeps periodic top/bottom boundaries for free, and
+    every scratch row is still a TRUE global row, so the horizontal wrap
+    re-applies to in-VMEM intermediates at every fused step -- the
+    property that enables ``fused_matmul_reuse`` (DESIGN.md §4).
+
+``h_block=0`` (or ``subblocked=False`` at the kernel level) selects the
+whole-strip 3-load substrate -- kept registered as the ``*_wholestrip``
+benchmark foils so ``benchmarks/traffic.py`` can measure seed / whole-strip
+/ sub-blocked three ways.
 """
 from __future__ import annotations
 
@@ -30,16 +48,18 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
-#: Vertical neighbor offsets of the strip scheme (up, center, down) -- the
-#: strip analogue of the seed's 9-entry 2D offset table (kernels.legacy).
+#: Vertical neighbor offsets of the whole-strip scheme (up, center, down) --
+#: the strip analogue of the seed's 9-entry 2D offset table (kernels.legacy).
 NEIGHBOR_OFFSETS_STRIP = (-1, 0, 1)
 
-#: Per-output-strip input block loads issued by the strip substrate.  The
-#: seed scheme issued 9 (see kernels.legacy.NEIGHBOR_OFFSETS_2D).
+#: Per-output-strip input block loads issued by the WHOLE-strip substrate.
+#: The seed scheme issued 9 (kernels.legacy.NEIGHBOR_OFFSETS_2D); the
+#: sub-blocked substrate issues ``strip_m/h_block + 2`` h-row blocks.
 STRIP_NEIGHBOR_LOADS = len(NEIGHBOR_OFFSETS_STRIP)
 
-#: Default VMEM working-set budget for ``choose_strip`` (bytes).  ~16 MB per
+#: Default VMEM working-set budget for strip sizing (bytes).  ~16 MB per
 #: core on TPU v4/v5; leave half for double buffering and the output strip.
 VMEM_BUDGET_BYTES = 8 * 1024 * 1024
 
@@ -47,9 +67,9 @@ VMEM_BUDGET_BYTES = 8 * 1024 * 1024
 def strip_in_specs(strip_m: int, n: int, grid_m: int):
     """Three BlockSpecs addressing row strips (i-1, i, i+1) mod grid_m.
 
-    Each spec covers a full-width (strip_m, n) band; modulo wrap in the
-    index map yields periodic top/bottom boundaries for free (matching the
-    ppermute ring of the distributed runtime).
+    The WHOLE-strip substrate: each spec covers a full-width (strip_m, n)
+    band; modulo wrap in the index map yields periodic top/bottom boundaries
+    for free (matching the ppermute ring of the distributed runtime).
     """
     specs = []
     for di in NEIGHBOR_OFFSETS_STRIP:
@@ -62,11 +82,43 @@ def strip_in_specs(strip_m: int, n: int, grid_m: int):
     return specs
 
 
+def subblock_in_spec(h_block: int, n: int, nb: int, total_blocks: int):
+    """The single h-block BlockSpec of the sub-blocked substrate.
+
+    Grid cell (i, j), j in [0, nb+2), fetches h-block
+    ``(i*nb + j - 1) mod total_blocks``: j=0 is the top neighbor strip's
+    last h-block, j=1..nb the strip's own blocks, j=nb+1 the bottom
+    neighbor's first h-block.  Modulo wrap = periodic rows, exactly as the
+    whole-strip index maps.
+    """
+    return pl.BlockSpec(
+        (h_block, n),
+        lambda i, j: ((i * nb + j - 1) % total_blocks, 0),
+    )
+
+
+def subblock_store(scratch_ref, block_ref, h_block: int) -> None:
+    """Copy grid cell (i, j)'s h-block into scratch rows [j*h, (j+1)*h)."""
+    j = pl.program_id(1)
+    scratch_ref[pl.ds(j * h_block, h_block), :] = block_ref[...]
+
+
+def subblock_extended(scratch_ref, h_block: int, strip_m: int,
+                      halo: int) -> jax.Array:
+    """The (strip_m + 2*halo, n) halo-extended strip from assembled scratch.
+
+    Scratch rows cover global rows [i*strip_m - h_block,
+    (i+1)*strip_m + h_block); the extended strip needs only ``halo`` of the
+    ``h_block`` neighbor rows at each end.
+    """
+    return scratch_ref[h_block - halo : h_block + strip_m + halo, :]
+
+
 def assemble_strip(top_ref, mid_ref, bot_ref, halo: int) -> jax.Array:
     """Build the (strip_m + 2h, n) vertically halo-extended strip in VMEM.
 
-    Only the bottom ``halo`` rows of the top neighbor and the top ``halo``
-    rows of the bottom neighbor are read.
+    Whole-strip substrate: only the bottom ``halo`` rows of the top neighbor
+    and the top ``halo`` rows of the bottom neighbor are read.
     """
     h = halo
     return jnp.concatenate(
@@ -78,9 +130,9 @@ def wrap_columns(x: jax.Array, halo: int) -> jax.Array:
     """Materialize the periodic horizontal halo in-VMEM: (m, n) -> (m, n+2h).
 
     Valid whenever every row of ``x`` is a complete global row -- true for
-    strips and for all intermediates derived from them, which is what lets
-    fused kernels re-wrap at every step instead of carrying a 2*t*r-wide
-    horizontal halo.
+    strips, for assembled sub-block scratch rows, and for all intermediates
+    derived from them, which is what lets fused kernels re-wrap at every
+    step instead of carrying a 2*t*r-wide horizontal halo.
     """
     h = halo
     return jnp.concatenate([x[:, -h:], x, x[:, :h]], axis=1)
@@ -96,6 +148,62 @@ def choose_tile(n: int, preferred: int = 128) -> int:
     return n
 
 
+def choose_hblock(strip_m: int, halo: int) -> int:
+    """Halo-block height: smallest divisor of strip_m >= max(halo, strip/16).
+
+    ``h_block`` must cover the halo in one neighbor block (>= halo) and
+    divide the strip.  Smaller blocks cut traffic (amplification is
+    1 + 2h/strip_m) but multiply grid cells and shrink below the TPU
+    sublane tile for thin strips, so we floor at strip_m/16 -- amplification
+    lands at ~1.125 whenever the halo allows, and degrades gracefully
+    toward the whole-strip 3x as the halo forces h_block up (h_block =
+    strip_m whenever no proper divisor reaches the halo).
+    """
+    if strip_m <= 0:
+        raise ValueError(f"strip height must be positive, got {strip_m}")
+    floor = max(halo, strip_m / 16)
+    cands = [d for d in range(1, strip_m + 1)
+             if strip_m % d == 0 and d >= floor]
+    return min(cands) if cands else strip_m
+
+
+def choose_strip_blocks(
+    h: int,
+    n: int,
+    halo: int,
+    dtype_bytes: int = 4,
+    vmem_budget: int = VMEM_BUDGET_BYTES,
+    preferred: int = 128,
+) -> tuple:
+    """Jointly size (strip_m, h_block) under the VMEM budget.
+
+    ``strip_m``: a divisor of ``h``, >= halo, fitting VMEM; among fitting
+    divisors prefer the largest <= ``preferred`` (taller strips both
+    amortize per-cell cost and shrink the halo read factor 1 + 2h/strip_m).
+    ``h_block``: ``choose_hblock`` of the chosen strip.  The input-side
+    working set is priced at the WORSE of the two substrates -- 3 full
+    strips (whole-strip) vs scratch + in-flight h-block (sub-blocked) --
+    so a strip that fits the budget fits whichever substrate the caller
+    ends up running (the ``*_wholestrip`` foils share this sizing);
+    both substrates add the horizontally-extended compute tile and the
+    output strip.
+    """
+
+    def working_set(d: int) -> int:
+        hb = choose_hblock(d, halo)
+        inputs = max(3 * d * n, (d + 2 * hb) * n + hb * n)
+        return (inputs
+                + (d + 2 * halo) * (n + 2 * halo) + d * n) * dtype_bytes
+
+    divisors = [d for d in range(1, h + 1) if h % d == 0]
+    viable = [d for d in divisors if d >= halo] or [h]
+    fitting = [d for d in viable if working_set(d) <= vmem_budget]
+    pool = fitting or [min(viable)]
+    under = [d for d in pool if d <= preferred]
+    strip_m = max(under) if under else min(pool)
+    return strip_m, choose_hblock(strip_m, halo)
+
+
 def choose_strip(
     h: int,
     n: int,
@@ -104,37 +212,23 @@ def choose_strip(
     vmem_budget: int = VMEM_BUDGET_BYTES,
     preferred: int = 128,
 ) -> int:
-    """Pick a strip height: a divisor of ``h``, >= halo, fitting VMEM.
-
-    The working set of one grid cell is the three input strips, the
-    vertically+horizontally extended tile, and the output strip.  Among
-    divisors that fit the budget, prefer the largest one <= ``preferred``
-    (fewer grid cells amortize the fixed per-cell cost); if none fits, fall
-    back to the smallest viable divisor so the kernel still launches and
-    the compiler surfaces the VMEM pressure.
-    """
-
-    def working_set(d: int) -> int:
-        return (3 * d * n + (d + 2 * halo) * (n + 2 * halo) + d * n) * dtype_bytes
-
-    divisors = [d for d in range(1, h + 1) if h % d == 0]
-    viable = [d for d in divisors if d >= halo] or [h]
-    fitting = [d for d in viable if working_set(d) <= vmem_budget]
-    pool = fitting or [min(viable)]
-    under = [d for d in pool if d <= preferred]
-    return max(under) if under else min(pool)
+    """Strip height only (see ``choose_strip_blocks`` for the joint choice)."""
+    return choose_strip_blocks(h, n, halo, dtype_bytes, vmem_budget,
+                               preferred)[0]
 
 
 def validate_tiling(shape, strip_m: int, tile_n: int, halo: int,
-                    radius: int = None) -> None:
+                    radius: int = None, h_block: int = None) -> None:
     """Strip-substrate tiling constraints.
 
-    ``strip_m`` is the strip height (rows per grid cell); ``tile_n`` is the
-    column-tile width of the banded MXU contraction (pass the full width for
-    the VPU path, which never column-tiles).  ``radius`` is the per-step
+    ``strip_m`` is the strip height (rows per output block); ``tile_n`` is
+    the column-tile width of the banded MXU contraction (pass the full width
+    for the VPU path, which never column-tiles).  ``radius`` is the per-step
     wrap radius -- the only width constraint, since the horizontal halo is
     re-wrapped at radius r each step regardless of fusion depth (defaults
     to ``halo`` for callers that run a single step at the full radius).
+    ``h_block`` (sub-blocked substrate) must divide ``strip_m`` and cover
+    the vertical halo; pass ``None``/0 for the whole-strip substrate.
     """
     h, w = shape
     if h % strip_m or w % tile_n:
@@ -146,6 +240,16 @@ def validate_tiling(shape, strip_m: int, tile_n: int, halo: int,
             f"halo {halo} exceeds strip height {strip_m}; "
             "lower fusion depth or enlarge strips"
         )
+    if h_block:
+        if strip_m % h_block:
+            raise ValueError(
+                f"h_block {h_block} does not divide strip height {strip_m}"
+            )
+        if h_block < halo:
+            raise ValueError(
+                f"halo {halo} exceeds h_block {h_block}; "
+                "enlarge h_block or lower fusion depth"
+            )
     r = halo if radius is None else radius
     if w < r:
         raise ValueError(
@@ -153,19 +257,134 @@ def validate_tiling(shape, strip_m: int, tile_n: int, halo: int,
         )
 
 
+def strip_substrate_call(compute, x: jax.Array, strip_m: int, h_block: int,
+                         halo: int, interpret: bool, consts=()) -> jax.Array:
+    """Launch ``compute`` over every output strip, on either halo substrate.
+
+    The ONE place both strip kernels lower through -- substrate changes
+    (semantics, buffering, a third scheme) happen here, never per kernel.
+    ``compute(cur, *const_refs)`` receives the (strip_m + 2*halo, n) f32
+    halo-extended strip plus one VMEM ref per ``consts`` operand (operands
+    constant across the grid, e.g. banded weights) and returns the
+    (strip_m, n) f32 output strip; the launcher casts back to ``x.dtype``.
+    ``h_block=0`` runs the whole-strip 3-load pipeline; otherwise the
+    sub-blocked (strip, h-block) grid with VMEM scratch assembly (module
+    docstring).
+    """
+    h, n = x.shape
+    gm = h // strip_m
+    out_dtype = x.dtype
+
+    def const_spec(c, n_grid_dims):
+        zeros = (0,) * c.ndim
+        if n_grid_dims == 1:
+            return pl.BlockSpec(c.shape, lambda i, z=zeros: z)
+        return pl.BlockSpec(c.shape, lambda i, j, z=zeros: z)
+
+    if not h_block:
+        def kern_strip(top_ref, mid_ref, bot_ref, *rest):
+            *const_refs, out_ref = rest
+            cur = assemble_strip(top_ref, mid_ref, bot_ref,
+                                 halo).astype(jnp.float32)
+            out_ref[...] = compute(cur, *const_refs).astype(out_dtype)
+
+        return pl.pallas_call(
+            kern_strip,
+            grid=(gm,),
+            in_specs=strip_in_specs(strip_m, n, gm)
+            + [const_spec(c, 1) for c in consts],
+            out_specs=pl.BlockSpec((strip_m, n), lambda i: (i, 0)),
+            out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+            interpret=interpret,
+        )(x, x, x, *consts)
+
+    nb = strip_m // h_block
+
+    def kern_sub(blk_ref, *rest):
+        *const_refs, out_ref, scratch_ref = rest
+        subblock_store(scratch_ref, blk_ref, h_block)
+
+        @pl.when(pl.program_id(1) == nb + 1)
+        def _compute():
+            cur = subblock_extended(scratch_ref, h_block, strip_m,
+                                    halo).astype(jnp.float32)
+            out_ref[...] = compute(cur, *const_refs).astype(out_dtype)
+
+    return pl.pallas_call(
+        kern_sub,
+        grid=(gm, nb + 2),
+        in_specs=[subblock_in_spec(h_block, n, nb, h // h_block)]
+        + [const_spec(c, 2) for c in consts],
+        out_specs=pl.BlockSpec((strip_m, n), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        scratch_shapes=[pltpu.VMEM((strip_m + 2 * h_block, n), x.dtype)],
+        interpret=interpret,
+    )(x, *consts)
+
+
+def substrate_read_amp(strip_m: int, h_block: int) -> float:
+    """Analytic grid-read amplification of one kernel launch.
+
+    Sub-blocked substrate: each output strip streams its own rows once plus
+    one h-block of each vertical neighbor -> 1 + 2*h_block/strip_m.
+    Whole-strip substrate (``h_block=0``): 3 full strips -> 3.0.  ``None``
+    is rejected: everywhere else in the kernel API it means "auto", which
+    this function cannot resolve (it has no halo) -- resolve first
+    (``choose_hblock``) or pass 0 explicitly.
+    """
+    if h_block is None:
+        raise ValueError("h_block=None is 'auto' in the kernel API; resolve "
+                         "it via choose_hblock first, or pass 0 for the "
+                         "whole-strip substrate")
+    if h_block == 0:
+        return float(STRIP_NEIGHBOR_LOADS)
+    return 1.0 + 2.0 * h_block / strip_m
+
+
+def resolve_strip_blocks(grid_shape, halo: int, dtype_bytes: int,
+                         tile_m: int = None, h_block: int = None) -> tuple:
+    """Resolve (strip_m, h_block) from possibly-``None`` user requests.
+
+    THE shared auto-sizing rule: both strip kernels and
+    ``registry.PlanContext.resolve_blocks`` call this, so plan-level and
+    kernel-level sizing can never drift apart.  ``tile_m=None`` sizes both
+    jointly (``choose_strip_blocks``); an explicit ``tile_m`` is clamped to
+    the grid and, when ``h_block`` is also ``None``, gets ``choose_hblock``
+    of the clamped strip.  ``h_block=0`` passes through (whole-strip).
+    """
+    h, wid = grid_shape
+    if tile_m is None:
+        strip_m, auto_hb = choose_strip_blocks(h, wid, halo, dtype_bytes)
+    else:
+        strip_m, auto_hb = min(tile_m, h), None
+    if h_block is None:
+        h_block = choose_hblock(strip_m, halo) if auto_hb is None else auto_hb
+    return strip_m, h_block
+
+
 def hbm_read_bytes_per_step(shape, strip_m: int, dtype_bytes: int,
-                            bands_shape=None) -> int:
+                            bands_shape=None, h_block: int = 0) -> int:
     """Analytic HBM read traffic of one strip-substrate kernel launch.
 
-    Each of the ``h/strip_m`` grid cells streams three (strip_m, n) blocks,
-    so the grid is read 3x per step (vs 9x for kernels.legacy); the banded
-    operand (if any) is re-streamed per grid cell.
+    Whole-strip (``h_block=0``, the default -- this is an analytic model
+    with no halo to auto-resolve from, so ``None`` is rejected just like
+    ``substrate_read_amp``): each of the ``h/strip_m`` grid cells streams
+    three (strip_m, n) blocks -> the grid is read 3x per step (vs 9x for
+    kernels.legacy).  Sub-blocked (``h_block > 0``): each output strip
+    streams ``strip_m/h_block + 2`` (h_block, n) blocks -> the grid is
+    read ``1 + 2*h_block/strip_m`` times.  The banded operand (if any) is
+    charged once per output strip (its block index is constant within a
+    strip's revisit chain).
     """
     import numpy as np
 
     h, w = shape
     gm = h // strip_m
-    total = gm * STRIP_NEIGHBOR_LOADS * strip_m * w * dtype_bytes
+    # One formula for both substrates: substrate_read_amp is the model (and
+    # rejects the h_block=None 'auto' sentinel); rows = strip_m * amp is
+    # exact (3*strip_m whole-strip, strip_m + 2*h_block sub-blocked).
+    rows_per_strip = round(strip_m * substrate_read_amp(strip_m, h_block))
+    total = gm * rows_per_strip * w * dtype_bytes
     if bands_shape is not None:
         total += gm * int(np.prod(bands_shape)) * dtype_bytes
     return total

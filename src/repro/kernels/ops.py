@@ -19,6 +19,8 @@ Backends (see ``repro.kernels.registry``; any registered name is accepted)
   reference           jnp oracle (debug)
   legacy_direct/      seed 9-tile substrate (benchmark foil)
   legacy_matmul
+  *_wholestrip        the five regimes on the whole-strip 3-load substrate
+                      (benchmark foils; default is halo-row sub-blocked)
   auto                selector decides among the priced backends
 
 ``interpret`` defaults to True off-TPU so every path is CPU-checkable; on a
@@ -51,6 +53,7 @@ def stencil_apply(
     hw: pm.HardwareSpec = pm.TPU_V5E_BF16,
     tile_m: Optional[int] = None,
     tile_n: Optional[int] = None,
+    h_block: Optional[int] = None,
     interpret: Optional[bool] = None,
     compute_dtype=None,
 ) -> jax.Array:
@@ -64,7 +67,7 @@ def stencil_apply(
     plan = stencil_plan(
         weights, x.shape, x.dtype, t, hw=hw,
         backend=None if backend == "auto" else backend,
-        tile_m=tile_m, tile_n=tile_n, interpret=interpret,
+        tile_m=tile_m, tile_n=tile_n, h_block=h_block, interpret=interpret,
         compute_dtype=compute_dtype,
     )
     return plan(x)
@@ -73,12 +76,26 @@ def stencil_apply(
 def explain(
     weights, t: int, dtype_bytes: int = 4,
     hw: pm.HardwareSpec = pm.TPU_V5E_BF16, tile_n: int = 128,
-    strip_m: int = 128,
+    strip_m: int = 128, h_block: Optional[int] = None,
+    grid_shape=None, tile_m: Optional[int] = None,
 ) -> Decision:
     """Expose the dispatch decision (scenario, predicted speedup, reason).
 
     Delegates to ``repro.kernels.plan.decide`` -- the same single decision
-    path plan building and the ``auto`` backend consult, so ``explain`` can
-    never disagree with what actually runs."""
-    return decide(spec_from_weights(weights), t, dtype_bytes, hw,
-                  tile_n=tile_n, strip_m=strip_m)
+    path plan building and the ``auto`` backend consult.  Plans price the
+    strip/h-block geometry they resolve FOR THEIR GRID, so pass
+    ``grid_shape`` -- plus the same ``tile_m``/``h_block`` pins you would
+    hand ``stencil_plan`` -- and the identical resolution runs here,
+    guaranteeing ``explain`` agrees with what such a plan actually
+    executes (``strip_m`` is then superseded by the resolution).  Without
+    ``grid_shape`` the decision is priced at the documented defaults
+    (strip_m=128, auto h_block), which only coincide with plans whose
+    grids resolve to them."""
+    spec = spec_from_weights(weights)
+    if grid_shape is not None:
+        from .common import resolve_strip_blocks
+        strip_m, h_block = resolve_strip_blocks(
+            tuple(int(n) for n in grid_shape), t * spec.radius, dtype_bytes,
+            tile_m, h_block)
+    return decide(spec, t, dtype_bytes, hw,
+                  tile_n=tile_n, strip_m=strip_m, h_block=h_block)

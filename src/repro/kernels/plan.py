@@ -58,12 +58,13 @@ def decide(
     spec: StencilSpec, t: int, dtype_bytes: int,
     hw: pm.HardwareSpec = pm.TPU_V5E_BF16,
     tile_n: int = 128, strip_m: int = 128,
+    h_block: Optional[int] = None,
 ) -> Decision:
     """THE decision path: plan building, ``stencil_apply(backend="auto")``
     and ``ops.explain`` all consult this one function, so they can never
     disagree about the priced ``Decision``."""
     return select_backend(spec, t, dtype_bytes=dtype_bytes, hw=hw,
-                          tile_n=tile_n, strip_m=strip_m)
+                          tile_n=tile_n, strip_m=strip_m, h_block=h_block)
 
 
 class StencilPlan:
@@ -207,6 +208,7 @@ def stencil_plan(
     backend: Optional[str] = None,
     tile_m: Optional[int] = None,
     tile_n: Optional[int] = None,
+    h_block: Optional[int] = None,
     interpret: Optional[bool] = None,
     compute_dtype=None,
     use_cache: bool = True,
@@ -229,6 +231,8 @@ def stencil_plan(
         name (``repro.kernels.registry.registered_backends()``).
       tile_m/tile_n: explicit strip height / column-tile width (``None`` =
         auto-sized exactly as the kernels themselves would).
+      h_block: halo sub-block height of the strip substrate (``None`` =
+        auto, ``0`` = whole-strip 3-load substrate); part of the cache key.
       interpret: Pallas interpret mode; ``None`` = off-TPU default.
       use_cache: bypass the process-wide plan cache when ``False``.
     """
@@ -255,7 +259,7 @@ def stencil_plan(
     # under overwrite=True) predates a registry change -- a newly priced
     # backend must win future auto plans, not be masked by the cache
     key = (_weights_key(weights), grid_shape, _dtype_key(dtype), t, hw,
-           shard_key, backend, tile_m, tile_n, interpret,
+           shard_key, backend, tile_m, tile_n, h_block, interpret,
            None if compute_dtype is None else _dtype_key(compute_dtype),
            registry.generation())
     if use_cache and key in _CACHE:
@@ -266,19 +270,25 @@ def stencil_plan(
 
     t0 = time.perf_counter()
     spec = spec_from_weights(weights)
-    # Selection prices tiles at the historical defaults (128) unless the
-    # caller pinned them -- identical to the pre-plan "auto" branch.
+    # Selection prices the geometry the kernels will actually resolve for
+    # this grid (fused-regime halo t*r), so the read-amplification term in
+    # the decision matches the substrate that runs; tile_n keeps its
+    # historical 128 pricing default when unpinned.
+    from .common import resolve_strip_blocks
+    strip_px, hb_px = resolve_strip_blocks(
+        grid_shape, t * spec.radius, np.dtype(dtype).itemsize,
+        tile_m, h_block)
     decision = decide(
         spec, t, dtype_bytes=np.dtype(dtype).itemsize, hw=hw,
         tile_n=tile_n if tile_n is not None else 128,
-        strip_m=tile_m if tile_m is not None else 128,
+        strip_m=strip_px, h_block=hb_px,
     )
     exec_backend = backend if backend is not None else decision.backend
 
     ctx = registry.PlanContext(
         spec=spec, weights=weights, grid_shape=grid_shape,
         dtype=np.dtype(dtype), t=t, tile_m=tile_m, tile_n=tile_n,
-        interpret=interpret, compute_dtype=compute_dtype,
+        interpret=interpret, compute_dtype=compute_dtype, h_block=h_block,
     )
 
     halo_plan = None
@@ -329,7 +339,7 @@ def _build_distributed(mesh, axis_names, dist_mode, ctx, exec_backend):
     # every other registered backend plugs in as a Pallas local apply.
     local = None if exec_backend == "reference" else pallas_local_apply(
         exec_backend, interpret=ctx.interpret,
-        tile_m=ctx.tile_m, tile_n=ctx.tile_n)
+        tile_m=ctx.tile_m, tile_n=ctx.tile_n, h_block=ctx.h_block)
     stepper = make_distributed_stepper(
         mesh, axis_names, ctx.weights, t=ctx.t, mode=dist_mode,
         local_apply=local)

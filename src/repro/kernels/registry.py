@@ -17,8 +17,13 @@ Each :class:`BackendDef` carries two callables:
     FLOP/s) under a :class:`repro.core.selector.PricingContext`, or ``None``
     when the backend is not a candidate for that workload (e.g. the reuse
     regime degenerates at t=1).  ``select_backend`` enumerates priced
-    backends instead of a hard-coded dict, so new regimes (sparse unit,
-    halo sub-blocked strips) become selectable just by registering.
+    backends instead of a hard-coded dict, so new regimes (e.g. a sparse
+    unit) become selectable just by registering.
+
+The five strip regimes run on the halo-row sub-blocked substrate by
+default (kernels.common, DESIGN.md §3); each also registers a
+``*_wholestrip`` foil (3-load substrate, unpriced) for benchmarking and
+substrate-equivalence tests.
 """
 from __future__ import annotations
 
@@ -30,7 +35,7 @@ import numpy as np
 from repro.core import perfmodel as pm
 from repro.stencil.spec import StencilSpec
 from repro.stencil.weights import fuse_weights
-from .common import choose_strip, choose_tile, validate_tiling
+from .common import choose_tile, resolve_strip_blocks, validate_tiling
 from . import legacy as _legacy
 from . import ref as _ref
 from .stencil_direct import stencil_direct
@@ -53,6 +58,7 @@ class PlanContext:
     tile_n: Optional[int]
     interpret: bool
     compute_dtype: object = None
+    h_block: Optional[int] = None   # None = auto, 0 = whole-strip substrate
 
     @property
     def radius(self) -> int:
@@ -62,13 +68,11 @@ class PlanContext:
         """Radius-``t*r`` composed kernel (monolithic fusion operand)."""
         return fuse_weights(self.weights, self.t)
 
-    def resolve_strip(self, halo: int) -> int:
-        """Strip height under the kernels' own auto-sizing rule."""
-        h, _ = self.grid_shape
-        if self.tile_m is None:
-            return choose_strip(h, self.grid_shape[1], halo,
-                                np.dtype(self.dtype).itemsize)
-        return min(self.tile_m, h)
+    def resolve_blocks(self, halo: int) -> Tuple[int, int]:
+        """(strip height, halo-block height) under the kernels' own rule."""
+        return resolve_strip_blocks(self.grid_shape, halo,
+                                    np.dtype(self.dtype).itemsize,
+                                    self.tile_m, self.h_block)
 
     def resolve_tile_n(self) -> int:
         """Column-tile width of the banded contraction (MXU paths)."""
@@ -76,8 +80,9 @@ class PlanContext:
         return choose_tile(wid) if self.tile_n is None else min(self.tile_n, wid)
 
     def validate(self, strip_m: int, tile_n: int, halo: int,
-                 radius: int) -> None:
-        validate_tiling(self.grid_shape, strip_m, tile_n, halo, radius)
+                 radius: int, h_block: int = None) -> None:
+        validate_tiling(self.grid_shape, strip_m, tile_n, halo, radius,
+                        h_block)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -178,13 +183,14 @@ def _build_reference(ctx: PlanContext) -> Callable:
 def _build_direct(ctx: PlanContext) -> Callable:
     """t sequential VPU kernel launches, halo r per step."""
     w, t, r = ctx.weights, ctx.t, ctx.radius
-    strip_m = ctx.resolve_strip(r)
-    ctx.validate(strip_m, ctx.grid_shape[1], r, r)
+    strip_m, hb = ctx.resolve_blocks(r)
+    ctx.validate(strip_m, ctx.grid_shape[1], r, r, hb)
     interp = ctx.interpret
 
     def run(x):
         for _ in range(t):
-            x = stencil_direct(x, w, t=1, tile_m=strip_m, interpret=interp)
+            x = stencil_direct(x, w, t=1, tile_m=strip_m, h_block=hb,
+                               interpret=interp)
         return x
     return run
 
@@ -192,26 +198,27 @@ def _build_direct(ctx: PlanContext) -> Callable:
 def _build_fused_direct(ctx: PlanContext) -> Callable:
     """One VPU kernel, t in-VMEM steps (temporal fusion, halo t*r)."""
     w, t, r = ctx.weights, ctx.t, ctx.radius
-    strip_m = ctx.resolve_strip(t * r)
-    ctx.validate(strip_m, ctx.grid_shape[1], t * r, r)
+    strip_m, hb = ctx.resolve_blocks(t * r)
+    ctx.validate(strip_m, ctx.grid_shape[1], t * r, r, hb)
     interp = ctx.interpret
 
     def run(x):
-        return stencil_direct(x, w, t=t, tile_m=strip_m, interpret=interp)
+        return stencil_direct(x, w, t=t, tile_m=strip_m, h_block=hb,
+                              interpret=interp)
     return run
 
 
 def _build_matmul(ctx: PlanContext) -> Callable:
     """t sequential MXU banded contractions, halo r per step."""
     w, t, r = ctx.weights, ctx.t, ctx.radius
-    strip_m, tile_n = ctx.resolve_strip(r), ctx.resolve_tile_n()
-    ctx.validate(strip_m, tile_n, r, r)
+    (strip_m, hb), tile_n = ctx.resolve_blocks(r), ctx.resolve_tile_n()
+    ctx.validate(strip_m, tile_n, r, r, hb)
     interp, cdt = ctx.interpret, ctx.compute_dtype
 
     def run(x):
         for _ in range(t):
             x = stencil_matmul(x, w, t=1, tile_m=strip_m, tile_n=tile_n,
-                               interpret=interp, compute_dtype=cdt)
+                               h_block=hb, interpret=interp, compute_dtype=cdt)
         return x
     return run
 
@@ -220,27 +227,34 @@ def _build_fused_matmul(ctx: PlanContext) -> Callable:
     """Monolithic fusion: ONE contraction of the composed radius-t*r kernel."""
     wf = ctx.fused_weights()
     R = (wf.shape[0] - 1) // 2
-    strip_m, tile_n = ctx.resolve_strip(R), ctx.resolve_tile_n()
-    ctx.validate(strip_m, tile_n, R, R)
+    (strip_m, hb), tile_n = ctx.resolve_blocks(R), ctx.resolve_tile_n()
+    ctx.validate(strip_m, tile_n, R, R, hb)
     interp, cdt = ctx.interpret, ctx.compute_dtype
 
     def run(x):
         return stencil_matmul(x, wf, t=1, tile_m=strip_m, tile_n=tile_n,
-                              interpret=interp, compute_dtype=cdt)
+                              h_block=hb, interpret=interp, compute_dtype=cdt)
     return run
 
 
 def _build_fused_matmul_reuse(ctx: PlanContext) -> Callable:
     """Intermediate reuse: t radius-r contractions, VMEM intermediates."""
     w, t, r = ctx.weights, ctx.t, ctx.radius
-    strip_m, tile_n = ctx.resolve_strip(t * r), ctx.resolve_tile_n()
-    ctx.validate(strip_m, tile_n, t * r, r)
+    (strip_m, hb), tile_n = ctx.resolve_blocks(t * r), ctx.resolve_tile_n()
+    ctx.validate(strip_m, tile_n, t * r, r, hb)
     interp, cdt = ctx.interpret, ctx.compute_dtype
 
     def run(x):
         return stencil_matmul(x, w, t=t, tile_m=strip_m, tile_n=tile_n,
-                              interpret=interp, compute_dtype=cdt)
+                              h_block=hb, interpret=interp, compute_dtype=cdt)
     return run
+
+
+def _wholestrip(build: Callable) -> Callable:
+    """Same regime on the whole-strip (3-load) substrate: force h_block=0."""
+    def build_ws(ctx: PlanContext) -> Callable:
+        return build(dataclasses.replace(ctx, h_block=0))
+    return build_ws
 
 
 def _build_legacy_direct(ctx: PlanContext) -> Callable:
@@ -324,3 +338,19 @@ register_backend("legacy_direct", _build_legacy_direct,
 register_backend("legacy_matmul", _build_legacy_matmul,
                  description="seed 9-tile monolithic MXU scheme (foil)",
                  unit="matrix")
+
+# Whole-strip (3-load) substrate foils: the same five regimes with halo-row
+# sub-blocking disabled, unpriced so they never win selection -- they exist
+# so benchmarks/traffic.py can measure seed / whole-strip / sub-blocked
+# three ways and tests can assert bit-for-bit substrate equivalence.
+for _name, _build, _unit in (
+    ("direct", _build_direct, "vector"),
+    ("fused_direct", _build_fused_direct, "vector"),
+    ("matmul", _build_matmul, "matrix"),
+    ("fused_matmul", _build_fused_matmul, "matrix"),
+    ("fused_matmul_reuse", _build_fused_matmul_reuse, "matrix"),
+):
+    register_backend(f"{_name}_wholestrip", _wholestrip(_build),
+                     description=f"{_name} on the whole-strip 3-load "
+                                 "substrate (benchmark foil)",
+                     unit=_unit)

@@ -1,10 +1,15 @@
 """VPU-path 2D stencil kernel (the "CUDA core" baseline of the paper).
 
-One grid cell computes a (STRIP_M, N) output strip: the vertically
-halo-extended strip is assembled in VMEM from three neighbor strips (top,
-center, bottom -- 3 block loads instead of the seed's 9, DESIGN.md §3),
-the periodic horizontal halo is materialized in-VMEM by column wrap, and
-the stencil is an unrolled sum of shifted slices times scalar taps -- pure
+One output strip is a (STRIP_M, N) band, lowered through the shared
+substrate launcher (``common.strip_substrate_call``).  On the sub-blocked
+substrate (default, DESIGN.md §3) the Pallas grid is 2D over (strip,
+h-block): each grid cell copies one (H_BLOCK, N) input block into a VMEM
+scratch -- the strip's own blocks plus ONE halo block of each vertical
+neighbor -- and the final cell of the strip computes on the assembled
+halo-extended strip, so HBM reads per step are (1 + 2*h_block/strip_m) x
+the grid instead of 3x (whole neighbor strips) or 9x (seed scheme).  The
+periodic horizontal halo is materialized in-VMEM by column wrap, and the
+stencil is an unrolled sum of shifted slices times scalar taps -- pure
 element-wise VPU work, accumulated in f32.
 
 Supports an in-kernel temporal-fusion depth ``t`` (the paper's CUDA-core
@@ -14,24 +19,30 @@ stays 2D while compute scales by t (I = t*K/D).  Because every row of the
 extended strip is a true global row, the horizontal wrap is re-applied per
 step at radius ``r`` -- no 2*t*r horizontal halo is ever carried.  This
 kernel IS `stencil_fused`'s engine; ``t=1`` is the plain baseline.
+
+``h_block=0`` selects the PR-1 whole-strip 3-load substrate (kept for the
+``*_wholestrip`` benchmark foils); both substrates assemble byte-identical
+extended strips, so their outputs are bit-for-bit equal.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
 
-from .common import (assemble_strip, choose_strip, strip_in_specs,
+from .common import (resolve_strip_blocks, strip_substrate_call,
                      validate_tiling, wrap_columns)
 
 
-def _kernel(top_ref, mid_ref, bot_ref, out_ref, *, weights, t: int,
-            radius: int, out_dtype):
-    """Three neighbor-strip refs + out_ref; weights are host constants."""
-    halo = t * radius
-    cur = assemble_strip(top_ref, mid_ref, bot_ref, halo).astype(jnp.float32)
+def _stencil_steps(cur: jax.Array, weights, t: int, radius: int) -> jax.Array:
+    """``t`` unrolled tap-sum updates on a halo-extended f32 strip.
+
+    The barrier keeps XLA from fusing the strip assembly (refs concatenated
+    by the whole-strip substrate, a scratch slice for the sub-blocked one)
+    into the tap sum -- assembly-dependent FMA formation would otherwise
+    perturb the last ulp, and the two substrates are asserted BIT-for-bit
+    equal (tests/test_substrate_strips.py).
+    """
+    cur = jax.lax.optimization_barrier(cur)
     k = 2 * radius + 1
     n = cur.shape[1]
     for _ in range(t):
@@ -45,7 +56,7 @@ def _kernel(top_ref, mid_ref, bot_ref, out_ref, *, weights, t: int,
                     continue
                 acc = acc + w * z[dy : dy + m, dx : dx + n]
         cur = acc
-    out_ref[...] = cur.astype(out_dtype)
+    return cur
 
 
 def stencil_direct(
@@ -54,15 +65,18 @@ def stencil_direct(
     t: int = 1,
     tile_m: int = None,
     tile_n: int = None,
+    h_block: int = None,
     interpret: bool = False,
 ) -> jax.Array:
     """``t`` fused time steps of a 2D stencil, periodic boundary.
 
     ``weights``: host-side (2r+1, 2r+1) ndarray (zeros outside support).
-    ``tile_m`` is the strip height -- ``None`` (default) picks one via
-    ``choose_strip`` (divisor of H, >= halo, VMEM-budgeted); an explicit
-    value is validated strictly.  ``tile_n`` is accepted for signature
-    parity with the MXU kernel but unused (the VPU path never column-tiles).
+    ``tile_m`` is the strip height and ``h_block`` the halo sub-block
+    height -- ``None`` (default) picks both via ``choose_strip_blocks``
+    (divisors, halo-covering, VMEM-budgeted); explicit values are validated
+    strictly.  ``h_block=0`` disables sub-blocking (whole-strip 3-load
+    substrate).  ``tile_n`` is accepted for signature parity with the MXU
+    kernel but unused (the VPU path never column-tiles).
     """
     import numpy as np
 
@@ -70,20 +84,13 @@ def stencil_direct(
     w = np.asarray(weights)
     radius = (w.shape[0] - 1) // 2
     halo = t * radius
-    h, wid = x.shape
-    strip_m = choose_strip(h, wid, halo, x.dtype.itemsize) if tile_m is None \
-        else min(tile_m, h)
-    validate_tiling(x.shape, strip_m, wid, halo, radius)
-    gm = h // strip_m
+    wid = x.shape[1]
+    strip_m, h_block = resolve_strip_blocks(x.shape, halo, x.dtype.itemsize,
+                                            tile_m, h_block)
+    validate_tiling(x.shape, strip_m, wid, halo, radius, h_block)
 
-    kern = functools.partial(
-        _kernel, weights=w, t=t, radius=radius, out_dtype=x.dtype
-    )
-    return pl.pallas_call(
-        kern,
-        grid=(gm,),
-        in_specs=strip_in_specs(strip_m, wid, gm),
-        out_specs=pl.BlockSpec((strip_m, wid), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
-        interpret=interpret,
-    )(x, x, x)
+    def compute(cur):
+        return _stencil_steps(cur, w, t, radius)
+
+    return strip_substrate_call(compute, x, strip_m, h_block, halo,
+                                interpret)

@@ -37,7 +37,14 @@ def param_defs(cfg: ModelConfig):
         "cross_attn": nn.attn_defs(cfg, Ld),
         "mlp": nn.mlp_defs(cfg, Ld),
     }
-    return {"encoder": enc_block, "decoder": dec_block, **nn.embed_defs(cfg)}
+    return {"encoder": enc_block, "decoder": dec_block,
+            # Whisper's ln_post: the encoder residual stream is normalized
+            # before cross-attention K/V consume it.  Without it, enc_h's
+            # magnitude (seeded by unit-variance frame embeddings and grown
+            # by every residual add) leaks straight into the decoder through
+            # _cross_kv, blowing up early gradients ~50x vs the other archs.
+            "enc_ln_post": ParamDef((D,), (None,), init="ones"),
+            **nn.embed_defs(cfg)}
 
 
 def encode(params, frames, cfg: ModelConfig):
@@ -57,7 +64,7 @@ def encode(params, frames, cfg: ModelConfig):
 
     body_fn = jax.checkpoint(body, policy=None) if cfg.remat else body
     h, _ = jax.lax.scan(body_fn, h, params["encoder"])
-    return h
+    return nn.rmsnorm(h, params["enc_ln_post"], cfg.norm_eps)
 
 
 def _cross_kv(lp, enc_h, cfg):

@@ -85,6 +85,10 @@ def resolve_axes(axes: Tuple[Optional[str], ...], rules, shape=None, mesh=None) 
                 while m and shape[i] % _mesh_size(mesh, m) != 0:
                     m = m[:-1]
                 m = m or None
+        # PartitionSpec treats ('data',) and 'data' as distinct entries;
+        # normalize so rule authors may write either without changing specs.
+        if isinstance(m, (tuple, list)):
+            m = m[0] if len(m) == 1 else tuple(m)
         out.append(m)
     return P(*out)
 

@@ -148,6 +148,7 @@ def pallas_local_apply(
     interpret: Optional[bool] = None,
     tile_m: Optional[int] = None,
     tile_n: Optional[int] = None,
+    h_block: Optional[int] = None,
 ) -> Callable:
     """Build a ``local_apply`` plug-in running the strip-mined Pallas kernels.
 
@@ -164,6 +165,9 @@ def pallas_local_apply(
     built once per (block shape, depth) signature and reused across steps
     and traces.  By default the whole extended block is one strip
     (``tile_m=None``); pass explicit tiles to exercise the multi-strip path.
+    ``h_block`` selects the halo sub-block height of the strip substrate
+    (``None`` = auto, ``0`` = whole-strip) -- the modulo wrap of either
+    substrate is equally harmless here.
     """
     import numpy as _np
 
@@ -177,7 +181,7 @@ def pallas_local_apply(
             wn, xe.shape, xe.dtype, steps, backend=backend,
             tile_m=tile_m if tile_m is not None else xe.shape[0],
             tile_n=tile_n if tile_n is not None else xe.shape[1],
-            interpret=interpret,
+            h_block=h_block, interpret=interpret,
         )
         full = plan(xe)
         return full[h:-h, h:-h] if h else full

@@ -178,6 +178,29 @@ class TestSingleDecisionPath:
         assert d == plan.decision
         assert plan.backend == plan.decision.backend   # no override => same
 
+    @pytest.mark.parametrize("grid", [(64, 64), (192, 160)])
+    def test_explain_with_grid_matches_plan_on_that_grid(self, grid):
+        """Plans price the geometry resolved for THEIR grid; explain agrees
+        whenever it is told the grid (the parity contract off 128-row
+        grids, where the pricing defaults no longer coincide)."""
+        w = make_weights(StencilSpec("box", 2, 1), seed=3)
+        for t in (1, 2, 4):
+            plan = stencil_plan(w, grid, np.float32, t)
+            d = explain(w, t, dtype_bytes=4, hw=plan.hw, grid_shape=grid)
+            assert d == plan.decision
+
+    def test_explain_with_grid_threads_pins(self):
+        """Explicit tile_m/h_block pins resolve identically in explain and
+        stencil_plan -- including h_block=0 (whole-strip pricing)."""
+        w = make_weights(StencilSpec("box", 2, 1), seed=3)
+        grid = (64, 64)
+        for pins in ({"h_block": 0}, {"tile_m": 16},
+                     {"tile_m": 32, "h_block": 8}):
+            plan = stencil_plan(w, grid, np.float32, 2, **pins)
+            d = explain(w, 2, dtype_bytes=4, hw=plan.hw, grid_shape=grid,
+                        **pins)
+            assert d == plan.decision
+
     def test_decision_candidates_are_priced_registry_subset(self):
         w = make_weights(StencilSpec("box", 2, 1), seed=0)
         d = explain(w, 4, 4)

@@ -1,13 +1,16 @@
 """Strip-mined halo substrate: equivalence sweeps vs the jnp oracle, the
-intermediate-reuse MXU regime's exactness guarantee, tiling validation
-error paths, and the substrate's traffic accounting (3 loads vs the seed
-scheme's 9)."""
+halo-row sub-blocked substrate's bit-for-bit equality with the whole-strip
+kernels, the intermediate-reuse MXU regime's exactness guarantee, tiling
+validation error paths, and the substrate's traffic accounting
+(1 + 2h/strip_m vs 3 vs the seed scheme's 9)."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.kernels import common, legacy
-from repro.kernels.common import choose_strip, validate_tiling
+from repro.kernels.common import (choose_hblock, choose_strip,
+                                  choose_strip_blocks, substrate_read_amp,
+                                  validate_tiling)
 from repro.kernels.ref import stencil_direct_ref
 from repro.kernels.stencil_direct import stencil_direct
 from repro.kernels.stencil_matmul import stencil_matmul
@@ -63,6 +66,89 @@ class TestStripEquivalence:
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
+class TestSubblockedEquivalence:
+    """The halo-row sub-blocked substrate assembles byte-identical extended
+    strips, so its outputs are BIT-FOR-BIT equal to the whole-strip kernels
+    in f32 -- the ISSUE's acceptance sweep: box/star x r{1,2,3} x t{1,2,4}
+    x h_block dividing strip_m."""
+
+    STRIP_M = 24
+
+    def _hblocks(self, r, t):
+        halo = r * t
+        return [d for d in (1, 2, 3, 4, 6, 8, 12, 24)
+                if self.STRIP_M % d == 0 and d >= halo]
+
+    @pytest.mark.parametrize("t", [1, 2, 4])
+    @pytest.mark.parametrize("r", [1, 2, 3])
+    @pytest.mark.parametrize("shape", ["box", "star"])
+    def test_direct_bitwise_vs_wholestrip(self, shape, r, t):
+        w = make_weights(StencilSpec(shape, 2, r), seed=r)
+        x = _x(48, 64)
+        whole = stencil_direct(x, w, t=t, tile_m=self.STRIP_M, h_block=0,
+                               interpret=True)
+        for hb in self._hblocks(r, t):
+            sub = stencil_direct(x, w, t=t, tile_m=self.STRIP_M, h_block=hb,
+                                 interpret=True)
+            np.testing.assert_array_equal(np.asarray(sub), np.asarray(whole))
+
+    @pytest.mark.parametrize("t", [1, 2, 4])
+    @pytest.mark.parametrize("r", [1, 2, 3])
+    @pytest.mark.parametrize("shape", ["box", "star"])
+    def test_matmul_bitwise_vs_wholestrip(self, shape, r, t):
+        w = make_weights(StencilSpec(shape, 2, r), seed=r)
+        x = _x(48, 64)
+        whole = stencil_matmul(x, w, t=t, tile_m=self.STRIP_M, tile_n=32,
+                               h_block=0, interpret=True)
+        for hb in self._hblocks(r, t):
+            sub = stencil_matmul(x, w, t=t, tile_m=self.STRIP_M, tile_n=32,
+                                 h_block=hb, interpret=True)
+            np.testing.assert_array_equal(np.asarray(sub), np.asarray(whole))
+
+    def test_single_strip_wraps_to_itself(self):
+        """gm=1: both substrates take the periodic halo from the strip
+        itself (modulo wrap), matching the oracle."""
+        w = make_weights(StencilSpec("box", 2, 2), seed=0)
+        x = _x(32, 32)
+        ref = stencil_direct_ref(x, w, 2)
+        y = stencil_direct(x, w, t=2, tile_m=32, h_block=8, interpret=True)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(ref), atol=1e-4)
+
+    def test_auto_hblock_end_to_end(self):
+        """h_block=None auto-sizes (tile_m given and not) and still matches
+        the oracle on a grid not divisible by 128."""
+        w = make_weights(StencilSpec("star", 2, 1), seed=1)
+        x = _x(192, 160)
+        ref = stencil_direct_ref(x, w, 2)
+        np.testing.assert_allclose(
+            np.asarray(stencil_direct(x, w, t=2, interpret=True)),
+            np.asarray(ref), atol=1e-4)
+        np.testing.assert_allclose(
+            np.asarray(stencil_matmul(x, w, t=2, tile_m=48, interpret=True)),
+            np.asarray(ref), atol=1e-4)
+
+
+class TestChooseHBlock:
+    def test_divides_and_covers_halo(self):
+        for strip_m, halo in [(32, 1), (32, 4), (128, 8), (24, 12), (48, 5)]:
+            hb = choose_hblock(strip_m, halo)
+            assert strip_m % hb == 0 and hb >= halo
+
+    def test_degenerates_to_whole_strip_at_full_halo(self):
+        assert choose_hblock(32, 32) == 32
+        assert substrate_read_amp(32, 32) == 3.0
+
+    def test_amp_small_when_halo_allows(self):
+        strip_m, hb = choose_strip_blocks(1024, 512, 2)
+        assert substrate_read_amp(strip_m, hb) <= 1.25
+
+    def test_joint_choice_consistent_with_choose_strip(self):
+        for h, halo in [(256, 3), (96, 8), (128, 24)]:
+            strip_m, hb = choose_strip_blocks(h, 512, halo)
+            assert strip_m == choose_strip(h, 512, halo)
+            assert strip_m % hb == 0 and hb >= halo
+
+
 class TestReuseRegimeExactness:
     """The intermediate-reuse kernel executes the SAME per-point banded dot
     products as t sequential MXU steps, so in f32 it is bit-for-bit equal
@@ -104,6 +190,19 @@ class TestValidateTiling:
 
     def test_valid_passes(self):
         validate_tiling((64, 128), 32, 32, 4)
+        validate_tiling((64, 128), 32, 32, 4, h_block=8)
+
+    def test_hblock_not_dividing_strip(self):
+        w = make_weights(StencilSpec("box", 2, 1), seed=0)
+        with pytest.raises(ValueError, match="h_block"):
+            stencil_direct(_x(64, 64), w, tile_m=32, h_block=5,
+                           interpret=True)
+
+    def test_hblock_smaller_than_halo(self):
+        w = make_weights(StencilSpec("box", 2, 2), seed=0)
+        with pytest.raises(ValueError, match="h_block"):
+            stencil_matmul(_x(64, 64), w, t=2, tile_m=32, tile_n=32,
+                           h_block=2, interpret=True)
 
 
 class TestChooseStrip:
@@ -145,8 +244,8 @@ class TestChooseStrip:
 
 
 class TestTrafficAccounting:
-    """The acceptance criterion: <= 4 neighbor-block loads per output tile
-    on the strip substrate, vs 9 in the seed scheme."""
+    """The acceptance criteria: analytic reads fall 9x (seed) -> 3x
+    (whole-strip) -> 1 + 2h/strip_m (sub-blocked)."""
 
     def test_loads_per_output_tile(self):
         assert len(common.strip_in_specs(32, 128, 4)) == 3 <= 4
@@ -159,6 +258,42 @@ class TestTrafficAccounting:
         grid_bytes = 256 * 256 * 4
         assert new == 3 * grid_bytes
         assert old == 9 * grid_bytes
+
+    def test_subblocked_read_bytes_formula(self):
+        """Analytic read_bytes == (1 + 2h/strip_m) * H*W*D exactly, for
+        every h_block dividing the strip."""
+        H, W, D = 256, 256, 4
+        grid_bytes = H * W * D
+        for strip_m in (32, 64, 128):
+            for hb in (d for d in range(1, strip_m + 1) if strip_m % d == 0):
+                got = common.hbm_read_bytes_per_step((H, W), strip_m, D,
+                                                     h_block=hb)
+                want = (1 + 2 * hb / strip_m) * grid_bytes
+                assert got == want
+                assert substrate_read_amp(strip_m, hb) == \
+                    pytest.approx(got / grid_bytes)
+
+    def test_subblocked_amp_at_default_strips(self):
+        """At default joint sizing the amplification is <= 1.3x for shallow
+        halos (the ISSUE's acceptance bound vs 3.0x whole-strip)."""
+        for halo in (1, 2, 4):
+            strip_m, hb = choose_strip_blocks(1024, 1024, halo)
+            assert substrate_read_amp(strip_m, hb) <= 1.3
+        assert substrate_read_amp(strip_m, 0) == 3.0      # whole-strip foil
+        with pytest.raises(ValueError, match="auto"):
+            substrate_read_amp(strip_m, None)             # None != whole-strip
+
+    def test_bands_charged_identically(self):
+        """The banded operand term is substrate-independent (one fetch per
+        output strip)."""
+        bands = (3, 40, 32)
+        base = common.hbm_read_bytes_per_step((256, 256), 32, 4)
+        with_b = common.hbm_read_bytes_per_step((256, 256), 32, 4,
+                                                bands_shape=bands)
+        sub = common.hbm_read_bytes_per_step((256, 256), 32, 4, h_block=8)
+        sub_b = common.hbm_read_bytes_per_step((256, 256), 32, 4,
+                                               bands_shape=bands, h_block=8)
+        assert with_b - base == sub_b - sub == 8 * 3 * 40 * 32 * 4
 
     def test_legacy_kernels_still_correct(self):
         """legacy.py backs the old-vs-new benchmark; keep it honest."""
