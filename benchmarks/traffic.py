@@ -25,6 +25,13 @@ For Box/Star x r in {1,2,3} x t in {1,2,4,8} this emits, per substrate:
     sizing and weight composition -- plan-build time is recorded separately
     (``plan_build_us_*`` in the JSON).
 
+The 3D halo-plane substrate (DESIGN.md §9) gets its own sweep
+(``cases_3d``): Box/Star-3D x r{1,2} x t{1,2} at fixed benchmark slab
+sizes, whole-slab foil (9x) vs sub-blocked halo planes
+((1 + 2h/strip_m)(1 + 2z_block/z_slab)x), with analytic
+``read_bytes_step_*_{wholestrip,subblocked}`` columns and plan-timed
+us/step for the VPU and intermediate-reuse MXU paths.
+
 Results also land in BENCH_kernels.json (repo root) for cross-PR
 trajectory tracking.
 """
@@ -41,8 +48,10 @@ sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)), ".."
 
 from benchmarks.timing import time_us
 from repro.kernels import common, legacy, stencil_plan
-from repro.kernels.common import choose_hblock, substrate_read_amp
-from repro.kernels.stencil_matmul import build_bands
+from repro.kernels.common import (SubstrateGeom, choose_hblock,
+                                  hbm_read_bytes_per_step_3d,
+                                  substrate_read_amp)
+from repro.kernels.stencil_matmul import build_bands, build_bands_nd
 from repro.stencil import StencilSpec, fuse_weights, make_weights
 
 N = 128            # grid edge (small: interpret-mode kernels on CPU)
@@ -55,6 +64,15 @@ DEPTHS = (1, 2, 4, 8)
 QUICK_RADII = (1,)
 QUICK_DEPTHS = (1, 4)
 DTYPE_BYTES = 4
+#: 3D halo-plane substrate sweep (DESIGN.md §9): Box/Star-3D at the
+#: paper's Table 3 workloads, measured whole-slab foil (9x) vs sub-blocked
+#: ((1 + 2h/strip_m)(1 + 2z_block/z_slab)x).  Small grid + fixed
+#: (z_slab, strip_m) so interpret-mode timing stays honest and the
+#: analytic amplification is exact at the benchmark slab sizes.
+N3 = (16, 32, 32)      # (Z, H, W)
+SLAB3, STRIP3, TILE3 = 8, 16, 32
+CASES_3D = [(s, r, t) for s in SHAPES for r in (1, 2) for t in (1, 2)]
+QUICK_CASES_3D = [("box", 1, 2)]
 #: Full sweeps land in BENCH_kernels.json (the cross-PR trajectory file);
 #: BENCH_QUICK=1 sweeps go to a sibling .quick file so CI smoke runs never
 #: clobber tracked full-grid data.
@@ -135,21 +153,79 @@ def _case(shape: str, r: int, t: int, x) -> dict:
     return row
 
 
+def _case3d(shape: str, r: int, t: int, x3) -> dict:
+    """One 3D traffic case: whole-slab foil vs sub-blocked halo planes."""
+    spec = StencilSpec(shape, 3, r)
+    w = make_weights(spec, seed=r)
+    halo = r * t
+    hb = choose_hblock(STRIP3, halo)
+    zb = choose_hblock(SLAB3, halo)
+    sub = SubstrateGeom(dim=3, strip_m=STRIP3, h_block=hb,
+                        z_slab=SLAB3, z_block=zb)
+    whole = SubstrateGeom(dim=3, strip_m=STRIP3, h_block=0,
+                          z_slab=SLAB3, z_block=0)
+    bands = build_bands_nd(w.astype(np.float32), TILE3)[1].shape
+
+    row = {
+        "case": f"{spec.name}-t{t}", "shape": shape, "dim": 3, "r": r, "t": t,
+        "z_slab": SLAB3, "strip_m": STRIP3, "h_block": hb, "z_block": zb,
+        "loads_per_cell_wholestrip": 9,
+        "loads_per_cell_subblocked": (SLAB3 // zb + 2) * (STRIP3 // hb + 2),
+        "read_amp_wholestrip": whole.read_amp,
+        "read_amp_subblocked": sub.read_amp,
+        # one fused launch advances t steps: per-step read traffic
+        "read_bytes_step_direct_wholestrip": hbm_read_bytes_per_step_3d(
+            N3, whole, DTYPE_BYTES) / t,
+        "read_bytes_step_direct_subblocked": hbm_read_bytes_per_step_3d(
+            N3, sub, DTYPE_BYTES) / t,
+        "read_bytes_step_matmul_wholestrip": hbm_read_bytes_per_step_3d(
+            N3, whole, DTYPE_BYTES, bands_shape=bands) / t,
+        "read_bytes_step_matmul_subblocked": hbm_read_bytes_per_step_3d(
+            N3, sub, DTYPE_BYTES, bands_shape=bands) / t,
+    }
+
+    pins = dict(tile_m=STRIP3, z_slab=SLAB3, interpret=True)
+    paths = {
+        "us_step_direct_wholestrip": stencil_plan(
+            w, N3, x3.dtype, t, backend="fused_direct_wholestrip", **pins),
+        "us_step_direct_subblocked": stencil_plan(
+            w, N3, x3.dtype, t, backend="fused_direct",
+            h_block=hb, z_block=zb, **pins),
+        "us_step_matmul_wholestrip": stencil_plan(
+            w, N3, x3.dtype, t, backend="fused_matmul_reuse_wholestrip",
+            tile_n=TILE3, **pins),
+        "us_step_matmul_subblocked": stencil_plan(
+            w, N3, x3.dtype, t, backend="fused_matmul_reuse",
+            tile_n=TILE3, h_block=hb, z_block=zb, **pins),
+    }
+    iters = 1 if os.environ.get("BENCH_QUICK") else 3
+    for key, plan in paths.items():
+        row[key] = time_us(plan, x3, iters=iters) / t
+        row[key.replace("us_step_", "plan_build_us_")] = \
+            plan.build_time_s * 1e6
+    return row
+
+
 def run() -> list[str]:
     rng = np.random.default_rng(0)
     x = jnp.asarray(rng.normal(size=(N, N)).astype(np.float32))
+    x3 = jnp.asarray(rng.normal(size=N3).astype(np.float32))
     quick = bool(os.environ.get("BENCH_QUICK"))
     radii = QUICK_RADII if quick else RADII
     depths = QUICK_DEPTHS if quick else DEPTHS
     rows = [_case(shape, r, t, x)
             for shape in SHAPES for r in radii for t in depths]
+    cases3d = QUICK_CASES_3D if quick else CASES_3D
+    rows3d = [_case3d(shape, r, t, x3) for shape, r, t in cases3d]
 
     with open(JSON_PATH_QUICK if quick else JSON_PATH, "w") as f:
         json.dump({"grid": N, "tile": TILE, "dtype_bytes": DTYPE_BYTES,
                    "quick": quick, "radii": list(radii),
                    "depths": list(depths),
+                   "grid_3d": list(N3),
+                   "slab_3d": [SLAB3, STRIP3, TILE3],
                    "timing": "interpret-mode CPU (relative only)",
-                   "cases": rows}, f, indent=1)
+                   "cases": rows, "cases_3d": rows3d}, f, indent=1)
 
     out = ["traffic.case,loads_old/new/sub,read_amp_direct_new,"
            "read_amp_direct_sub,rdMB_step_mm_old,rdMB_step_mm_new,"
@@ -169,6 +245,20 @@ def run() -> list[str]:
             f"{c['us_step_direct_old']:.0f},{c['us_step_direct_new']:.0f},"
             f"{c['us_step_direct_subblocked']:.0f},"
             f"{c['us_step_matmul_old']:.0f},{c['us_step_matmul_new']:.0f},"
+            f"{c['us_step_matmul_subblocked']:.0f}")
+
+    out.append("traffic3d.case,read_amp_whole,read_amp_sub,"
+               "rdMB_step_mm_whole,rdMB_step_mm_sub,us_dir_whole,us_dir_sub,"
+               "us_mm_whole,us_mm_sub")
+    for c in rows3d:
+        out.append(
+            f"traffic3d.{c['case']},{c['read_amp_wholestrip']:.2f}x,"
+            f"{c['read_amp_subblocked']:.2f}x,"
+            f"{c['read_bytes_step_matmul_wholestrip']/2**20:.3f},"
+            f"{c['read_bytes_step_matmul_subblocked']/2**20:.3f},"
+            f"{c['us_step_direct_wholestrip']:.0f},"
+            f"{c['us_step_direct_subblocked']:.0f},"
+            f"{c['us_step_matmul_wholestrip']:.0f},"
             f"{c['us_step_matmul_subblocked']:.0f}")
     return out
 

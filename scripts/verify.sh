@@ -17,4 +17,32 @@ fi
 # regression, so fail fast before the benchmark smoke.
 python -m pytest -x -q
 
+# Stamp the harness start so the gate below can prove the traffic JSON was
+# produced by THIS run (benchmarks/run.py deliberately swallows per-module
+# failures, and a stale gitignored .quick.json would otherwise satisfy it).
+BENCH_STAMP="$(mktemp)"
+export BENCH_STAMP
+
 python benchmarks/run.py
+
+# The benchmark smoke must include at least one freshly measured 3D
+# halo-plane traffic case (DESIGN.md §9), with the sub-blocked
+# amplification strictly below the whole-slab foil's 9x -- the ISSUE-4
+# acceptance criterion.
+python - <<'EOF'
+import json, os
+path = "BENCH_kernels.quick.json" if os.environ.get("BENCH_QUICK") \
+    else "BENCH_kernels.json"
+assert os.path.getmtime(path) >= os.path.getmtime(os.environ["BENCH_STAMP"]), \
+    f"{path} was not rewritten by this run (traffic benchmark failed?)"
+with open(path) as f:
+    cases = json.load(f)["cases_3d"]
+assert cases, f"no 3D traffic cases in {path}"
+for c in cases:
+    assert c["read_bytes_step_direct_subblocked"] < \
+        c["read_bytes_step_direct_wholestrip"], c["case"]
+    assert c["read_amp_subblocked"] < c["read_amp_wholestrip"], c["case"]
+print(f"verify: {len(cases)} 3D traffic case(s) in {path}, "
+      "sub-blocked < whole-slab")
+EOF
+rm -f "$BENCH_STAMP"

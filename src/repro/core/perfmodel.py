@@ -146,21 +146,26 @@ class StencilWorkload:
         return self.flops_matrix(sparsity) / self.bytes_per_output()
 
     # ---- matrix-unit execution with intermediate reuse (DESIGN.md §4)
-    def flops_matrix_reuse(self, sparsity: float, strip_m: int = 128) -> float:
+    def flops_matrix_reuse(self, sparsity: float, strip_m: int = 128,
+                           z_slab: Optional[int] = None) -> float:
         """C_TC,reuse^(t) = (beta/S) * C^(t) per output point.
 
         t radius-r banded contractions with intermediates resident in VMEM:
         the fused kernel never materializes so alpha drops to 1; instead the
-        shrinking vertical halo is recomputed, inflating executed work by
-        ``beta = halo_recompute_factor(r, t, strip_m)``.  ``sparsity`` is
-        the scheme's S at the BASE radius r.
+        shrinking leading-axis halos are recomputed, inflating executed work
+        by ``beta = reuse_beta(spec, t, strip_m, z_slab)`` (the 2D
+        ``halo_recompute_factor`` for d=2; the (z, y) product mean for d=3;
+        exactly 1 for lifted 1D, which has no leading halo).  ``sparsity``
+        is the scheme's S at the BASE radius r.
         """
         _check_sparsity(sparsity)
-        beta = halo_recompute_factor(self.spec.radius, self.t, strip_m)
+        beta = reuse_beta(self.spec, self.t, strip_m, z_slab)
         return (beta / sparsity) * self.flops_vector()
 
-    def intensity_matrix_reuse(self, sparsity: float, strip_m: int = 128) -> float:
-        return self.flops_matrix_reuse(sparsity, strip_m) / self.bytes_per_output()
+    def intensity_matrix_reuse(self, sparsity: float, strip_m: int = 128,
+                               z_slab: Optional[int] = None) -> float:
+        return (self.flops_matrix_reuse(sparsity, strip_m, z_slab)
+                / self.bytes_per_output())
 
 
 def halo_recompute_factor(radius: int, t: int, strip_m: int = 128) -> float:
@@ -182,6 +187,52 @@ def halo_recompute_factor(radius: int, t: int, strip_m: int = 128) -> float:
     if strip_m <= 0:
         raise ValueError(f"strip height must be positive, got {strip_m}")
     return 1.0 + radius * (t - 1) / strip_m
+
+
+def halo_recompute_factor_nd(radius: int, t: int, sizes) -> float:
+    """beta for the N-D reuse pipeline: executed points / useful points.
+
+    ``sizes`` lists the tile extent of every leading (non-wrap) axis of
+    the substrate cell -- ``()`` for lifted 1D, ``(strip_m,)`` for 2D,
+    ``(z_slab, strip_m)`` for 3D.  Step s of t computes
+    ``prod_m (m + 2*r*(t-1-s))`` points per ``prod_m m`` useful ones, so
+
+        beta = (1/t) * sum_j  prod_m (1 + 2*r*j/m),   j = 0..t-1
+
+    which reduces to the closed-form 2D ``halo_recompute_factor`` for a
+    single size and to 1 for an empty ``sizes`` (no leading halo at all).
+    """
+    sizes = tuple(sizes)
+    if t <= 1 or not sizes:
+        return 1.0
+    if any(m <= 0 for m in sizes):
+        raise ValueError(f"tile extents must be positive, got {sizes}")
+    total = 0.0
+    for j in range(t):
+        f = 1.0
+        for m in sizes:
+            f *= 1.0 + 2.0 * radius * j / m
+        total += f
+    return total / t
+
+
+def reuse_beta(spec: StencilSpec, t: int, strip_m: int = 128,
+               z_slab: Optional[int] = None) -> float:
+    """Dim-aware beta for the reuse regime: the single channel the
+    workload, ``perf_matrix_reuse`` and the selector's reason string all
+    consult, so priced and displayed betas can never disagree.
+
+    d=2 keeps the closed-form ``halo_recompute_factor`` (bit-identical to
+    the historical pricing); d=3 is the (z_slab, strip_m) product mean;
+    d=1 is exactly 1 (the lifted substrate has no leading halo).
+    """
+    if spec.dim == 1:
+        return 1.0
+    if spec.dim == 3:
+        return halo_recompute_factor_nd(
+            spec.radius, t, (z_slab if z_slab is not None else strip_m,
+                             strip_m))
+    return halo_recompute_factor(spec.radius, t, strip_m)
 
 
 def _check_sparsity(s: float) -> None:
@@ -245,15 +296,17 @@ def perf_matrix(w: StencilWorkload, hw: HardwareSpec, sparsity: float) -> UnitPe
 
 
 def perf_matrix_reuse(w: StencilWorkload, hw: HardwareSpec, sparsity: float,
-                      strip_m: int = 128) -> UnitPerf:
-    """Intermediate-reuse regime (DESIGN.md §4): alpha=1, halo-recompute beta.
+                      strip_m: int = 128,
+                      z_slab: Optional[int] = None) -> UnitPerf:
+    """Intermediate-reuse regime (DESIGN.md §4): alpha=1, halo-recompute beta
+    (dim-aware: ``reuse_beta``; ``z_slab`` matters only for 3D workloads).
 
     ``sparsity`` is the scheme's S at the base radius r (the per-step banded
     operand), NOT the monolithic S at radius t*r.
     """
-    i = w.intensity_matrix_reuse(sparsity, strip_m)
+    i = w.intensity_matrix_reuse(sparsity, strip_m, z_slab)
     raw = attainable(hw.p_matrix, hw.bandwidth, i)
-    beta = halo_recompute_factor(w.spec.radius, w.t, strip_m)
+    beta = reuse_beta(w.spec, w.t, strip_m, z_slab)
     actual = (sparsity / beta) * raw
     return UnitPerf("matrix_reuse", i, raw, actual,
                     bound_state(hw.p_matrix, hw.bandwidth, i), hw.ridge_matrix)

@@ -48,6 +48,10 @@ class PricingContext:
     #: ``workload.read_amp``, which is the canonical channel.
     h_block: Optional[int] = None
     use_sparse_unit: bool = False
+    #: 3D workloads: resolved slab depth / halo-plane block (None for 2D).
+    #: ``z_slab`` also feeds the reuse regime's dim-aware beta.
+    z_slab: Optional[int] = None
+    z_block: Optional[int] = None
 
 
 #: Total ``select_backend`` invocations this process -- lets tests assert a
@@ -69,6 +73,8 @@ def select_backend(
     use_sparse_unit: bool = False,
     strip_m: int = 128,
     h_block: Optional[int] = None,
+    z_slab: Optional[int] = None,
+    z_block: Optional[int] = None,
 ) -> Decision:
     """Pick the predicted-fastest backend for ``t`` fused steps of ``spec``.
 
@@ -87,21 +93,30 @@ def select_backend(
     kernels' own auto choice, ``0`` = whole-strip): the workload's memory
     term M uses the resulting read amplification 1 + 2h/strip_m, so
     intensities -- and the VPU-vs-MXU crossover -- price the substrate
-    that actually runs rather than the paper's ideal M = 2D.
+    that actually runs rather than the paper's ideal M = 2D.  3D
+    workloads additionally take ``z_slab``/``z_block`` (pricing defaults:
+    z_slab = strip_m, auto z_block) and price the product amplification
+    (1 + 2h/strip_m)(1 + 2z_block/z_slab); 1D workloads always price the
+    lifted substrate (strip_m = 1, read amplification exactly 1).  The
+    resolved geometry and its read factor are appended to every reason
+    string, so ``ops.explain`` surfaces what the substrate costs.
     """
     global _invocations
     _invocations += 1
     # Deferred: kernels.* pulls in the Pallas kernel modules, which must
     # not load just because repro.core was imported.
-    from repro.kernels.common import choose_hblock, substrate_read_amp
+    from repro.kernels.common import pricing_geom
     from repro.kernels.registry import candidate_units, priced_candidates
 
-    # Auto h_block resolves at the FUSED-regime halo t*r.  This prices every
+    # Auto blocks resolve at the FUSED-regime halo t*r.  This prices every
     # candidate's substrate faithfully: the fused regimes build with exactly
     # this halo, and the sequential regimes (direct/matmul) only price at
-    # t=1 -- their t>1 hooks return None -- where t*r == r.
-    hb = choose_hblock(strip_m, t * spec.radius) if h_block is None else h_block
-    read_amp = substrate_read_amp(strip_m, hb)
+    # t=1 -- their t>1 hooks return None -- where t*r == r.  pricing_geom
+    # shares resolve_substrate_geom's pin rules (including the hybrid
+    # z_block=0 rejection), so the priced substrate is always buildable.
+    geom = pricing_geom(spec.dim, t * spec.radius, strip_m, h_block,
+                        z_slab, z_block)
+    read_amp = geom.read_amp
     w = pm.StencilWorkload(spec, t, dtype_bytes, read_amp=read_amp)
     s_mono = sparsity if sparsity is not None else \
         pm.sparsity_banded(spec.radius * t, tile_n)
@@ -111,7 +126,10 @@ def select_backend(
 
     candidates = priced_candidates(PricingContext(
         workload=w, hw=hw, comparison=cmp_, s_mono=s_mono, s_reuse=s_reuse,
-        strip_m=strip_m, h_block=hb, use_sparse_unit=use_sparse_unit))
+        strip_m=geom.strip_m, h_block=geom.h_block,
+        use_sparse_unit=use_sparse_unit,
+        z_slab=geom.z_slab if spec.dim == 3 else None,
+        z_block=geom.z_block if spec.dim == 3 else None))
     if not candidates:
         raise RuntimeError("no registered backend priced this workload")
 
@@ -123,7 +141,8 @@ def select_backend(
     best_matrix = max(matrix_perfs) if matrix_perfs else vec
 
     if backend == "fused_matmul_reuse":
-        beta = pm.halo_recompute_factor(spec.radius, t, strip_m)
+        beta = pm.reuse_beta(spec, t, geom.strip_m,
+                             geom.z_slab if spec.dim == 3 else None)
         reason = (
             f"intermediate-reuse regime wins: alpha=1 (vs monolithic "
             f"alpha={w.alpha:.3f}), S_r={s_reuse:.3f} at base radius (vs "
@@ -140,6 +159,10 @@ def select_backend(
             f"({candidates[backend]:.3g} effective FLOP/s) among "
             f"{sorted(candidates)}"
         )
+    # Every reason carries the resolved substrate geometry + read factor
+    # (DESIGN.md §9): decide()/explain()/plan.decision all format it from
+    # the same resolved numbers, so they agree verbatim.
+    reason = f"{reason} | {geom.describe()}"
     return Decision(
         backend=backend,
         scenario=cmp_.scenario,

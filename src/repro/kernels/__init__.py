@@ -8,13 +8,16 @@ decision procedure + kernel lowering into a reusable ``StencilPlan``;
 register through ``repro.kernels.registry``."""
 from .ops import stencil_apply, explain
 from .plan import (StencilPlan, stencil_plan, spec_from_weights,
-                   plan_cache_stats, clear_plan_cache)
+                   plan_cache_stats, plan_cache_max, clear_plan_cache)
 from .registry import (register_backend, unregister_backend,
                        registered_backends, get_backend)
 from .stencil_direct import stencil_direct
-from .stencil_matmul import stencil_matmul, build_bands, band_sparsity
-from .common import (choose_hblock, choose_strip, choose_strip_blocks,
-                     choose_tile, resolve_strip_blocks, strip_in_specs,
+from .stencil_matmul import (stencil_matmul, build_bands, build_bands_nd,
+                             band_sparsity)
+from .common import (SubstrateGeom, choose_hblock, choose_slab_blocks,
+                     choose_strip, choose_strip_blocks, choose_tile,
+                     pricing_geom, resolve_strip_blocks,
+                     resolve_substrate_geom, strip_in_specs,
                      substrate_read_amp)
 
 

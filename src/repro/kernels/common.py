@@ -40,9 +40,35 @@ This module now implements the halo-row SUB-BLOCKED scheme (DESIGN.md §3):
 whole-strip 3-load substrate -- kept registered as the ``*_wholestrip``
 benchmark foils so ``benchmarks/traffic.py`` can measure seed / whole-strip
 / sub-blocked three ways.
+
+N-D HALO-PLANE GENERALIZATION (DESIGN.md §9).  The scheme above is the
+d=2 instance of a general halo-plane substrate:
+
+  * 3D grids (Z, H, W) run on a (z-slab, strip, block) Pallas grid: each
+    output cell is a (z_slab, strip_m, W) slab-strip, assembled from ONE
+    input reference of block shape (z_block, h_block, W) whose index map
+    walks the cell's own (z_slab/z_block)x(strip_m/h_block) blocks plus
+    the single ring of neighbor blocks that can contain halo planes/rows
+    (z_block >= halo, h_block >= halo), into a VMEM scratch of
+    (z_slab + 2*z_block, strip_m + 2*h_block, W).  Reads per step:
+
+        (1 + 2*h_block/strip_m) * (1 + 2*z_block/z_slab) * Z*H*W*D
+
+    The last axis keeps the free in-VMEM periodic wrap (every scratch row
+    is a TRUE global row), so the fused regimes carry over unchanged.
+    ``h_block=0`` selects the whole-slab foil (3x3 full neighbor slabs =
+    9x reads, the 3D analogue of the 2D 3-load scheme).
+  * 1D grids route through the 2D substrate lifted to (1, N): the
+    vertical halo is 0, so each strip streams only its own rows
+    (read amplification exactly 1) and the x-wrap stays in-VMEM.
+
+``SubstrateGeom`` carries the resolved (z_slab, z_block, strip_m,
+h_block) geometry through plans, the selector and the cache keys;
+``resolve_substrate_geom`` is THE shared sizing rule for every rank.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 
 import jax
@@ -127,15 +153,15 @@ def assemble_strip(top_ref, mid_ref, bot_ref, halo: int) -> jax.Array:
 
 
 def wrap_columns(x: jax.Array, halo: int) -> jax.Array:
-    """Materialize the periodic horizontal halo in-VMEM: (m, n) -> (m, n+2h).
+    """Materialize the periodic last-axis halo in-VMEM: (..., n) -> (..., n+2h).
 
     Valid whenever every row of ``x`` is a complete global row -- true for
-    strips, for assembled sub-block scratch rows, and for all intermediates
-    derived from them, which is what lets fused kernels re-wrap at every
-    step instead of carrying a 2*t*r-wide horizontal halo.
+    strips, for assembled sub-block scratch rows (2D and 3D), and for all
+    intermediates derived from them, which is what lets fused kernels
+    re-wrap at every step instead of carrying a 2*t*r-wide horizontal halo.
     """
     h = halo
-    return jnp.concatenate([x[:, -h:], x, x[:, :h]], axis=1)
+    return jnp.concatenate([x[..., -h:], x, x[..., :h]], axis=-1)
 
 
 def choose_tile(n: int, preferred: int = 128) -> int:
@@ -217,9 +243,199 @@ def choose_strip(
                                preferred)[0]
 
 
+def choose_slab_blocks(
+    z: int,
+    h: int,
+    n: int,
+    halo: int,
+    dtype_bytes: int = 4,
+    vmem_budget: int = VMEM_BUDGET_BYTES,
+    preferred: int = 128,
+    z_pin: int = None,
+    m_pin: int = None,
+) -> tuple:
+    """Jointly size the 3D geometry (z_slab, z_block, strip_m, h_block).
+
+    ``z_slab`` divides Z and ``strip_m`` divides H, both >= halo;
+    ``z_block``/``h_block`` are ``choose_hblock`` of each (smallest
+    halo-covering divisor above the 1/16 floor).  The input working set is
+    priced at the WORSE of the two substrates -- 9 full neighbor slabs
+    (whole-slab foil) vs scratch + in-flight block (sub-blocked) -- plus
+    the f32 halo-extended compute slab and the output slab, so a geometry
+    that fits the budget fits whichever substrate ends up running.  Among
+    fitting (z_slab, strip_m) pairs (free axes capped at ``preferred``)
+    the rule minimizes the analytic read amplification
+    (1 + 2*h_block/strip_m)(1 + 2*z_block/z_slab), tie-breaking toward
+    fewer grid cells (larger slabs).
+
+    ``z_pin``/``m_pin`` fix one (or both) axes to an explicit user pin:
+    the search then sizes only the FREE axis, conditioned on the pinned
+    value -- so a pinned strip of 1024 rows shrinks the chosen slab until
+    the joint working set fits, instead of being sized as if the strip
+    were auto.  Pins are exempt from the divisor/halo/``preferred``
+    filters (explicit values are validated strictly by the caller).
+    """
+
+    def blocks(zs: int, sm: int) -> tuple:
+        return choose_hblock(zs, halo), choose_hblock(sm, halo)
+
+    def working_set(zs: int, sm: int) -> int:
+        zb, hb = blocks(zs, sm)
+        scratch = (zs + 2 * zb) * (sm + 2 * hb) * n + zb * hb * n
+        whole = 9 * zs * sm * n
+        inputs = max(whole, scratch)
+        compute = (zs + 2 * halo) * (sm + 2 * halo) * (n + 2 * halo)
+        return (inputs + compute + zs * sm * n) * dtype_bytes
+
+    def amp(zs: int, sm: int) -> float:
+        zb, hb = blocks(zs, sm)
+        return substrate_read_amp(sm, hb) * substrate_read_amp(zs, zb)
+
+    def axis_candidates(extent: int, pin: int) -> list:
+        if pin is not None:
+            return [pin]
+        cands = [d for d in range(1, extent + 1)
+                 if extent % d == 0 and d >= halo] or [extent]
+        capped = [d for d in cands if d <= preferred]
+        return capped or [min(cands)]
+
+    pairs = [(zs, sm) for zs in axis_candidates(z, z_pin)
+             for sm in axis_candidates(h, m_pin)]
+    fitting = [p for p in pairs if working_set(*p) <= vmem_budget]
+    pool = fitting or [min(pairs, key=lambda p: working_set(*p))]
+    zs, sm = min(pool, key=lambda p: (amp(*p), -p[0] * p[1]))
+    zb, hb = blocks(zs, sm)
+    return zs, zb, sm, hb
+
+
+@dataclasses.dataclass(frozen=True)
+class SubstrateGeom:
+    """Resolved halo-plane substrate geometry for one kernel launch.
+
+    ``dim`` is the grid rank (1D executes lifted through the 2D substrate
+    with strip_m=1 and zero vertical halo).  ``h_block=0`` selects the
+    whole-strip/whole-slab foil substrate (and forces ``z_block=0``);
+    otherwise both block heights are >= the halo and divide their tile.
+    """
+
+    dim: int
+    strip_m: int
+    h_block: int                 # 0 = whole-strip/whole-slab foil
+    z_slab: int = 1              # 3D only; 1 otherwise
+    z_block: int = 0             # 3D only; 0 = whole-slab (with h_block=0)
+
+    @property
+    def read_amp(self) -> float:
+        """Analytic grid-read amplification of this geometry (DESIGN.md §9):
+        1 (lifted 1D), 1 + 2h/strip_m (2D), the product
+        (1 + 2h/strip_m)(1 + 2z_block/z_slab) (3D); the foils read 3x (2D)
+        and 9x (3D)."""
+        if self.dim == 1:
+            return 1.0
+        amp = substrate_read_amp(self.strip_m, self.h_block)
+        if self.dim == 3:
+            amp *= substrate_read_amp(self.z_slab, self.z_block)
+        return amp
+
+    def describe(self) -> str:
+        """The substrate clause of decision reason strings -- formatted
+        from resolved numbers only, so ``ops.explain`` and plan decisions
+        agree verbatim whenever they resolve the same geometry."""
+        if self.dim == 3:
+            geo = (f"z_slab={self.z_slab}, z_block={self.z_block}, "
+                   f"strip_m={self.strip_m}, h_block={self.h_block}")
+        elif self.dim == 1:
+            geo = f"1D lifted, strip_m={self.strip_m}"
+        else:
+            geo = f"strip_m={self.strip_m}, h_block={self.h_block}"
+        return f"substrate read_amp={self.read_amp:.3f}x ({geo})"
+
+
+def _resolve_z_block(h_block: int, z_block: int, z_slab: int,
+                     halo: int) -> int:
+    """z_block under the shared pin rules: forced 0 by the whole foil
+    (h_block=0), rejected as a lone 0 (no hybrid substrate exists),
+    otherwise the explicit pin or ``choose_hblock`` of the slab.  Both
+    ``resolve_substrate_geom`` and ``pricing_geom`` route through here, so
+    plan building and grid-free pricing can never disagree on the rule.
+    """
+    if h_block == 0:
+        return 0
+    if z_block == 0:
+        raise ValueError(
+            "z_block=0 (whole-slab) is only valid together with "
+            "h_block=0 (the whole-slab foil substrate)")
+    return z_block if z_block is not None else choose_hblock(z_slab, halo)
+
+
+def pricing_geom(dim: int, halo: int, strip_m: int = 128,
+                 h_block: int = None, z_slab: int = None,
+                 z_block: int = None) -> SubstrateGeom:
+    """Grid-free geometry resolution for pricing paths (the selector has
+    no grid to size against): dim 1 is always the lifted substrate; dim 2
+    takes ``strip_m`` as given with ``choose_hblock`` filling ``h_block``;
+    dim 3 defaults ``z_slab`` to ``strip_m`` and resolves ``z_block``
+    under the same shared rule as ``resolve_substrate_geom``."""
+    if dim == 1:
+        return SubstrateGeom(dim=1, strip_m=1, h_block=1)
+    hb = choose_hblock(strip_m, halo) if h_block is None else h_block
+    if dim == 2:
+        return SubstrateGeom(dim=2, strip_m=strip_m, h_block=hb)
+    if dim != 3:
+        raise ValueError(f"substrate supports 1D/2D/3D grids, got dim {dim}")
+    zs = strip_m if z_slab is None else z_slab
+    zb = _resolve_z_block(hb, z_block, zs, halo)
+    return SubstrateGeom(dim=3, strip_m=strip_m, h_block=hb,
+                         z_slab=zs, z_block=zb)
+
+
+def resolve_substrate_geom(grid_shape, halo: int, dtype_bytes: int,
+                           tile_m: int = None, h_block: int = None,
+                           z_slab: int = None,
+                           z_block: int = None) -> SubstrateGeom:
+    """Resolve the full substrate geometry from possibly-``None`` requests.
+
+    THE shared N-D auto-sizing rule: the kernels, ``stencil_plan`` pricing
+    and ``registry.PlanContext.resolve_geom`` all call this, so plan-level
+    and kernel-level sizing can never drift apart.  Rank comes from
+    ``len(grid_shape)``:
+
+      * 1D: lifted 2D geometry (strip_m=1, zero vertical halo, read amp 1);
+      * 2D: exactly ``resolve_strip_blocks`` (z fields stay inert);
+      * 3D: joint ``choose_slab_blocks`` when unpinned; explicit ``tile_m``
+        / ``z_slab`` are clamped to the grid and get ``choose_hblock``
+        blocks unless those are pinned too.  ``h_block=0`` selects the
+        whole-slab foil and forces ``z_block=0``; a lone ``z_block=0``
+        under a sub-blocked h_block is rejected (no hybrid substrate).
+    """
+    dim = len(grid_shape)
+    if dim == 1:
+        hb = 0 if h_block == 0 else 1
+        return SubstrateGeom(dim=1, strip_m=1, h_block=hb)
+    if dim == 2:
+        strip_m, hb = resolve_strip_blocks(grid_shape, halo, dtype_bytes,
+                                           tile_m, h_block)
+        return SubstrateGeom(dim=2, strip_m=strip_m, h_block=hb)
+    if dim != 3:
+        raise ValueError(f"substrate supports 1D/2D/3D grids, got rank {dim}")
+    z, h, _ = grid_shape
+    # One pin-aware joint search: a pinned axis is fixed (clamped to the
+    # grid) and only the free axis is sized -- conditioned on the pin, so
+    # the VMEM fit and amp-minimization always describe the geometry that
+    # actually runs.
+    zs, auto_zb, sm, auto_hb = choose_slab_blocks(
+        z, h, grid_shape[-1], halo, dtype_bytes,
+        z_pin=min(z_slab, z) if z_slab is not None else None,
+        m_pin=min(tile_m, h) if tile_m is not None else None)
+    hb = h_block if h_block is not None else auto_hb
+    zb = _resolve_z_block(hb, z_block, zs, halo)
+    return SubstrateGeom(dim=3, strip_m=sm, h_block=hb, z_slab=zs, z_block=zb)
+
+
 def validate_tiling(shape, strip_m: int, tile_n: int, halo: int,
-                    radius: int = None, h_block: int = None) -> None:
-    """Strip-substrate tiling constraints.
+                    radius: int = None, h_block: int = None,
+                    z_slab: int = None, z_block: int = None) -> None:
+    """Halo-plane substrate tiling constraints (1D, 2D and 3D grids).
 
     ``strip_m`` is the strip height (rows per output block); ``tile_n`` is
     the column-tile width of the banded MXU contraction (pass the full width
@@ -229,8 +445,37 @@ def validate_tiling(shape, strip_m: int, tile_n: int, halo: int,
     to ``halo`` for callers that run a single step at the full radius).
     ``h_block`` (sub-blocked substrate) must divide ``strip_m`` and cover
     the vertical halo; pass ``None``/0 for the whole-strip substrate.
+    3D grids additionally constrain ``z_slab`` (divides Z, >= halo) and
+    ``z_block`` (divides ``z_slab``, >= halo when sub-blocked).
     """
-    h, w = shape
+    if len(shape) == 1:
+        # Lifted-1D: no vertical support, so only the wrap radius binds.
+        w = shape[0]
+        r = halo if radius is None else radius
+        if w < r:
+            raise ValueError(
+                f"wrap radius {r} exceeds grid width {w}; lower the radius")
+        return
+    if len(shape) == 2:
+        h, w = shape
+    else:
+        z, h, w = shape
+        zs = z if z_slab is None else z_slab
+        if z % zs:
+            raise ValueError(
+                f"grid depth {z} not divisible by z_slab {zs}")
+        if zs < halo:
+            raise ValueError(
+                f"halo {halo} exceeds z_slab {zs}; "
+                "lower fusion depth or enlarge slabs")
+        if z_block:
+            if zs % z_block:
+                raise ValueError(
+                    f"z_block {z_block} does not divide z_slab {zs}")
+            if z_block < halo:
+                raise ValueError(
+                    f"halo {halo} exceeds z_block {z_block}; "
+                    "enlarge z_block or lower fusion depth")
     if h % strip_m or w % tile_n:
         raise ValueError(
             f"grid {shape} not divisible by tiles ({strip_m},{tile_n})"
@@ -269,7 +514,9 @@ def strip_substrate_call(compute, x: jax.Array, strip_m: int, h_block: int,
     (strip_m, n) f32 output strip; the launcher casts back to ``x.dtype``.
     ``h_block=0`` runs the whole-strip 3-load pipeline; otherwise the
     sub-blocked (strip, h-block) grid with VMEM scratch assembly (module
-    docstring).
+    docstring).  ``halo=0`` (the lifted-1D case: no vertical support at
+    all) drops the neighbor loads entirely on either substrate -- each
+    strip streams only its own rows, read amplification exactly 1.
     """
     h, n = x.shape
     gm = h // strip_m
@@ -280,6 +527,24 @@ def strip_substrate_call(compute, x: jax.Array, strip_m: int, h_block: int,
         if n_grid_dims == 1:
             return pl.BlockSpec(c.shape, lambda i, z=zeros: z)
         return pl.BlockSpec(c.shape, lambda i, j, z=zeros: z)
+
+    if halo == 0:
+        # No vertical halo => no neighbor strips to fetch; one load per
+        # strip on both substrates (they coincide here).
+        def kern_flat(mid_ref, *rest):
+            *const_refs, out_ref = rest
+            cur = mid_ref[...].astype(jnp.float32)
+            out_ref[...] = compute(cur, *const_refs).astype(out_dtype)
+
+        return pl.pallas_call(
+            kern_flat,
+            grid=(gm,),
+            in_specs=[pl.BlockSpec((strip_m, n), lambda i: (i, 0))]
+            + [const_spec(c, 1) for c in consts],
+            out_specs=pl.BlockSpec((strip_m, n), lambda i: (i, 0)),
+            out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+            interpret=interpret,
+        )(x, *consts)
 
     if not h_block:
         def kern_strip(top_ref, mid_ref, bot_ref, *rest):
@@ -322,6 +587,110 @@ def strip_substrate_call(compute, x: jax.Array, strip_m: int, h_block: int,
     )(x, *consts)
 
 
+def slab_substrate_call(compute, x: jax.Array, geom: SubstrateGeom,
+                        halo: int, interpret: bool, consts=()) -> jax.Array:
+    """Launch ``compute`` over every (z-slab, strip) output cell of a 3D
+    grid, on either halo-plane substrate (module docstring, DESIGN.md §9).
+
+    The 3D analogue of ``strip_substrate_call`` -- and like it, the ONE
+    place the 3D kernels lower through.  ``compute(cur, *const_refs)``
+    receives the (z_slab + 2*halo, strip_m + 2*halo, W) f32 halo-extended
+    slab (periodic in z and y via the modulo index maps; the x-wrap is the
+    kernels' own in-VMEM job) and returns the (z_slab, strip_m, W) output
+    slab.  ``geom.h_block=0`` runs the whole-slab foil: 3x3 full neighbor
+    slabs referenced through nine shifted index maps (9x reads).
+    Otherwise the sub-blocked scheme: ONE (z_block, h_block, W) input
+    reference walks, for output cell (iz, iy), the
+    (z_slab/z_block + 2) x (strip_m/h_block + 2) block ring -- own blocks
+    plus the single neighbor blocks that can contain halo planes/rows --
+    into a VMEM scratch of (z_slab + 2*z_block, strip_m + 2*h_block, W);
+    compute fires on the ring's final block (``pl.when``).  Both paths
+    assemble byte-identical extended slabs, so (with the kernels'
+    optimization_barrier between assembly and compute) their outputs are
+    bit-for-bit equal.
+    """
+    z, h, n = x.shape
+    zs, sm = geom.z_slab, geom.strip_m
+    gz, gm = z // zs, h // sm
+    out_dtype = x.dtype
+
+    def const_spec(c, n_grid_dims):
+        zeros = (0,) * c.ndim
+        if n_grid_dims == 2:
+            return pl.BlockSpec(c.shape, lambda i, j, zz=zeros: zz)
+        return pl.BlockSpec(c.shape, lambda i, j, k, zz=zeros: zz)
+
+    if not geom.h_block:
+        def slab_spec(dz, dy):
+            return pl.BlockSpec(
+                (zs, sm, n),
+                functools.partial(
+                    lambda iz, iy, dz=dz, dy=dy:
+                    ((iz + dz) % gz, (iy + dy) % gm, 0)),
+            )
+
+        def kern_whole(*refs):
+            nbr = refs[:9]
+            *const_refs, out_ref = refs[9:]
+
+            def yrow(r_up, r_mid, r_dn):
+                return jnp.concatenate(
+                    [r_up[...][:, -halo:, :], r_mid[...],
+                     r_dn[...][:, :halo, :]], axis=1)
+
+            rows = [yrow(*nbr[3 * i: 3 * i + 3]) for i in range(3)]
+            cur = jnp.concatenate(
+                [rows[0][-halo:], rows[1], rows[2][:halo]],
+                axis=0).astype(jnp.float32)
+            out_ref[...] = compute(cur, *const_refs).astype(out_dtype)
+
+        return pl.pallas_call(
+            kern_whole,
+            grid=(gz, gm),
+            in_specs=[slab_spec(dz, dy)
+                      for dz in (-1, 0, 1) for dy in (-1, 0, 1)]
+            + [const_spec(c, 2) for c in consts],
+            out_specs=pl.BlockSpec((zs, sm, n), lambda iz, iy: (iz, iy, 0)),
+            out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+            interpret=interpret,
+        )(*([x] * 9), *consts)
+
+    zb, hb = geom.z_block, geom.h_block
+    nbz, nby = zs // zb, sm // hb
+    ring_y = nby + 2
+    nj = (nbz + 2) * ring_y
+    total_z, total_y = z // zb, h // hb
+
+    def block_index(iz, iy, j):
+        jz, jy = j // ring_y, j % ring_y
+        return ((iz * nbz + jz - 1) % total_z,
+                (iy * nby + jy - 1) % total_y, 0)
+
+    def kern_sub(blk_ref, *rest):
+        *const_refs, out_ref, scratch_ref = rest
+        j = pl.program_id(2)
+        jz, jy = j // ring_y, j % ring_y
+        scratch_ref[pl.ds(jz * zb, zb), pl.ds(jy * hb, hb), :] = blk_ref[...]
+
+        @pl.when(j == nj - 1)
+        def _compute():
+            cur = scratch_ref[zb - halo: zb + zs + halo,
+                              hb - halo: hb + sm + halo,
+                              :].astype(jnp.float32)
+            out_ref[...] = compute(cur, *const_refs).astype(out_dtype)
+
+    return pl.pallas_call(
+        kern_sub,
+        grid=(gz, gm, nj),
+        in_specs=[pl.BlockSpec((zb, hb, n), block_index)]
+        + [const_spec(c, 3) for c in consts],
+        out_specs=pl.BlockSpec((zs, sm, n), lambda iz, iy, j: (iz, iy, 0)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        scratch_shapes=[pltpu.VMEM((zs + 2 * zb, sm + 2 * hb, n), x.dtype)],
+        interpret=interpret,
+    )(x, *consts)
+
+
 def substrate_read_amp(strip_m: int, h_block: int) -> float:
     """Analytic grid-read amplification of one kernel launch.
 
@@ -345,11 +714,11 @@ def resolve_strip_blocks(grid_shape, halo: int, dtype_bytes: int,
                          tile_m: int = None, h_block: int = None) -> tuple:
     """Resolve (strip_m, h_block) from possibly-``None`` user requests.
 
-    THE shared auto-sizing rule: both strip kernels and
-    ``registry.PlanContext.resolve_blocks`` call this, so plan-level and
-    kernel-level sizing can never drift apart.  ``tile_m=None`` sizes both
-    jointly (``choose_strip_blocks``); an explicit ``tile_m`` is clamped to
-    the grid and, when ``h_block`` is also ``None``, gets ``choose_hblock``
+    The 2D slice of the shared sizing rule -- ``resolve_substrate_geom``
+    delegates its dim-2 branch here, so plan-level and kernel-level sizing
+    can never drift apart.  ``tile_m=None`` sizes both jointly
+    (``choose_strip_blocks``); an explicit ``tile_m`` is clamped to the
+    grid and, when ``h_block`` is also ``None``, gets ``choose_hblock``
     of the clamped strip.  ``h_block=0`` passes through (whole-strip).
     """
     h, wid = grid_shape
@@ -387,4 +756,31 @@ def hbm_read_bytes_per_step(shape, strip_m: int, dtype_bytes: int,
     total = gm * rows_per_strip * w * dtype_bytes
     if bands_shape is not None:
         total += gm * int(np.prod(bands_shape)) * dtype_bytes
+    return total
+
+
+def hbm_read_bytes_per_step_3d(shape, geom: SubstrateGeom, dtype_bytes: int,
+                               bands_shape=None) -> int:
+    """Analytic HBM read traffic of one 3D slab-substrate kernel launch.
+
+    Whole-slab foil (``geom.h_block=0``): each of the (Z/z_slab)(H/strip_m)
+    cells streams 9 full (z_slab, strip_m, W) slabs -> the grid is read 9x
+    per step.  Sub-blocked: each cell streams the
+    (z_slab + 2*z_block)(strip_m + 2*h_block) block ring -> the grid is
+    read (1 + 2*h_block/strip_m)(1 + 2*z_block/z_slab) times.  The banded
+    operand (if any) is charged once per output cell, as in 2D.
+    """
+    import numpy as np
+
+    z, h, w = shape
+    if geom.dim != 3:
+        raise ValueError(f"3D traffic model needs a 3D geometry, got {geom}")
+    cells = (z // geom.z_slab) * (h // geom.strip_m)
+    planes = round(geom.z_slab
+                   * substrate_read_amp(geom.z_slab, geom.z_block))
+    rows = round(geom.strip_m
+                 * substrate_read_amp(geom.strip_m, geom.h_block))
+    total = cells * planes * rows * w * dtype_bytes
+    if bands_shape is not None:
+        total += cells * int(np.prod(bands_shape)) * dtype_bytes
     return total

@@ -54,6 +54,8 @@ def stencil_apply(
     tile_m: Optional[int] = None,
     tile_n: Optional[int] = None,
     h_block: Optional[int] = None,
+    z_slab: Optional[int] = None,
+    z_block: Optional[int] = None,
     interpret: Optional[bool] = None,
     compute_dtype=None,
 ) -> jax.Array:
@@ -61,13 +63,15 @@ def stencil_apply(
 
     Thin wrapper: equivalent to building ``stencil_plan(weights, x.shape,
     x.dtype, t, ...)`` and calling it -- identical signatures share one
-    cached plan.  ``tile_m``/``tile_n`` default to ``None`` = auto-sized by
-    the kernels (``choose_strip`` / ``choose_tile``); explicit values are
-    validated strictly."""
+    cached plan.  1D, 2D and 3D grids are supported (the grid rank must
+    match ``weights.ndim``).  ``tile_m``/``tile_n``/``z_slab`` default to
+    ``None`` = auto-sized by the kernels (``resolve_substrate_geom`` /
+    ``choose_tile``); explicit values are validated strictly."""
     plan = stencil_plan(
         weights, x.shape, x.dtype, t, hw=hw,
         backend=None if backend == "auto" else backend,
-        tile_m=tile_m, tile_n=tile_n, h_block=h_block, interpret=interpret,
+        tile_m=tile_m, tile_n=tile_n, h_block=h_block,
+        z_slab=z_slab, z_block=z_block, interpret=interpret,
         compute_dtype=compute_dtype,
     )
     return plan(x)
@@ -77,25 +81,32 @@ def explain(
     weights, t: int, dtype_bytes: int = 4,
     hw: pm.HardwareSpec = pm.TPU_V5E_BF16, tile_n: int = 128,
     strip_m: int = 128, h_block: Optional[int] = None,
+    z_slab: Optional[int] = None, z_block: Optional[int] = None,
     grid_shape=None, tile_m: Optional[int] = None,
 ) -> Decision:
     """Expose the dispatch decision (scenario, predicted speedup, reason).
 
     Delegates to ``repro.kernels.plan.decide`` -- the same single decision
-    path plan building and the ``auto`` backend consult.  Plans price the
-    strip/h-block geometry they resolve FOR THEIR GRID, so pass
-    ``grid_shape`` -- plus the same ``tile_m``/``h_block`` pins you would
-    hand ``stencil_plan`` -- and the identical resolution runs here,
-    guaranteeing ``explain`` agrees with what such a plan actually
+    path plan building and the ``auto`` backend consult.  The reason
+    string includes the substrate's read-amplification factor and the
+    resolved (z_slab, strip_m, h_block) geometry for every rank.  Plans
+    price the geometry they resolve FOR THEIR GRID, so pass ``grid_shape``
+    -- plus the same ``tile_m``/``h_block``/``z_slab``/``z_block`` pins
+    you would hand ``stencil_plan`` -- and the identical resolution runs
+    here, guaranteeing ``explain`` agrees with what such a plan actually
     executes (``strip_m`` is then superseded by the resolution).  Without
     ``grid_shape`` the decision is priced at the documented defaults
-    (strip_m=128, auto h_block), which only coincide with plans whose
-    grids resolve to them."""
+    (strip_m=128, z_slab=strip_m for 3D, auto blocks), which only coincide
+    with plans whose grids resolve to them."""
     spec = spec_from_weights(weights)
     if grid_shape is not None:
-        from .common import resolve_strip_blocks
-        strip_m, h_block = resolve_strip_blocks(
+        from .common import resolve_substrate_geom
+        geom = resolve_substrate_geom(
             tuple(int(n) for n in grid_shape), t * spec.radius, dtype_bytes,
-            tile_m, h_block)
+            tile_m, h_block, z_slab, z_block)
+        strip_m, h_block = geom.strip_m, geom.h_block
+        z_slab = geom.z_slab if geom.dim == 3 else None
+        z_block = geom.z_block if geom.dim == 3 else None
     return decide(spec, t, dtype_bytes, hw,
-                  tile_n=tile_n, strip_m=strip_m, h_block=h_block)
+                  tile_n=tile_n, strip_m=strip_m, h_block=h_block,
+                  z_slab=z_slab, z_block=z_block)

@@ -59,12 +59,16 @@ def decide(
     hw: pm.HardwareSpec = pm.TPU_V5E_BF16,
     tile_n: int = 128, strip_m: int = 128,
     h_block: Optional[int] = None,
+    z_slab: Optional[int] = None,
+    z_block: Optional[int] = None,
 ) -> Decision:
     """THE decision path: plan building, ``stencil_apply(backend="auto")``
     and ``ops.explain`` all consult this one function, so they can never
-    disagree about the priced ``Decision``."""
+    disagree about the priced ``Decision``.  ``z_slab``/``z_block`` matter
+    only for 3D specs (the halo-plane substrate's depth geometry)."""
     return select_backend(spec, t, dtype_bytes=dtype_bytes, hw=hw,
-                          tile_n=tile_n, strip_m=strip_m, h_block=h_block)
+                          tile_n=tile_n, strip_m=strip_m, h_block=h_block,
+                          z_slab=z_slab, z_block=z_block)
 
 
 class StencilPlan:
@@ -163,13 +167,34 @@ class StencilPlan:
 # for distributed plans -- the mesh, so a long-running server sweeping
 # geometries must not grow without bound).
 # ---------------------------------------------------------------------------
+import os
 from collections import OrderedDict
 
-#: Maximum cached plans; least-recently-used entries are evicted beyond it.
+#: Default maximum cached plans; least-recently-used entries are evicted
+#: beyond the bound.  Override per process with the REPRO_PLAN_CACHE_SIZE
+#: environment variable (read at every eviction, so tests and long-running
+#: servers can retune without reimporting).
 PLAN_CACHE_MAX = 512
 
 _CACHE: "OrderedDict" = OrderedDict()
 _STATS = {"hits": 0, "misses": 0}
+
+
+def plan_cache_max() -> int:
+    """The effective LRU bound: ``REPRO_PLAN_CACHE_SIZE`` if set (must be a
+    positive integer), else :data:`PLAN_CACHE_MAX`."""
+    raw = os.environ.get("REPRO_PLAN_CACHE_SIZE")
+    if raw is None:
+        return PLAN_CACHE_MAX
+    try:
+        bound = int(raw)
+    except ValueError:
+        raise ValueError(
+            f"REPRO_PLAN_CACHE_SIZE must be an integer, got {raw!r}") from None
+    if bound < 1:
+        raise ValueError(
+            f"REPRO_PLAN_CACHE_SIZE must be >= 1, got {bound}")
+    return bound
 
 
 def plan_cache_stats() -> dict:
@@ -209,6 +234,8 @@ def stencil_plan(
     tile_m: Optional[int] = None,
     tile_n: Optional[int] = None,
     h_block: Optional[int] = None,
+    z_slab: Optional[int] = None,
+    z_block: Optional[int] = None,
     interpret: Optional[bool] = None,
     compute_dtype=None,
     use_cache: bool = True,
@@ -218,7 +245,9 @@ def stencil_plan(
     Args:
       spec_or_weights: a dense ``(2r+1)^d`` kernel, or a ``StencilSpec``
         (then the deterministic Jacobi weights of that spec are used).
-      grid_shape: global grid shape the plan is specialized to.
+      grid_shape: global grid shape the plan is specialized to; its rank
+        must match the kernel's (1D, 2D and 3D grids are supported --
+        DESIGN.md §9).
       dtype: grid dtype.
       t: fusion depth -- time steps advanced per plan invocation.
       hw: hardware model consulted by the selector.
@@ -232,7 +261,9 @@ def stencil_plan(
       tile_m/tile_n: explicit strip height / column-tile width (``None`` =
         auto-sized exactly as the kernels themselves would).
       h_block: halo sub-block height of the strip substrate (``None`` =
-        auto, ``0`` = whole-strip 3-load substrate); part of the cache key.
+        auto, ``0`` = whole-strip/whole-slab foil); part of the cache key.
+      z_slab/z_block: 3D grids only -- slab depth and halo-plane block of
+        the halo-plane substrate (``None`` = auto); part of the cache key.
       interpret: Pallas interpret mode; ``None`` = off-TPU default.
       use_cache: bypass the process-wide plan cache when ``False``.
     """
@@ -249,6 +280,10 @@ def stencil_plan(
     else:
         weights = np.asarray(spec_or_weights)
     grid_shape = tuple(int(n) for n in grid_shape)
+    if len(grid_shape) != weights.ndim:
+        raise ValueError(
+            f"grid rank {len(grid_shape)} != kernel rank {weights.ndim}; "
+            "the plan's grid_shape must match the stencil dimensionality")
     if interpret is None:
         interpret = _default_interpret()
 
@@ -259,7 +294,8 @@ def stencil_plan(
     # under overwrite=True) predates a registry change -- a newly priced
     # backend must win future auto plans, not be masked by the cache
     key = (_weights_key(weights), grid_shape, _dtype_key(dtype), t, hw,
-           shard_key, backend, tile_m, tile_n, h_block, interpret,
+           shard_key, backend, tile_m, tile_n, h_block, z_slab, z_block,
+           interpret,
            None if compute_dtype is None else _dtype_key(compute_dtype),
            registry.generation())
     if use_cache and key in _CACHE:
@@ -274,14 +310,16 @@ def stencil_plan(
     # this grid (fused-regime halo t*r), so the read-amplification term in
     # the decision matches the substrate that runs; tile_n keeps its
     # historical 128 pricing default when unpinned.
-    from .common import resolve_strip_blocks
-    strip_px, hb_px = resolve_strip_blocks(
+    from .common import resolve_substrate_geom
+    geom_px = resolve_substrate_geom(
         grid_shape, t * spec.radius, np.dtype(dtype).itemsize,
-        tile_m, h_block)
+        tile_m, h_block, z_slab, z_block)
     decision = decide(
         spec, t, dtype_bytes=np.dtype(dtype).itemsize, hw=hw,
         tile_n=tile_n if tile_n is not None else 128,
-        strip_m=strip_px, h_block=hb_px,
+        strip_m=geom_px.strip_m, h_block=geom_px.h_block,
+        z_slab=geom_px.z_slab if geom_px.dim == 3 else None,
+        z_block=geom_px.z_block if geom_px.dim == 3 else None,
     )
     exec_backend = backend if backend is not None else decision.backend
 
@@ -289,6 +327,7 @@ def stencil_plan(
         spec=spec, weights=weights, grid_shape=grid_shape,
         dtype=np.dtype(dtype), t=t, tile_m=tile_m, tile_n=tile_n,
         interpret=interpret, compute_dtype=compute_dtype, h_block=h_block,
+        z_slab=z_slab, z_block=z_block,
     )
 
     halo_plan = None
@@ -310,8 +349,12 @@ def stencil_plan(
         build_time_s=time.perf_counter() - t0,
     )
     if use_cache:
+        # Read (and validate) the bound BEFORE inserting: a malformed
+        # REPRO_PLAN_CACHE_SIZE must never leave the cache growing with
+        # eviction disabled.
+        bound = plan_cache_max()
         _CACHE[key] = plan
-        while len(_CACHE) > PLAN_CACHE_MAX:
+        while len(_CACHE) > bound:
             _CACHE.popitem(last=False)
     return plan
 
@@ -339,7 +382,8 @@ def _build_distributed(mesh, axis_names, dist_mode, ctx, exec_backend):
     # every other registered backend plugs in as a Pallas local apply.
     local = None if exec_backend == "reference" else pallas_local_apply(
         exec_backend, interpret=ctx.interpret,
-        tile_m=ctx.tile_m, tile_n=ctx.tile_n, h_block=ctx.h_block)
+        tile_m=ctx.tile_m, tile_n=ctx.tile_n, h_block=ctx.h_block,
+        z_slab=ctx.z_slab, z_block=ctx.z_block)
     stepper = make_distributed_stepper(
         mesh, axis_names, ctx.weights, t=ctx.t, mode=dist_mode,
         local_apply=local)

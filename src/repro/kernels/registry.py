@@ -35,7 +35,8 @@ import numpy as np
 from repro.core import perfmodel as pm
 from repro.stencil.spec import StencilSpec
 from repro.stencil.weights import fuse_weights
-from .common import choose_tile, resolve_strip_blocks, validate_tiling
+from .common import (SubstrateGeom, choose_tile, resolve_substrate_geom,
+                     validate_tiling)
 from . import legacy as _legacy
 from . import ref as _ref
 from .stencil_direct import stencil_direct
@@ -50,15 +51,17 @@ class PlanContext:
     """Everything a backend builder may consume, resolved once per plan."""
 
     spec: StencilSpec
-    weights: np.ndarray          # dense (2r+1)^2 base kernel, host-side
-    grid_shape: Tuple[int, int]
+    weights: np.ndarray          # dense (2r+1)^d base kernel, host-side
+    grid_shape: Tuple[int, ...]
     dtype: np.dtype
     t: int
     tile_m: Optional[int]        # user-requested; None = auto per kernel rule
     tile_n: Optional[int]
     interpret: bool
     compute_dtype: object = None
-    h_block: Optional[int] = None   # None = auto, 0 = whole-strip substrate
+    h_block: Optional[int] = None   # None = auto, 0 = whole-strip/slab foil
+    z_slab: Optional[int] = None    # 3D grids: slab depth (None = auto)
+    z_block: Optional[int] = None   # 3D grids: halo-plane block (None = auto)
 
     @property
     def radius(self) -> int:
@@ -68,21 +71,30 @@ class PlanContext:
         """Radius-``t*r`` composed kernel (monolithic fusion operand)."""
         return fuse_weights(self.weights, self.t)
 
-    def resolve_blocks(self, halo: int) -> Tuple[int, int]:
-        """(strip height, halo-block height) under the kernels' own rule."""
-        return resolve_strip_blocks(self.grid_shape, halo,
-                                    np.dtype(self.dtype).itemsize,
-                                    self.tile_m, self.h_block)
+    def resolve_geom(self, halo: int) -> SubstrateGeom:
+        """Full substrate geometry under the kernels' own N-D rule."""
+        return resolve_substrate_geom(self.grid_shape, halo,
+                                      np.dtype(self.dtype).itemsize,
+                                      self.tile_m, self.h_block,
+                                      self.z_slab, self.z_block)
 
     def resolve_tile_n(self) -> int:
         """Column-tile width of the banded contraction (MXU paths)."""
-        wid = self.grid_shape[1]
+        wid = self.grid_shape[-1]
         return choose_tile(wid) if self.tile_n is None else min(self.tile_n, wid)
 
-    def validate(self, strip_m: int, tile_n: int, halo: int,
-                 radius: int, h_block: int = None) -> None:
-        validate_tiling(self.grid_shape, strip_m, tile_n, halo, radius,
-                        h_block)
+    def kernel_kwargs(self, geom: SubstrateGeom) -> dict:
+        """The substrate-geometry kwargs both strip kernels accept."""
+        kw = dict(tile_m=geom.strip_m, h_block=geom.h_block)
+        if geom.dim == 3:
+            kw.update(z_slab=geom.z_slab, z_block=geom.z_block)
+        return kw
+
+    def validate(self, geom: SubstrateGeom, tile_n: int, halo: int,
+                 radius: int) -> None:
+        validate_tiling(self.grid_shape, geom.strip_m, tile_n, halo, radius,
+                        geom.h_block,
+                        geom.z_slab if geom.dim == 3 else None, geom.z_block)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -183,14 +195,14 @@ def _build_reference(ctx: PlanContext) -> Callable:
 def _build_direct(ctx: PlanContext) -> Callable:
     """t sequential VPU kernel launches, halo r per step."""
     w, t, r = ctx.weights, ctx.t, ctx.radius
-    strip_m, hb = ctx.resolve_blocks(r)
-    ctx.validate(strip_m, ctx.grid_shape[1], r, r, hb)
+    geom = ctx.resolve_geom(r)
+    ctx.validate(geom, ctx.grid_shape[-1], r, r)
+    kw = ctx.kernel_kwargs(geom)
     interp = ctx.interpret
 
     def run(x):
         for _ in range(t):
-            x = stencil_direct(x, w, t=1, tile_m=strip_m, h_block=hb,
-                               interpret=interp)
+            x = stencil_direct(x, w, t=1, interpret=interp, **kw)
         return x
     return run
 
@@ -198,27 +210,28 @@ def _build_direct(ctx: PlanContext) -> Callable:
 def _build_fused_direct(ctx: PlanContext) -> Callable:
     """One VPU kernel, t in-VMEM steps (temporal fusion, halo t*r)."""
     w, t, r = ctx.weights, ctx.t, ctx.radius
-    strip_m, hb = ctx.resolve_blocks(t * r)
-    ctx.validate(strip_m, ctx.grid_shape[1], t * r, r, hb)
+    geom = ctx.resolve_geom(t * r)
+    ctx.validate(geom, ctx.grid_shape[-1], t * r, r)
+    kw = ctx.kernel_kwargs(geom)
     interp = ctx.interpret
 
     def run(x):
-        return stencil_direct(x, w, t=t, tile_m=strip_m, h_block=hb,
-                              interpret=interp)
+        return stencil_direct(x, w, t=t, interpret=interp, **kw)
     return run
 
 
 def _build_matmul(ctx: PlanContext) -> Callable:
     """t sequential MXU banded contractions, halo r per step."""
     w, t, r = ctx.weights, ctx.t, ctx.radius
-    (strip_m, hb), tile_n = ctx.resolve_blocks(r), ctx.resolve_tile_n()
-    ctx.validate(strip_m, tile_n, r, r, hb)
+    geom, tile_n = ctx.resolve_geom(r), ctx.resolve_tile_n()
+    ctx.validate(geom, tile_n, r, r)
+    kw = ctx.kernel_kwargs(geom)
     interp, cdt = ctx.interpret, ctx.compute_dtype
 
     def run(x):
         for _ in range(t):
-            x = stencil_matmul(x, w, t=1, tile_m=strip_m, tile_n=tile_n,
-                               h_block=hb, interpret=interp, compute_dtype=cdt)
+            x = stencil_matmul(x, w, t=1, tile_n=tile_n, interpret=interp,
+                               compute_dtype=cdt, **kw)
         return x
     return run
 
@@ -227,26 +240,28 @@ def _build_fused_matmul(ctx: PlanContext) -> Callable:
     """Monolithic fusion: ONE contraction of the composed radius-t*r kernel."""
     wf = ctx.fused_weights()
     R = (wf.shape[0] - 1) // 2
-    (strip_m, hb), tile_n = ctx.resolve_blocks(R), ctx.resolve_tile_n()
-    ctx.validate(strip_m, tile_n, R, R, hb)
+    geom, tile_n = ctx.resolve_geom(R), ctx.resolve_tile_n()
+    ctx.validate(geom, tile_n, R, R)
+    kw = ctx.kernel_kwargs(geom)
     interp, cdt = ctx.interpret, ctx.compute_dtype
 
     def run(x):
-        return stencil_matmul(x, wf, t=1, tile_m=strip_m, tile_n=tile_n,
-                              h_block=hb, interpret=interp, compute_dtype=cdt)
+        return stencil_matmul(x, wf, t=1, tile_n=tile_n, interpret=interp,
+                              compute_dtype=cdt, **kw)
     return run
 
 
 def _build_fused_matmul_reuse(ctx: PlanContext) -> Callable:
     """Intermediate reuse: t radius-r contractions, VMEM intermediates."""
     w, t, r = ctx.weights, ctx.t, ctx.radius
-    (strip_m, hb), tile_n = ctx.resolve_blocks(t * r), ctx.resolve_tile_n()
-    ctx.validate(strip_m, tile_n, t * r, r, hb)
+    geom, tile_n = ctx.resolve_geom(t * r), ctx.resolve_tile_n()
+    ctx.validate(geom, tile_n, t * r, r)
+    kw = ctx.kernel_kwargs(geom)
     interp, cdt = ctx.interpret, ctx.compute_dtype
 
     def run(x):
-        return stencil_matmul(x, w, t=t, tile_m=strip_m, tile_n=tile_n,
-                              h_block=hb, interpret=interp, compute_dtype=cdt)
+        return stencil_matmul(x, w, t=t, tile_n=tile_n, interpret=interp,
+                              compute_dtype=cdt, **kw)
     return run
 
 
@@ -257,8 +272,17 @@ def _wholestrip(build: Callable) -> Callable:
     return build_ws
 
 
+def _require_2d(ctx: PlanContext, name: str) -> None:
+    if len(ctx.grid_shape) != 2:
+        raise ValueError(
+            f"backend {name!r} is the seed 2D 9-tile foil and supports only "
+            f"2D grids, got rank {len(ctx.grid_shape)}; use the halo-plane "
+            "substrate regimes (direct/matmul families) for 1D/3D")
+
+
 def _build_legacy_direct(ctx: PlanContext) -> Callable:
     """Seed 9-neighbor full-tile VPU scheme (benchmark foil)."""
+    _require_2d(ctx, "legacy_direct")
     w, t = ctx.weights, ctx.t
     tile_m = 128 if ctx.tile_m is None else ctx.tile_m
     tile_n = 128 if ctx.tile_n is None else ctx.tile_n
@@ -272,6 +296,7 @@ def _build_legacy_direct(ctx: PlanContext) -> Callable:
 
 def _build_legacy_matmul(ctx: PlanContext) -> Callable:
     """Seed 9-neighbor monolithic MXU scheme on the composed kernel."""
+    _require_2d(ctx, "legacy_matmul")
     wf = ctx.fused_weights()
     tile_m = 128 if ctx.tile_m is None else ctx.tile_m
     tile_n = 128 if ctx.tile_n is None else ctx.tile_n
@@ -308,11 +333,12 @@ def _price_fused_matmul(p):
 
 def _price_fused_matmul_reuse(p):
     # t=1 reuse degenerates to "matmul"; only offered at depth.  The sparse
-    # unit has no reuse analogue modeled (DESIGN.md §8).
+    # unit has no reuse analogue modeled (DESIGN.md §8).  z_slab (3D) feeds
+    # the dim-aware beta; it is None for 1D/2D workloads.
     if p.workload.t == 1:
         return None
     return pm.perf_matrix_reuse(p.workload, p.hw, p.s_reuse,
-                                p.strip_m).actual_flops
+                                p.strip_m, p.z_slab).actual_flops
 
 
 register_backend("direct", _build_direct, _price_direct,

@@ -1,60 +1,70 @@
-"""VPU-path 2D stencil kernel (the "CUDA core" baseline of the paper).
+"""VPU-path N-D stencil kernel (the "CUDA core" baseline of the paper).
 
-One output strip is a (STRIP_M, N) band, lowered through the shared
-substrate launcher (``common.strip_substrate_call``).  On the sub-blocked
-substrate (default, DESIGN.md §3) the Pallas grid is 2D over (strip,
-h-block): each grid cell copies one (H_BLOCK, N) input block into a VMEM
-scratch -- the strip's own blocks plus ONE halo block of each vertical
-neighbor -- and the final cell of the strip computes on the assembled
-halo-extended strip, so HBM reads per step are (1 + 2*h_block/strip_m) x
-the grid instead of 3x (whole neighbor strips) or 9x (seed scheme).  The
-periodic horizontal halo is materialized in-VMEM by column wrap, and the
-stencil is an unrolled sum of shifted slices times scalar taps -- pure
-element-wise VPU work, accumulated in f32.
+One output cell is a (STRIP_M, N) band (2D) or a (Z_SLAB, STRIP_M, N)
+slab-strip (3D), lowered through the shared substrate launchers
+(``common.strip_substrate_call`` / ``common.slab_substrate_call``).  On
+the sub-blocked substrate (default, DESIGN.md §3/§9) the Pallas grid
+walks halo blocks: each grid cell copies one input block into a VMEM
+scratch -- the cell's own blocks plus the single ring of neighbor blocks
+that can contain halo planes/rows -- and the final cell computes on the
+assembled halo-extended region, so HBM reads per step are
+(1 + 2*h_block/strip_m) x the grid in 2D and additionally
+(1 + 2*z_block/z_slab) x in 3D, instead of 3x/9x (whole neighbor strips/
+slabs) or 9x (seed scheme).  The periodic last-axis halo is materialized
+in-VMEM by column wrap, and the stencil is an unrolled sum of shifted
+slices times scalar taps -- pure element-wise VPU work, accumulated in
+f32.  1D grids route through the 2D substrate lifted to (1, N): the
+vertical halo is zero, so strips stream only their own rows.
 
 Supports an in-kernel temporal-fusion depth ``t`` (the paper's CUDA-core
-temporal fusion, §3.2.2): ``t`` sequential updates on a vertical halo of
-``t*r``, intermediates living entirely in VMEM => per-point HBM traffic
-stays 2D while compute scales by t (I = t*K/D).  Because every row of the
-extended strip is a true global row, the horizontal wrap is re-applied per
-step at radius ``r`` -- no 2*t*r horizontal halo is ever carried.  This
-kernel IS `stencil_fused`'s engine; ``t=1`` is the plain baseline.
+temporal fusion, §3.2.2): ``t`` sequential updates on leading-axis halos
+of ``t*r``, intermediates living entirely in VMEM => per-point HBM traffic
+stays flat while compute scales by t (I = t*K/D).  Because every row of
+the extended region is a true global row, the last-axis wrap is re-applied
+per step at radius ``r`` -- no 2*t*r horizontal halo is ever carried.
+This kernel IS `stencil_fused`'s engine; ``t=1`` is the plain baseline.
 
-``h_block=0`` selects the PR-1 whole-strip 3-load substrate (kept for the
-``*_wholestrip`` benchmark foils); both substrates assemble byte-identical
-extended strips, so their outputs are bit-for-bit equal.
+``h_block=0`` selects the whole-strip/whole-slab foil substrate (kept for
+the ``*_wholestrip`` benchmark foils); both substrates assemble
+byte-identical extended regions, so their outputs are bit-for-bit equal.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from .common import (resolve_strip_blocks, strip_substrate_call,
-                     validate_tiling, wrap_columns)
+from .common import (resolve_substrate_geom, slab_substrate_call,
+                     strip_substrate_call, validate_tiling, wrap_columns)
 
 
 def _stencil_steps(cur: jax.Array, weights, t: int, radius: int) -> jax.Array:
-    """``t`` unrolled tap-sum updates on a halo-extended f32 strip.
+    """``t`` unrolled tap-sum updates on a halo-extended f32 region.
 
-    The barrier keeps XLA from fusing the strip assembly (refs concatenated
-    by the whole-strip substrate, a scratch slice for the sub-blocked one)
-    into the tap sum -- assembly-dependent FMA formation would otherwise
-    perturb the last ulp, and the two substrates are asserted BIT-for-bit
-    equal (tests/test_substrate_strips.py).
+    N-D: ``weights`` has ``cur.ndim`` axes; each step consumes the
+    per-axis kernel extent on every leading axis and re-wraps the last
+    axis at ``radius`` (the per-step x support).  The barrier keeps XLA
+    from fusing the region assembly (refs concatenated by the whole
+    substrates, a scratch slice for the sub-blocked ones) into the tap
+    sum -- assembly-dependent FMA formation would otherwise perturb the
+    last ulp, and the substrates are asserted BIT-for-bit equal
+    (tests/test_substrate_strips.py).
     """
     cur = jax.lax.optimization_barrier(cur)
-    k = 2 * radius + 1
-    n = cur.shape[1]
+    wshape = weights.shape
+    n = cur.shape[-1]
     for _ in range(t):
-        z = wrap_columns(cur, radius)              # (m_cur, n + 2r), periodic
-        m = cur.shape[0] - 2 * radius
-        acc = jnp.zeros((m, n), jnp.float32)
-        for dy in range(k):
-            for dx in range(k):
-                w = float(weights[dy, dx])
-                if w == 0.0:   # star stencils: skip zero taps at trace time
-                    continue
-                acc = acc + w * z[dy : dy + m, dx : dx + n]
+        z = wrap_columns(cur, radius)         # (..., n + 2r), periodic
+        lead = tuple(cur.shape[i] - (wshape[i] - 1)
+                     for i in range(cur.ndim - 1))
+        acc = jnp.zeros(lead + (n,), jnp.float32)
+        for idx in np.ndindex(*wshape):
+            w = float(weights[idx])
+            if w == 0.0:   # star stencils: skip zero taps at trace time
+                continue
+            sl = tuple(slice(idx[i], idx[i] + lead[i])
+                       for i in range(len(lead)))
+            acc = acc + w * z[sl + (slice(idx[-1], idx[-1] + n),)]
         cur = acc
     return cur
 
@@ -66,31 +76,48 @@ def stencil_direct(
     tile_m: int = None,
     tile_n: int = None,
     h_block: int = None,
+    z_slab: int = None,
+    z_block: int = None,
     interpret: bool = False,
 ) -> jax.Array:
-    """``t`` fused time steps of a 2D stencil, periodic boundary.
+    """``t`` fused time steps of an N-D stencil, periodic boundary.
 
-    ``weights``: host-side (2r+1, 2r+1) ndarray (zeros outside support).
-    ``tile_m`` is the strip height and ``h_block`` the halo sub-block
-    height -- ``None`` (default) picks both via ``choose_strip_blocks``
-    (divisors, halo-covering, VMEM-budgeted); explicit values are validated
-    strictly.  ``h_block=0`` disables sub-blocking (whole-strip 3-load
-    substrate).  ``tile_n`` is accepted for signature parity with the MXU
-    kernel but unused (the VPU path never column-tiles).
+    ``weights``: host-side (2r+1)^d ndarray (zeros outside support); the
+    grid rank must match ``weights.ndim`` (1, 2 or 3).  ``tile_m`` is the
+    strip height and ``h_block`` the halo sub-block height; 3D grids add
+    ``z_slab`` (slab depth) and ``z_block`` (halo-plane block depth) --
+    any left ``None`` (default) is auto-sized via
+    ``resolve_substrate_geom`` (divisors, halo-covering, VMEM-budgeted);
+    explicit values are validated strictly.  ``h_block=0`` disables
+    sub-blocking (whole-strip 3-load / whole-slab 9-load foil substrate).
+    ``tile_n`` is accepted for signature parity with the MXU kernel but
+    unused (the VPU path never column-tiles).
     """
-    import numpy as np
-
     del tile_n  # strips always span the full width
     w = np.asarray(weights)
-    radius = (w.shape[0] - 1) // 2
-    halo = t * radius
-    wid = x.shape[1]
-    strip_m, h_block = resolve_strip_blocks(x.shape, halo, x.dtype.itemsize,
-                                            tile_m, h_block)
-    validate_tiling(x.shape, strip_m, wid, halo, radius, h_block)
+    if x.ndim != w.ndim:
+        raise ValueError(f"grid rank {x.ndim} != kernel rank {w.ndim}")
+    if x.ndim == 1:
+        # The lifted (1, N) grid admits exactly two h_blocks (0 = foil,
+        # 1 = sub-blocked); coerce like resolve_substrate_geom's dim-1
+        # rule so kernel-level and plan-level pins can never disagree.
+        hb = h_block if h_block in (None, 0) else 1
+        y = stencil_direct(x[None, :], w[None, :], t=t, tile_m=1,
+                           h_block=hb, interpret=interpret)
+        return y[0]
+
+    radius = (w.shape[-1] - 1) // 2
+    halo = t * ((w.shape[0] - 1) // 2)        # 0 for the lifted-1D kernel
+    wid = x.shape[-1]
+    geom = resolve_substrate_geom(x.shape, halo, x.dtype.itemsize,
+                                  tile_m, h_block, z_slab, z_block)
+    validate_tiling(x.shape, geom.strip_m, wid, halo, radius, geom.h_block,
+                    geom.z_slab if x.ndim == 3 else None, geom.z_block)
 
     def compute(cur):
         return _stencil_steps(cur, w, t, radius)
 
-    return strip_substrate_call(compute, x, strip_m, h_block, halo,
-                                interpret)
+    if x.ndim == 3:
+        return slab_substrate_call(compute, x, geom, halo, interpret)
+    return strip_substrate_call(compute, x, geom.strip_m, geom.h_block,
+                                halo, interpret)

@@ -1,5 +1,10 @@
-"""MXU-path 2D stencil kernel: decompose-to-banded-matmul (the paper's
+"""MXU-path N-D stencil kernel: decompose-to-banded-matmul (the paper's
 "Tensor Core" adaptation, re-thought for the TPU systolic array).
+
+2D is the base case below; 3D grids flatten their (z, y) shift pairs into
+the same radius-r banded contractions along the last dim
+(``build_bands_nd``, DESIGN.md §9) and lower through the halo-plane slab
+substrate; 1D grids route through the 2D substrate lifted to (1, N).
 
 Transformation (DESIGN.md §2):
   * decomposition: the (2R+1)^2 kernel splits into 2R+1 row vectors
@@ -44,18 +49,24 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .common import (choose_tile, resolve_strip_blocks,
-                     strip_substrate_call, validate_tiling, wrap_columns)
+from .common import (choose_tile, resolve_substrate_geom,
+                     slab_substrate_call, strip_substrate_call,
+                     validate_tiling, wrap_columns)
 
 
 def build_bands(weights: np.ndarray, tile_n: int) -> np.ndarray:
-    """(2R+1, TILE_N + 2R, TILE_N) banded weight matrices, one per kernel row."""
+    """(ROWS, TILE_N + 2R, TILE_N) banded weight matrices, one per kernel row.
+
+    ``weights`` is a 2D kernel whose LAST axis carries the x taps (radius
+    R from that axis); rows may number 2R+1 (square 2D kernels) or 1 (the
+    lifted-1D kernel).
+    """
     w = np.asarray(weights)
-    k = w.shape[0]
-    radius = (k - 1) // 2
-    bands = np.zeros((k, tile_n + 2 * radius, tile_n), dtype=w.dtype)
-    for dy in range(k):
-        for dx in range(k):
+    rows, kx = w.shape
+    radius = (kx - 1) // 2
+    bands = np.zeros((rows, tile_n + 2 * radius, tile_n), dtype=w.dtype)
+    for dy in range(rows):
+        for dx in range(kx):
             if w[dy, dx] == 0.0:
                 continue
             for j in range(tile_n):
@@ -63,44 +74,82 @@ def build_bands(weights: np.ndarray, tile_n: int) -> np.ndarray:
     return bands
 
 
+def build_bands_nd(weights: np.ndarray, tile_n: int):
+    """Flatten an N-D kernel's leading shift tuples into banded operands.
+
+    Returns ``(offsets, bands)``: ``offsets`` is the host-side list of
+    leading-axis shift tuples (e.g. (dz, dy) for 3D) whose x-row
+    ``weights[off + (:,)]`` is structurally nonzero, and ``bands`` stacks
+    one (TILE_N + 2R, TILE_N) banded matrix per such row.  All-zero rows
+    (most of a star stencil's (dz, dy) pairs) are dropped at build time --
+    they would contract to exact zeros, so skipping them cuts both the
+    banded operand and the per-step MXU work without touching the result.
+    """
+    w = np.asarray(weights)
+    lead = w.shape[:-1]
+    offsets = [off for off in np.ndindex(*lead)
+               if np.count_nonzero(w[off + (slice(None),)])]
+    rows = np.stack([w[off + (slice(None),)] for off in offsets])
+    return offsets, build_bands(rows, tile_n)
+
+
 def band_sparsity(weights: np.ndarray, tile_n: int) -> float:
-    """Measured S of the built operands = nonzeros / total (sanity vs model)."""
-    bands = build_bands(weights, tile_n)
+    """Measured S of the built operands = nonzeros / total (sanity vs model).
+
+    Any kernel rank: routes through ``build_bands_nd``, so it measures
+    exactly the operands the N-D kernel loads (all-zero leading rows of a
+    3D star already dropped).  Identical to the historical 2D measurement
+    for 2D kernels, whose rows are never all-zero.
+    """
+    bands = build_bands_nd(np.asarray(weights), tile_n)[1]
     return float(np.count_nonzero(bands)) / bands.size
 
 
-def _banded_step(z: jax.Array, bands_ref, radius: int, tile_n: int,
-                 compute_dtype) -> jax.Array:
-    """One radius-r banded contraction on full-width rows.
+def _banded_step(z: jax.Array, bands_ref, offsets, lead_extents,
+                 radius: int, tile_n: int, compute_dtype) -> jax.Array:
+    """One radius-r banded contraction on full-width rows, any rank.
 
-    ``z``: (m_cur, n) rows that are complete global rows; returns the
-    (m_cur - 2r, n) update, accumulated in f32 across column tiles.
+    ``z``: (..., n) rows that are complete global rows; ``offsets`` the
+    host-side leading shift tuples matching ``bands_ref`` rows (the
+    flattened (z, y) shift pairs for 3D, (dy,) singletons for 2D);
+    ``lead_extents`` the kernel's leading-axis extents.  Returns the
+    update with every leading axis shrunk by its kernel extent - 1,
+    accumulated in f32 across column tiles: each (dz, dy) shifted slab is
+    flattened to rows and contracted against its banded operand.
     """
-    n = z.shape[1]
-    m = z.shape[0] - 2 * radius
-    k = 2 * radius + 1
-    zw = wrap_columns(z, radius)                       # (m_cur, n + 2r)
+    n = z.shape[-1]
+    lead = tuple(z.shape[i] - (lead_extents[i] - 1)
+                 for i in range(len(lead_extents)))
+    m = 1
+    for d in lead:
+        m *= d
+    zw = wrap_columns(z, radius)                       # (..., n + 2r)
     cols = []
     for j in range(n // tile_n):
         acc = jnp.zeros((m, tile_n), jnp.float32)
-        for dy in range(k):
-            a = zw[dy : dy + m,
-                   j * tile_n : j * tile_n + tile_n + 2 * radius]
-            b = bands_ref[dy].astype(compute_dtype)    # (tile_n + 2r, tile_n)
+        for p, off in enumerate(offsets):
+            sl = tuple(slice(off[i], off[i] + lead[i])
+                       for i in range(len(lead)))
+            a = zw[sl + (slice(j * tile_n,
+                               j * tile_n + tile_n + 2 * radius),)]
+            a = a.reshape(m, tile_n + 2 * radius)
+            b = bands_ref[p].astype(compute_dtype)     # (tile_n + 2r, tile_n)
             acc = acc + jax.lax.dot(a.astype(compute_dtype), b,
                                     preferred_element_type=jnp.float32)
         cols.append(acc)
-    return cols[0] if len(cols) == 1 else jnp.concatenate(cols, axis=1)
+    out = cols[0] if len(cols) == 1 else jnp.concatenate(cols, axis=1)
+    return out.reshape(lead + (n,))
 
 
-def _banded_steps(cur: jax.Array, bands_ref, t: int, radius: int,
-                  tile_n: int, compute_dtype) -> jax.Array:
-    # Barrier between strip assembly and contraction: keeps the two
+def _banded_steps(cur: jax.Array, bands_ref, offsets, lead_extents, t: int,
+                  radius: int, tile_n: int, compute_dtype) -> jax.Array:
+    # Barrier between region assembly and contraction: keeps the
     # substrates' compute graphs identical so their outputs stay bit-for-bit
     # equal (see stencil_direct._stencil_steps).
     cur = jax.lax.optimization_barrier(cur)
     for _ in range(t):
-        cur = _banded_step(cur, bands_ref, radius, tile_n, compute_dtype)
+        cur = _banded_step(cur, bands_ref, offsets, lead_extents, radius,
+                           tile_n, compute_dtype)
     return cur
 
 
@@ -111,10 +160,16 @@ def stencil_matmul(
     tile_m: int = None,
     tile_n: int = None,
     h_block: int = None,
+    z_slab: int = None,
+    z_block: int = None,
     interpret: bool = False,
     compute_dtype=None,
 ) -> jax.Array:
     """``t`` stencil steps via banded MXU contractions, periodic boundary.
+
+    N-D: 2D and 3D grids contract their flattened leading shift tuples
+    against per-row banded operands; 1D grids route through the 2D
+    substrate lifted to (1, N).
 
     ``t=1``: one contraction of ``weights`` -- which may itself be a fused
     kernel of radius t*r (the paper's monolithic kernel fusion).
@@ -123,26 +178,46 @@ def stencil_matmul(
     in repro.kernels.ops).
 
     ``tile_m`` is the strip height; ``tile_n`` the column-tile width of each
-    contraction (the banded operand is (2r+1, tile_n + 2r, tile_n));
+    contraction (the banded operand is (rows, tile_n + 2r, tile_n));
     ``h_block`` the halo sub-block height (``None`` = auto, 0 = whole-strip
-    substrate).  Any left ``None`` is auto-chosen (``choose_strip_blocks``
-    / ``choose_tile``); explicit values are validated strictly.
+    /whole-slab foil substrate); 3D grids add ``z_slab``/``z_block``.  Any
+    left ``None`` is auto-chosen (``resolve_substrate_geom`` /
+    ``choose_tile``); explicit values are validated strictly.
     """
     w = np.asarray(weights)
-    radius = (w.shape[0] - 1) // 2
-    halo = t * radius
-    wid = x.shape[1]
-    strip_m, h_block = resolve_strip_blocks(x.shape, halo, x.dtype.itemsize,
-                                            tile_m, h_block)
+    if x.ndim != w.ndim:
+        raise ValueError(f"grid rank {x.ndim} != kernel rank {w.ndim}")
+    if x.ndim == 1:
+        # coerce h_block exactly like resolve_substrate_geom's dim-1 rule
+        # (see stencil_direct)
+        hb = h_block if h_block in (None, 0) else 1
+        y = stencil_matmul(x[None, :], w[None, :], t=t, tile_m=1,
+                           tile_n=tile_n, h_block=hb,
+                           interpret=interpret, compute_dtype=compute_dtype)
+        return y[0]
+
+    radius = (w.shape[-1] - 1) // 2
+    halo = t * ((w.shape[0] - 1) // 2)        # 0 for the lifted-1D kernel
+    wid = x.shape[-1]
+    geom = resolve_substrate_geom(x.shape, halo, x.dtype.itemsize,
+                                  tile_m, h_block, z_slab, z_block)
     tile_n = choose_tile(wid) if tile_n is None else min(tile_n, wid)
-    validate_tiling(x.shape, strip_m, tile_n, halo, radius, h_block)
+    validate_tiling(x.shape, geom.strip_m, tile_n, halo, radius,
+                    geom.h_block, geom.z_slab if x.ndim == 3 else None,
+                    geom.z_block)
     if compute_dtype is None:
         compute_dtype = x.dtype
 
-    bands = jnp.asarray(build_bands(w.astype(np.float32), tile_n))
+    offsets, bands_np = build_bands_nd(w.astype(np.float32), tile_n)
+    bands = jnp.asarray(bands_np)
+    lead_extents = w.shape[:-1]
 
     def compute(cur, bands_ref):
-        return _banded_steps(cur, bands_ref, t, radius, tile_n, compute_dtype)
+        return _banded_steps(cur, bands_ref, offsets, lead_extents, t,
+                             radius, tile_n, compute_dtype)
 
-    return strip_substrate_call(compute, x, strip_m, h_block, halo,
-                                interpret, consts=(bands,))
+    if x.ndim == 3:
+        return slab_substrate_call(compute, x, geom, halo, interpret,
+                                   consts=(bands,))
+    return strip_substrate_call(compute, x, geom.strip_m, geom.h_block,
+                                halo, interpret, consts=(bands,))

@@ -149,13 +149,16 @@ def pallas_local_apply(
     tile_m: Optional[int] = None,
     tile_n: Optional[int] = None,
     h_block: Optional[int] = None,
+    z_slab: Optional[int] = None,
+    z_block: Optional[int] = None,
 ) -> Callable:
     """Build a ``local_apply`` plug-in running the strip-mined Pallas kernels.
 
     The returned callable matches ``make_distributed_stepper``'s contract:
-    it receives each shard's halo-extended block (depth ``steps * r``) and
-    returns the valid interior.  The kernel's own modulo-wrap periodicity is
-    harmless because the halo ring it wraps into is discarded.
+    it receives each shard's halo-extended block (depth ``steps * r``, any
+    grid rank the kernels support -- 1D, 2D or 3D-sharded meshes) and
+    returns the valid interior.  The kernel's own modulo-wrap periodicity
+    is harmless because the halo ring it wraps into is discarded.
 
     ``backend`` is any registered backend name
     (``repro.kernels.registered_backends()``) -- notably
@@ -163,11 +166,12 @@ def pallas_local_apply(
     shard pays HBM traffic once per exchange, not per step.  Execution goes
     through the plan cache (``repro.kernels.plan``): the per-shard plan is
     built once per (block shape, depth) signature and reused across steps
-    and traces.  By default the whole extended block is one strip
-    (``tile_m=None``); pass explicit tiles to exercise the multi-strip path.
-    ``h_block`` selects the halo sub-block height of the strip substrate
-    (``None`` = auto, ``0`` = whole-strip) -- the modulo wrap of either
-    substrate is equally harmless here.
+    and traces.  By default the whole extended block is one strip / one
+    z-slab (``tile_m=None`` / ``z_slab=None``); pass explicit tiles to
+    exercise the multi-cell path.  ``h_block``/``z_block`` select the halo
+    block heights of the substrate (``None`` = auto, ``h_block=0`` =
+    whole-strip/whole-slab foil) -- the modulo wrap of either substrate is
+    equally harmless here.
     """
     import numpy as _np
 
@@ -177,14 +181,22 @@ def pallas_local_apply(
         wn = _np.asarray(w)
         radius = (wn.shape[0] - 1) // 2
         h = steps * radius
+        kw = dict(
+            tile_m=tile_m if tile_m is not None else xe.shape[-2],
+            tile_n=tile_n if tile_n is not None else xe.shape[-1],
+            h_block=h_block,
+        ) if xe.ndim >= 2 else dict(tile_n=tile_n)
+        if xe.ndim == 3:
+            kw.update(z_slab=z_slab if z_slab is not None else xe.shape[0],
+                      z_block=z_block)
         plan = stencil_plan(
             wn, xe.shape, xe.dtype, steps, backend=backend,
-            tile_m=tile_m if tile_m is not None else xe.shape[0],
-            tile_n=tile_n if tile_n is not None else xe.shape[1],
-            h_block=h_block, interpret=interpret,
+            interpret=interpret, **kw,
         )
         full = plan(xe)
-        return full[h:-h, h:-h] if h else full
+        if not h:
+            return full
+        return full[tuple(slice(h, -h) for _ in range(xe.ndim))]
 
     return local_apply
 

@@ -12,6 +12,8 @@ conv-based fast path, and the distributed runtime).
 from __future__ import annotations
 
 import functools
+import itertools
+import string
 from typing import Optional
 
 import jax
@@ -22,12 +24,13 @@ from .spec import StencilSpec
 
 
 def _offsets(radius: int, dim: int):
+    """All kernel offsets of a radius-R, d-dimensional box, any rank.
+
+    Row-major (``np.ndindex``) order -- the accumulation order every
+    oracle and the Pallas kernels share.
+    """
     rng = range(-radius, radius + 1)
-    if dim == 1:
-        return [(a,) for a in rng]
-    if dim == 2:
-        return [(a, b) for a in rng for b in rng]
-    return [(a, b, c) for a in rng for b in rng for c in rng]
+    return list(itertools.product(rng, repeat=dim))
 
 
 def apply_stencil(
@@ -88,9 +91,14 @@ def apply_stencil_conv(
     """Fast path via ``lax.conv_general_dilated`` (XLA-optimized oracle #2).
 
     conv_general_dilated computes a correlation with the kernel as given,
-    which matches our stencil definition directly.
+    which matches our stencil definition directly.  One N-D path: the
+    dimension numbers are generated for any rank (spatial letters drawn
+    from the alphabet minus the reserved N/C/O/I), so 1D, 2D and 3D share
+    the same code instead of per-rank special cases.
     """
     dim = weights.ndim
+    if x.ndim != dim:
+        raise ValueError(f"grid rank {x.ndim} != kernel rank {dim}")
     radius = (weights.shape[0] - 1) // 2
     if boundary == "periodic":
         pad = [(radius, radius)] * dim
@@ -101,14 +109,11 @@ def apply_stencil_conv(
         padding = "SAME"
     lhs = xin[jnp.newaxis, jnp.newaxis]          # NC + spatial
     rhs = jnp.asarray(weights, x.dtype)[jnp.newaxis, jnp.newaxis]  # OI + spatial
+    spatial = "".join(
+        c for c in string.ascii_uppercase if c not in "NCOI")[:dim]
     dn = jax.lax.conv_dimension_numbers(
         lhs.shape, rhs.shape,
-        ("NCHW"[: dim + 2], "OIHW"[: dim + 2], "NCHW"[: dim + 2])
-        if dim == 2
-        else (
-            ("NCH", "OIH", "NCH") if dim == 1 else ("NCHWD", "OIHWD", "NCHWD")
-        ),
-    )
+        ("NC" + spatial, "OI" + spatial, "NC" + spatial))
     out = jax.lax.conv_general_dilated(lhs, rhs, (1,) * dim, padding, dimension_numbers=dn)
     return out[0, 0]
 

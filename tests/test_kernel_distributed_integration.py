@@ -106,6 +106,53 @@ class TestKernelAsLocalApply:
         assert "OK" in out
 
 
+class TestKernel3DLocalApply:
+    def test_pallas_local_apply_on_3d_sharded_mesh(self):
+        """The halo-plane substrate runs as the local update of a
+        3D-sharded mesh: z and y sharded across the ring, x local, for
+        both the VPU and the intermediate-reuse MXU regimes -- and the
+        mesh-parameterized 3D plan drives the same stepper with a halo
+        plan matching the analytic traffic model."""
+        out = run_with_devices(4, """
+            import jax, numpy as np, jax.numpy as jnp
+            from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+            from repro.stencil import StencilSpec, make_weights
+            from repro.stencil.distributed import (halo_bytes_per_step,
+                                                   make_distributed_stepper,
+                                                   pallas_local_apply)
+            from repro.stencil.reference import apply_stencil_steps
+            from repro.kernels import stencil_plan
+
+            mesh = Mesh(np.array(jax.devices()).reshape(2,2), ("x","y"))
+            w = make_weights(StencilSpec("box", 3, 1), seed=3)
+            t, shape = 2, (16, 32, 32)
+            x = np.random.default_rng(0).normal(size=shape).astype(np.float32)
+            xs = jax.device_put(x, NamedSharding(mesh, P("x","y",None)))
+            ref = apply_stencil_steps(jnp.asarray(x), jnp.asarray(w), t)
+
+            for backend in ("fused_direct", "fused_matmul_reuse"):
+                la = pallas_local_apply(backend, interpret=True)
+                step = make_distributed_stepper(mesh, ("x","y",None), w, t=t,
+                                                mode="fused", local_apply=la)
+                with mesh:
+                    y = step(xs)
+                err = float(jnp.abs(y - ref).max())
+                assert err < 1e-4, (backend, err)
+
+            for mode in ("stepwise", "fused"):
+                plan = stencil_plan(w, shape, np.float32, t, mesh=mesh,
+                                    shard_spec=("x","y",None), dist_mode=mode)
+                err = float(jnp.abs(plan(xs) - ref).max())
+                assert err < 1e-4, (mode, err)
+                hp = plan.halo_plan
+                assert hp["local_shape"] == (8, 16, 32)
+                assert hp["halo_bytes_per_call"] == halo_bytes_per_step(
+                    (8, 16, 32), ("x","y",None), 1, t, mode, 4)
+            print("OK")
+        """)
+        assert "OK" in out
+
+
 class TestDistributedPlan:
     def test_mesh_parameterized_plan(self):
         """A mesh-parameterized StencilPlan drives the halo-exchange stepper

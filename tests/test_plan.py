@@ -163,6 +163,55 @@ class TestPlanCache:
         assert p1 is not p2
         assert plan_cache_stats()["size"] == 0
 
+    def test_lru_eviction_env_bound_keeps_stats_consistent(self, monkeypatch):
+        """REPRO_PLAN_CACHE_SIZE bounds the LRU; overflow evicts the
+        least-recently-used plan, and the hit/miss counters stay consistent
+        across eviction (an evicted signature re-misses; a surviving one
+        still hits)."""
+        from repro.kernels import plan_cache_max
+
+        clear_plan_cache()
+        monkeypatch.setenv("REPRO_PLAN_CACHE_SIZE", "2")
+        assert plan_cache_max() == 2
+        w = make_weights(StencilSpec("box", 2, 1), seed=9)
+        base = dict(tile_m=16, tile_n=16)
+
+        p1 = stencil_plan(w, (32, 32), np.float32, 1, **base)
+        p2 = stencil_plan(w, (32, 32), np.float32, 2, **base)
+        assert plan_cache_stats() == {"hits": 0, "misses": 2, "size": 2}
+
+        stencil_plan(w, (32, 32), np.float32, 3, **base)   # evicts t=1
+        s = plan_cache_stats()
+        assert s == {"hits": 0, "misses": 3, "size": 2}
+
+        # surviving signature: hit, no rebuild
+        assert stencil_plan(w, (32, 32), np.float32, 2, **base) is p2
+        assert plan_cache_stats() == {"hits": 1, "misses": 3, "size": 2}
+
+        # evicted signature: full re-miss (fresh plan object)
+        p1b = stencil_plan(w, (32, 32), np.float32, 1, **base)
+        assert p1b is not p1
+        s = plan_cache_stats()
+        assert s == {"hits": 1, "misses": 4, "size": 2}
+        assert s["size"] <= plan_cache_max()
+
+        monkeypatch.setenv("REPRO_PLAN_CACHE_SIZE", "zero")
+        with pytest.raises(ValueError, match="integer"):
+            plan_cache_max()
+        # a malformed bound surfaces BEFORE the cache is touched: nothing
+        # is inserted, so eviction can never be silently disabled
+        size_before = plan_cache_stats()["size"]
+        with pytest.raises(ValueError, match="integer"):
+            stencil_plan(w, (32, 32), np.float32, 4, **base)
+        assert plan_cache_stats()["size"] == size_before
+        monkeypatch.setenv("REPRO_PLAN_CACHE_SIZE", "0")
+        with pytest.raises(ValueError, match=">= 1"):
+            plan_cache_max()
+        monkeypatch.delenv("REPRO_PLAN_CACHE_SIZE")
+        from repro.kernels import plan as plan_mod
+        assert plan_cache_max() == plan_mod.PLAN_CACHE_MAX
+        clear_plan_cache()
+
 
 class TestSingleDecisionPath:
     """ops.explain and the auto branch can never disagree: both ARE
@@ -208,6 +257,106 @@ class TestSingleDecisionPath:
         # unpriced backends never show up as candidates
         assert "reference" not in d.candidates
         assert "legacy_direct" not in d.candidates
+
+
+class TestPlan3D:
+    """The N-D tentpole's plan-layer acceptance: 3D plans build and run
+    every halo-plane regime for the paper's Box/Star-3D workloads, and the
+    decision path stays single (explain == plan.decision on grids whose
+    resolved geometry differs from the pricing defaults)."""
+
+    def _x3(self, z, h, w):
+        return jnp.asarray(
+            RNG.normal(size=(z, h, w)).astype(np.float32))
+
+    @pytest.mark.parametrize("name", ["Box-3D1R", "Star-3D1R"])
+    def test_all_registered_regimes_run_3d(self, name):
+        spec = StencilSpec.from_name(name)
+        w = make_weights(spec, seed=1)
+        x = self._x3(12, 24, 32)
+        t = 2
+        ref = stencil_direct_ref(x, w, t)
+        for backend in registered_backends():
+            if backend.startswith("legacy_"):
+                # the seed 9-tile foil is 2D-only by contract
+                with pytest.raises(ValueError, match="2D"):
+                    stencil_plan(w, x.shape, x.dtype, t, backend=backend,
+                                 use_cache=False)
+                continue
+            plan = stencil_plan(w, x.shape, x.dtype, t, backend=backend)
+            np.testing.assert_allclose(np.asarray(plan(x)), np.asarray(ref),
+                                       atol=2e-4)
+
+    def test_wrapper_parity_bitwise_3d(self):
+        w = make_weights(StencilSpec("box", 3, 1), seed=2)
+        x = self._x3(12, 24, 32)
+        plan = stencil_plan(w, x.shape, x.dtype, 2, tile_m=12, z_slab=6)
+        via_wrapper = stencil_apply(x, w, t=2, tile_m=12, z_slab=6)
+        assert np.array_equal(np.asarray(plan(x)), np.asarray(via_wrapper))
+
+    @pytest.mark.parametrize("grid", [(12, 24, 32), (10, 36, 40)])
+    def test_explain_parity_on_non128_3d_grids(self, grid):
+        """The satellite's parity contract: explain(grid_shape=...) equals
+        plan.decision -- including the substrate read-amp factor and the
+        resolved (z_slab, strip_m, h) geometry in the reason string -- on
+        3D grids where no axis is 128-divisible."""
+        w = make_weights(StencilSpec("box", 3, 1), seed=3)
+        for t in (1, 2):
+            plan = stencil_plan(w, grid, np.float32, t)
+            d = explain(w, t, dtype_bytes=4, hw=plan.hw, grid_shape=grid)
+            assert d == plan.decision
+            assert "read_amp=" in d.reason
+            assert "z_slab=" in d.reason and "strip_m=" in d.reason
+        # pins thread identically, including the whole-slab foil
+        for pins in ({"h_block": 0}, {"tile_m": 12, "z_slab": 6},
+                     {"tile_m": 12, "h_block": 2, "z_slab": 6,
+                      "z_block": 2}):
+            plan = stencil_plan(w, (12, 24, 32), np.float32, 2, **pins)
+            d = explain(w, 2, dtype_bytes=4, hw=plan.hw,
+                        grid_shape=(12, 24, 32), **pins)
+            assert d == plan.decision
+
+    def test_explain_geometry_note_2d(self):
+        """2D reasons carry the substrate note too (the satellite asks for
+        both ranks)."""
+        w = make_weights(StencilSpec("box", 2, 1), seed=0)
+        d = explain(w, 2, 4, grid_shape=(64, 64))
+        assert "read_amp=" in d.reason and "strip_m=" in d.reason
+
+    def test_plan_1d_lift(self):
+        """1D grids route through the lifted 2D substrate instead of
+        crashing -- every priced regime runs and matches the oracle."""
+        w = make_weights(StencilSpec("box", 1, 2), seed=4)
+        x = jnp.asarray(RNG.normal(size=(96,)).astype(np.float32))
+        ref = stencil_direct_ref(x, w, 3)
+        for backend in ("direct", "fused_direct", "matmul", "fused_matmul",
+                        "fused_matmul_reuse", "reference"):
+            plan = stencil_plan(w, x.shape, x.dtype, 3, backend=backend)
+            np.testing.assert_allclose(np.asarray(plan(x)), np.asarray(ref),
+                                       atol=2e-5)
+        d = explain(w, 3, 4, grid_shape=x.shape)
+        assert d == stencil_plan(w, x.shape, x.dtype, 3).decision
+        assert "1D lifted" in d.reason
+
+    def test_rank_mismatch_raises(self):
+        w = make_weights(StencilSpec("box", 2, 1), seed=0)
+        with pytest.raises(ValueError, match="rank"):
+            stencil_plan(w, (12, 24, 32), np.float32, 1)
+
+    def test_hybrid_substrate_rejected_everywhere(self):
+        """z_block=0 under a sub-blocked h_block names a substrate no
+        kernel implements: the selector must refuse to price it exactly
+        like resolve_substrate_geom refuses to build it (single-decision-
+        path contract, with or without a grid)."""
+        w = make_weights(StencilSpec("box", 3, 1), seed=0)
+        with pytest.raises(ValueError, match="whole-slab"):
+            explain(w, 2, 4, h_block=4, z_block=0)
+        with pytest.raises(ValueError, match="whole-slab"):
+            explain(w, 2, 4, grid_shape=(12, 24, 32), tile_m=12,
+                    z_slab=6, h_block=2, z_block=0)
+        with pytest.raises(ValueError, match="whole-slab"):
+            stencil_plan(w, (12, 24, 32), np.float32, 2, tile_m=12,
+                         z_slab=6, h_block=2, z_block=0)
 
 
 class TestRegistry:

@@ -85,6 +85,49 @@ class TestReference:
         np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                    rtol=2e-5, atol=2e-5)
 
+    @pytest.mark.parametrize("shape", ["box", "star"])
+    @pytest.mark.parametrize("d", [1, 3])
+    def test_roll_vs_conv_cross_check_f32(self, d, shape):
+        """The satellite's 1D/3D oracle cross-check: the roll-based and
+        conv-based references agree through the single N-D path (no more
+        per-rank special cases in _offsets / apply_stencil_conv)."""
+        spec = StencilSpec(shape, d, 2)
+        w = make_weights(spec, seed=3)
+        x = jnp.asarray(np.random.default_rng(4).normal(size=(12,) * d)
+                        .astype(np.float32))
+        for boundary in ("periodic", "zero"):
+            a = apply_stencil(x, jnp.asarray(w), boundary)
+            b = apply_stencil_conv(x, jnp.asarray(w), boundary)
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=2e-5, atol=2e-5)
+
+    @pytest.mark.parametrize("shape", ["box", "star"])
+    @pytest.mark.parametrize("d", [1, 3])
+    def test_roll_vs_conv_cross_check_f64(self, d, shape):
+        """Same cross-check at f64: tolerances tighten by ~8 orders of
+        magnitude, catching any dtype-dependent path divergence."""
+        from jax.experimental import enable_x64
+
+        with enable_x64():
+            spec = StencilSpec(shape, d, 1)
+            w = make_weights(spec, seed=5, dtype=np.float64)
+            x = jnp.asarray(np.random.default_rng(6).normal(size=(10,) * d))
+            assert x.dtype == jnp.float64
+            for boundary in ("periodic", "zero"):
+                a = apply_stencil(x, jnp.asarray(w), boundary)
+                b = apply_stencil_conv(x, jnp.asarray(w), boundary)
+                assert a.dtype == jnp.float64
+                np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                           rtol=1e-13, atol=1e-13)
+
+    def test_rank_mismatch_raises(self):
+        w = make_weights(StencilSpec("box", 2, 1), seed=0)
+        x = jnp.zeros((8, 8, 8), np.float32)
+        with pytest.raises(ValueError, match="rank"):
+            apply_stencil(x, jnp.asarray(w))
+        with pytest.raises(ValueError, match="rank"):
+            apply_stencil_conv(x, jnp.asarray(w))
+
     def test_jacobi_converges_to_mean(self):
         # repeated Jacobi smoothing with periodic BC converges to the mean
         spec = box(2, 1)

@@ -2,15 +2,21 @@
 halo-row sub-blocked substrate's bit-for-bit equality with the whole-strip
 kernels, the intermediate-reuse MXU regime's exactness guarantee, tiling
 validation error paths, and the substrate's traffic accounting
-(1 + 2h/strip_m vs 3 vs the seed scheme's 9)."""
+(1 + 2h/strip_m vs 3 vs the seed scheme's 9) -- plus the N-D halo-plane
+generalization (DESIGN.md §9): 3D slab-substrate equivalence
+(sub-blocked vs whole-slab foil vs oracle), the 3D read-amplification
+product formula, and the 1D lift through the 2D substrate."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.kernels import common, legacy
-from repro.kernels.common import (choose_hblock, choose_strip,
-                                  choose_strip_blocks, substrate_read_amp,
-                                  validate_tiling)
+from repro.kernels.common import (SubstrateGeom, choose_hblock,
+                                  choose_slab_blocks, choose_strip,
+                                  choose_strip_blocks,
+                                  hbm_read_bytes_per_step_3d,
+                                  resolve_substrate_geom,
+                                  substrate_read_amp, validate_tiling)
 from repro.kernels.ref import stencil_direct_ref
 from repro.kernels.stencil_direct import stencil_direct
 from repro.kernels.stencil_matmul import stencil_matmul
@@ -21,6 +27,11 @@ RNG = np.random.default_rng(0)
 
 def _x(h, w, dtype="float32"):
     x = jnp.asarray(RNG.normal(size=(h, w)).astype(np.float32))
+    return x.astype(dtype)
+
+
+def _x3(z, h, w, dtype="float32"):
+    x = jnp.asarray(RNG.normal(size=(z, h, w)).astype(np.float32))
     return x.astype(dtype)
 
 
@@ -126,6 +137,192 @@ class TestSubblockedEquivalence:
         np.testing.assert_allclose(
             np.asarray(stencil_matmul(x, w, t=2, tile_m=48, interpret=True)),
             np.asarray(ref), atol=1e-4)
+
+
+class TestSubstrate3D:
+    """The ISSUE's 3D acceptance sweep: sub-blocked vs whole-slab foil vs
+    the kernels/ref.py oracle, box/star x r{1,2} x t{1,2} x f32/bf16.
+    Both substrates assemble byte-identical halo-extended slabs, so their
+    outputs are BIT-for-bit equal in every dtype; the VPU box path even
+    reproduces the roll oracle bitwise in f32 (identical tap order)."""
+
+    Z, H, W = 12, 24, 32
+    SLAB, STRIP = 6, 12
+
+    TOL3 = {"float32": 2e-4, "bfloat16": 6e-2}
+
+    def _blocks(self, halo):
+        return choose_hblock(self.SLAB, halo), choose_hblock(self.STRIP, halo)
+
+    @pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+    @pytest.mark.parametrize("t", [1, 2])
+    @pytest.mark.parametrize("r", [1, 2])
+    @pytest.mark.parametrize("shape", ["box", "star"])
+    def test_direct_bitwise_vs_wholeslab_and_oracle(self, shape, r, t, dtype):
+        w = make_weights(StencilSpec(shape, 3, r), seed=r)
+        x = _x3(self.Z, self.H, self.W, dtype)
+        zb, hb = self._blocks(r * t)
+        whole = stencil_direct(x, w, t=t, tile_m=self.STRIP, h_block=0,
+                               z_slab=self.SLAB, interpret=True)
+        sub = stencil_direct(x, w, t=t, tile_m=self.STRIP, h_block=hb,
+                             z_slab=self.SLAB, z_block=zb, interpret=True)
+        np.testing.assert_array_equal(np.asarray(sub), np.asarray(whole))
+        ref = stencil_direct_ref(x.astype(jnp.float32), w, t)
+        if shape == "box" and dtype == "float32" and (r == 1 or t == 1):
+            # no structural zero taps => identical accumulation order =>
+            # the kernel IS the oracle, bit for bit (at r=2 AND t=2 XLA's
+            # FMA formation on the intermediate diverges by 1 ulp)
+            np.testing.assert_array_equal(np.asarray(sub), np.asarray(ref))
+        else:
+            np.testing.assert_allclose(np.asarray(sub, np.float32),
+                                       np.asarray(ref),
+                                       atol=self.TOL3[dtype])
+
+    @pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+    @pytest.mark.parametrize("t", [1, 2])
+    @pytest.mark.parametrize("r", [1, 2])
+    @pytest.mark.parametrize("shape", ["box", "star"])
+    def test_matmul_bitwise_vs_wholeslab(self, shape, r, t, dtype):
+        w = make_weights(StencilSpec(shape, 3, r), seed=r)
+        x = _x3(self.Z, self.H, self.W, dtype)
+        zb, hb = self._blocks(r * t)
+        whole = stencil_matmul(x, w, t=t, tile_m=self.STRIP, tile_n=16,
+                               h_block=0, z_slab=self.SLAB, interpret=True)
+        sub = stencil_matmul(x, w, t=t, tile_m=self.STRIP, tile_n=16,
+                             h_block=hb, z_slab=self.SLAB, z_block=zb,
+                             interpret=True)
+        np.testing.assert_array_equal(np.asarray(sub), np.asarray(whole))
+        ref = stencil_direct_ref(x.astype(jnp.float32), w, t)
+        np.testing.assert_allclose(np.asarray(sub, np.float32),
+                                   np.asarray(ref), atol=self.TOL3[dtype])
+
+    def test_reuse_bitwise_vs_sequential_matmul_3d(self):
+        """The 3D reuse regime executes the same banded dot products as t
+        sequential contractions -- bit-for-bit in f32, as in 2D."""
+        w = make_weights(StencilSpec("star", 3, 1), seed=0)
+        x = _x3(12, 24, 32)
+        fused = stencil_matmul(x, w, t=2, tile_m=12, tile_n=16,
+                               z_slab=6, interpret=True)
+        seq = x
+        for _ in range(2):
+            seq = stencil_matmul(seq, w, t=1, tile_m=12, tile_n=16,
+                                 z_slab=6, interpret=True)
+        np.testing.assert_array_equal(np.asarray(fused), np.asarray(seq))
+
+    def test_auto_geometry_end_to_end(self):
+        """Fully auto (z_slab/tile_m/h_block/z_block all None) on a grid
+        with no 128-divisible axis still matches the oracle."""
+        w = make_weights(StencilSpec("box", 3, 1), seed=2)
+        x = _x3(10, 20, 24)
+        ref = stencil_direct_ref(x, w, 2)
+        np.testing.assert_allclose(
+            np.asarray(stencil_direct(x, w, t=2, interpret=True)),
+            np.asarray(ref), atol=1e-4)
+        np.testing.assert_allclose(
+            np.asarray(stencil_matmul(x, w, t=2, interpret=True)),
+            np.asarray(ref), atol=1e-4)
+
+    def test_read_bytes_product_formula(self):
+        """Analytic 3D reads == (1 + 2h/strip)(1 + 2zb/slab) * Z*H*W*D for
+        every (z_block | z_slab, h_block | strip_m); the whole-slab foil
+        reads exactly 9x."""
+        Z, H, W, D = 16, 32, 64, 4
+        grid_bytes = Z * H * W * D
+        for zs, sm in [(8, 16), (16, 32), (4, 8)]:
+            for zb in (d for d in range(1, zs + 1) if zs % d == 0):
+                for hb in (d for d in range(1, sm + 1) if sm % d == 0):
+                    g = SubstrateGeom(dim=3, strip_m=sm, h_block=hb,
+                                      z_slab=zs, z_block=zb)
+                    got = hbm_read_bytes_per_step_3d((Z, H, W), g, D)
+                    want = ((1 + 2 * hb / sm) * (1 + 2 * zb / zs)
+                            * grid_bytes)
+                    assert got == pytest.approx(want)
+                    assert g.read_amp == pytest.approx(got / grid_bytes)
+            foil = SubstrateGeom(dim=3, strip_m=sm, h_block=0,
+                                 z_slab=zs, z_block=0)
+            assert hbm_read_bytes_per_step_3d((Z, H, W), foil, D) == \
+                9 * grid_bytes
+            assert foil.read_amp == 9.0
+
+    def test_subblocked_amp_strictly_below_wholeslab(self):
+        """Auto joint sizing always beats the 9x foil (the acceptance
+        bound), and by a wide margin for shallow halos."""
+        for halo in (1, 2, 4):
+            zs, zb, sm, hb = choose_slab_blocks(64, 256, 512, halo)
+            g = SubstrateGeom(dim=3, strip_m=sm, h_block=hb,
+                              z_slab=zs, z_block=zb)
+            assert g.read_amp < 9.0
+            if halo <= 2:
+                assert g.read_amp <= 2.0
+
+    def test_band_sparsity_measures_every_rank(self):
+        """The measured-S sanity helper covers the 1D/3D operands this PR
+        adds (it measures exactly what the N-D kernel loads)."""
+        from repro.kernels import band_sparsity
+        for spec in (StencilSpec("box", 1, 1), StencilSpec("box", 2, 1),
+                     StencilSpec("box", 3, 1), StencilSpec("star", 3, 2)):
+            s = band_sparsity(make_weights(spec, seed=0), 32)
+            assert 0.0 < s <= 1.0
+
+    def test_choose_slab_blocks_divides_and_covers(self):
+        for (z, h, halo) in [(64, 256, 3), (48, 96, 8), (16, 32, 4)]:
+            zs, zb, sm, hb = choose_slab_blocks(z, h, 128, halo)
+            assert z % zs == 0 and h % sm == 0
+            assert zs % zb == 0 and sm % hb == 0
+            assert zb >= halo and hb >= halo
+
+    def test_validate_errors(self):
+        w = make_weights(StencilSpec("box", 3, 1), seed=0)
+        with pytest.raises(ValueError, match="z_slab"):
+            stencil_direct(_x3(12, 24, 32), w, tile_m=12, z_slab=5,
+                           interpret=True)
+        with pytest.raises(ValueError, match="z_block"):
+            stencil_direct(_x3(12, 24, 32), w, t=2, tile_m=12, z_slab=6,
+                           h_block=2, z_block=1, interpret=True)
+        with pytest.raises(ValueError, match="whole-slab"):
+            resolve_substrate_geom((12, 24, 32), 1, 4, tile_m=12,
+                                   h_block=2, z_slab=6, z_block=0)
+        with pytest.raises(ValueError, match="rank"):
+            stencil_direct(_x3(12, 24, 32), w[0], interpret=True)
+
+
+class Test1DLift:
+    """1D grids route through the 2D substrate lifted to (1, N): no crash,
+    no vertical halo, read amplification exactly 1."""
+
+    @pytest.mark.parametrize("t", [1, 3])
+    @pytest.mark.parametrize("r", [1, 2])
+    def test_direct_and_matmul_match_oracle(self, r, t):
+        w = make_weights(StencilSpec("box", 1, r), seed=r)
+        x = jnp.asarray(RNG.normal(size=(96,)).astype(np.float32))
+        ref = stencil_direct_ref(x, w, t)
+        np.testing.assert_allclose(
+            np.asarray(stencil_direct(x, w, t=t, interpret=True)),
+            np.asarray(ref), atol=2e-5)
+        np.testing.assert_allclose(
+            np.asarray(stencil_matmul(x, w, t=t, interpret=True)),
+            np.asarray(ref), atol=2e-5)
+
+    def test_lifted_geometry_reads_once(self):
+        g = resolve_substrate_geom((128,), 0, 4)
+        assert g.dim == 1 and g.strip_m == 1 and g.read_amp == 1.0
+
+    def test_h_block_pins_coerce_like_plans(self):
+        """Kernel-level h_block pins on 1D grids coerce exactly as the
+        plan-level rule does (0 stays the foil, anything else becomes 1)
+        -- no pin a plan accepts may crash the kernel."""
+        w = make_weights(StencilSpec("box", 1, 1), seed=0)
+        x = jnp.asarray(RNG.normal(size=(64,)).astype(np.float32))
+        base = stencil_direct(x, w, t=1, interpret=True)
+        for hb in (0, 1, 4):
+            np.testing.assert_array_equal(
+                np.asarray(stencil_direct(x, w, t=1, h_block=hb,
+                                          interpret=True)),
+                np.asarray(base))
+            np.testing.assert_array_equal(
+                np.asarray(stencil_matmul(x, w, t=1, h_block=hb,
+                                          interpret=True)),
+                np.asarray(stencil_matmul(x, w, t=1, interpret=True)))
 
 
 class TestChooseHBlock:
