@@ -32,6 +32,14 @@ sizes, whole-slab foil (9x) vs sub-blocked halo planes
 ``read_bytes_step_*_{wholestrip,subblocked}`` columns and plan-timed
 us/step for the VPU and intermediate-reuse MXU paths.
 
+The column-tiled W substrate (DESIGN.md §10) gets the wide-grid sweep
+(``cases_wide``): a grid whose FULL-WIDTH strips exceed the VMEM budget
+(REPRO_VMEM_BUDGET pinned for the case, so the auto sizing genuinely
+escalates), whole-width 3-load foil (3x) vs the column-tiled substrate
+((1 + 2h/strip_m)(1 + 2w_block/w_tile)x), with the resolved
+(w_tile, w_block) recorded and ``scripts/verify.sh`` asserting the
+column-tiled amplification stays below the whole-width foil.
+
 Results also land in BENCH_kernels.json (repo root) for cross-PR
 trajectory tracking.
 """
@@ -50,6 +58,7 @@ from benchmarks.timing import time_us
 from repro.kernels import common, legacy, stencil_plan
 from repro.kernels.common import (SubstrateGeom, choose_hblock,
                                   hbm_read_bytes_per_step_3d,
+                                  resolve_substrate_geom,
                                   substrate_read_amp)
 from repro.kernels.stencil_matmul import build_bands, build_bands_nd
 from repro.stencil import StencilSpec, fuse_weights, make_weights
@@ -73,6 +82,16 @@ N3 = (16, 32, 32)      # (Z, H, W)
 SLAB3, STRIP3, TILE3 = 8, 16, 32
 CASES_3D = [(s, r, t) for s in SHAPES for r in (1, 2) for t in (1, 2)]
 QUICK_CASES_3D = [("box", 1, 2)]
+#: Wide-grid column-tiled sweep (DESIGN.md §10): a width whose FULL-WIDTH
+#: strip working set exceeds the VMEM budget, so auto resolution
+#: column-tiles W.  The default 8 MB budget would need W in the hundreds
+#: of thousands -- far beyond honest interpret-mode timing -- so the case
+#: pins REPRO_VMEM_BUDGET (the satellite's env override, folded into plan
+#: cache keys) to a budget the benchmark width genuinely exceeds.
+N_WIDE = (32, 1024)    # (H, W): full-width needs >= ~66 KB at t=2
+WIDE_BUDGET = 16 * 1024
+CASES_WIDE = [("box", 1, 1), ("box", 1, 2), ("star", 1, 2)]
+QUICK_CASES_WIDE = [("box", 1, 2)]
 #: Full sweeps land in BENCH_kernels.json (the cross-PR trajectory file);
 #: BENCH_QUICK=1 sweeps go to a sibling .quick file so CI smoke runs never
 #: clobber tracked full-grid data.
@@ -206,6 +225,75 @@ def _case3d(shape: str, r: int, t: int, x3) -> dict:
     return row
 
 
+def _case_wide(shape: str, r: int, t: int, xw) -> dict:
+    """One wide-grid case: whole-width 3-load foil vs the column-tiled
+    substrate that auto resolution picks when full width cannot fit the
+    (reduced) VMEM budget.  Per-step reads follow the three-factor
+    product (1 + 2h/strip_m)(1 + 2w_block/w_tile)·H·W·D vs the foil's 3x.
+    """
+    spec = StencilSpec(shape, 2, r)
+    w = make_weights(spec, seed=r)
+    halo = r * t
+    old_budget = os.environ.get("REPRO_VMEM_BUDGET")
+    os.environ["REPRO_VMEM_BUDGET"] = str(WIDE_BUDGET)
+    try:
+        geom = resolve_substrate_geom(N_WIDE, halo, DTYPE_BYTES)
+        assert geom.w_tile > 0, \
+            f"wide case failed to column-tile: {geom} (budget {WIDE_BUDGET})"
+        bands = build_bands(w.astype(np.float32),
+                            common.choose_tile(N_WIDE[-1])).shape
+
+        row = {
+            "case": f"{spec.name}-t{t}-wide", "shape": shape, "r": r, "t": t,
+            "grid": list(N_WIDE), "vmem_budget": WIDE_BUDGET,
+            "strip_m": geom.strip_m, "h_block": geom.h_block,
+            "w_tile": geom.w_tile, "w_block": geom.w_block,
+            "read_amp_wholestrip": substrate_read_amp(geom.strip_m, 0),
+            "read_amp_coltiled": geom.read_amp,
+            "read_bytes_step_direct_wholestrip":
+                common.hbm_read_bytes_per_step(
+                    N_WIDE, geom.strip_m, DTYPE_BYTES) / t,
+            "read_bytes_step_direct_coltiled":
+                common.hbm_read_bytes_per_step(
+                    N_WIDE, geom.strip_m, DTYPE_BYTES,
+                    h_block=geom.h_block, w_tile=geom.w_tile,
+                    w_block=geom.w_block) / t,
+            "read_bytes_step_matmul_coltiled":
+                common.hbm_read_bytes_per_step(
+                    N_WIDE, geom.strip_m, DTYPE_BYTES, bands_shape=bands,
+                    h_block=geom.h_block, w_tile=geom.w_tile,
+                    w_block=geom.w_block) / t,
+        }
+
+        pins = dict(tile_m=geom.strip_m, interpret=True)
+        col = dict(h_block=geom.h_block, w_tile=geom.w_tile,
+                   w_block=geom.w_block)
+        paths = {
+            # the whole-width foil executes in interpret mode regardless
+            # of VMEM -- it is the analytic+timed foil, not a TPU claim
+            "us_step_direct_wholestrip": stencil_plan(
+                w, N_WIDE, xw.dtype, t, backend="fused_direct_wholestrip",
+                **pins),
+            "us_step_direct_coltiled": stencil_plan(
+                w, N_WIDE, xw.dtype, t, backend="fused_direct",
+                **col, **pins),
+            "us_step_matmul_coltiled": stencil_plan(
+                w, N_WIDE, xw.dtype, t, backend="fused_matmul_reuse",
+                **col, **pins),
+        }
+        iters = 1 if os.environ.get("BENCH_QUICK") else 3
+        for key, plan in paths.items():
+            row[key] = time_us(plan, xw, iters=iters) / t
+            row[key.replace("us_step_", "plan_build_us_")] = \
+                plan.build_time_s * 1e6
+        return row
+    finally:
+        if old_budget is None:
+            os.environ.pop("REPRO_VMEM_BUDGET", None)
+        else:
+            os.environ["REPRO_VMEM_BUDGET"] = old_budget
+
+
 def run() -> list[str]:
     rng = np.random.default_rng(0)
     x = jnp.asarray(rng.normal(size=(N, N)).astype(np.float32))
@@ -217,6 +305,9 @@ def run() -> list[str]:
             for shape in SHAPES for r in radii for t in depths]
     cases3d = QUICK_CASES_3D if quick else CASES_3D
     rows3d = [_case3d(shape, r, t, x3) for shape, r, t in cases3d]
+    xw = jnp.asarray(rng.normal(size=N_WIDE).astype(np.float32))
+    cases_wide = QUICK_CASES_WIDE if quick else CASES_WIDE
+    rows_wide = [_case_wide(shape, r, t, xw) for shape, r, t in cases_wide]
 
     with open(JSON_PATH_QUICK if quick else JSON_PATH, "w") as f:
         json.dump({"grid": N, "tile": TILE, "dtype_bytes": DTYPE_BYTES,
@@ -224,8 +315,11 @@ def run() -> list[str]:
                    "depths": list(depths),
                    "grid_3d": list(N3),
                    "slab_3d": [SLAB3, STRIP3, TILE3],
+                   "grid_wide": list(N_WIDE),
+                   "vmem_budget_wide": WIDE_BUDGET,
                    "timing": "interpret-mode CPU (relative only)",
-                   "cases": rows, "cases_3d": rows3d}, f, indent=1)
+                   "cases": rows, "cases_3d": rows3d,
+                   "cases_wide": rows_wide}, f, indent=1)
 
     out = ["traffic.case,loads_old/new/sub,read_amp_direct_new,"
            "read_amp_direct_sub,rdMB_step_mm_old,rdMB_step_mm_new,"
@@ -260,6 +354,19 @@ def run() -> list[str]:
             f"{c['us_step_direct_subblocked']:.0f},"
             f"{c['us_step_matmul_wholestrip']:.0f},"
             f"{c['us_step_matmul_subblocked']:.0f}")
+
+    out.append("trafficwide.case,w_tile/w_block,read_amp_whole,"
+               "read_amp_coltiled,rdMB_step_dir_whole,rdMB_step_dir_col,"
+               "us_dir_whole,us_dir_col,us_mm_col")
+    for c in rows_wide:
+        out.append(
+            f"trafficwide.{c['case']},{c['w_tile']}/{c['w_block']},"
+            f"{c['read_amp_wholestrip']:.2f}x,{c['read_amp_coltiled']:.2f}x,"
+            f"{c['read_bytes_step_direct_wholestrip']/2**20:.3f},"
+            f"{c['read_bytes_step_direct_coltiled']/2**20:.3f},"
+            f"{c['us_step_direct_wholestrip']:.0f},"
+            f"{c['us_step_direct_coltiled']:.0f},"
+            f"{c['us_step_matmul_coltiled']:.0f}")
     return out
 
 

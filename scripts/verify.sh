@@ -27,8 +27,10 @@ python benchmarks/run.py
 
 # The benchmark smoke must include at least one freshly measured 3D
 # halo-plane traffic case (DESIGN.md §9), with the sub-blocked
-# amplification strictly below the whole-slab foil's 9x -- the ISSUE-4
-# acceptance criterion.
+# amplification strictly below the whole-slab foil's 9x (the ISSUE-4
+# acceptance criterion), and at least one wide-grid column-tiled case
+# (DESIGN.md §10) whose read amplification stays below the whole-width
+# 3x foil with a genuinely positive resolved w_tile (ISSUE-5).
 python - <<'EOF'
 import json, os
 path = "BENCH_kernels.quick.json" if os.environ.get("BENCH_QUICK") \
@@ -36,13 +38,22 @@ path = "BENCH_kernels.quick.json" if os.environ.get("BENCH_QUICK") \
 assert os.path.getmtime(path) >= os.path.getmtime(os.environ["BENCH_STAMP"]), \
     f"{path} was not rewritten by this run (traffic benchmark failed?)"
 with open(path) as f:
-    cases = json.load(f)["cases_3d"]
+    data = json.load(f)
+cases = data["cases_3d"]
 assert cases, f"no 3D traffic cases in {path}"
 for c in cases:
     assert c["read_bytes_step_direct_subblocked"] < \
         c["read_bytes_step_direct_wholestrip"], c["case"]
     assert c["read_amp_subblocked"] < c["read_amp_wholestrip"], c["case"]
+wide = data["cases_wide"]
+assert wide, f"no wide-grid column-tiled cases in {path}"
+for c in wide:
+    assert c["w_tile"] > 0 and c["w_block"] > 0, c["case"]
+    assert c["read_amp_coltiled"] < c["read_amp_wholestrip"], c["case"]
+    assert c["read_bytes_step_direct_coltiled"] < \
+        c["read_bytes_step_direct_wholestrip"], c["case"]
 print(f"verify: {len(cases)} 3D traffic case(s) in {path}, "
-      "sub-blocked < whole-slab")
+      "sub-blocked < whole-slab; "
+      f"{len(wide)} wide case(s), column-tiled < whole-width foil")
 EOF
 rm -f "$BENCH_STAMP"

@@ -147,24 +147,28 @@ class StencilWorkload:
 
     # ---- matrix-unit execution with intermediate reuse (DESIGN.md §4)
     def flops_matrix_reuse(self, sparsity: float, strip_m: int = 128,
-                           z_slab: Optional[int] = None) -> float:
+                           z_slab: Optional[int] = None,
+                           w_tile: Optional[int] = None) -> float:
         """C_TC,reuse^(t) = (beta/S) * C^(t) per output point.
 
         t radius-r banded contractions with intermediates resident in VMEM:
         the fused kernel never materializes so alpha drops to 1; instead the
         shrinking leading-axis halos are recomputed, inflating executed work
-        by ``beta = reuse_beta(spec, t, strip_m, z_slab)`` (the 2D
+        by ``beta = reuse_beta(spec, t, strip_m, z_slab, w_tile)`` (the 2D
         ``halo_recompute_factor`` for d=2; the (z, y) product mean for d=3;
-        exactly 1 for lifted 1D, which has no leading halo).  ``sparsity``
-        is the scheme's S at the BASE radius r.
+        exactly 1 for lifted 1D, which has no leading halo; the column-tiled
+        substrate (``w_tile``, DESIGN.md §10) adds the carried x-halo as one
+        more recomputed axis).  ``sparsity`` is the scheme's S at the BASE
+        radius r.
         """
         _check_sparsity(sparsity)
-        beta = reuse_beta(self.spec, self.t, strip_m, z_slab)
+        beta = reuse_beta(self.spec, self.t, strip_m, z_slab, w_tile)
         return (beta / sparsity) * self.flops_vector()
 
     def intensity_matrix_reuse(self, sparsity: float, strip_m: int = 128,
-                               z_slab: Optional[int] = None) -> float:
-        return (self.flops_matrix_reuse(sparsity, strip_m, z_slab)
+                               z_slab: Optional[int] = None,
+                               w_tile: Optional[int] = None) -> float:
+        return (self.flops_matrix_reuse(sparsity, strip_m, z_slab, w_tile)
                 / self.bytes_per_output())
 
 
@@ -217,22 +221,31 @@ def halo_recompute_factor_nd(radius: int, t: int, sizes) -> float:
 
 
 def reuse_beta(spec: StencilSpec, t: int, strip_m: int = 128,
-               z_slab: Optional[int] = None) -> float:
+               z_slab: Optional[int] = None,
+               w_tile: Optional[int] = None) -> float:
     """Dim-aware beta for the reuse regime: the single channel the
     workload, ``perf_matrix_reuse`` and the selector's reason string all
     consult, so priced and displayed betas can never disagree.
 
     d=2 keeps the closed-form ``halo_recompute_factor`` (bit-identical to
     the historical pricing); d=3 is the (z_slab, strip_m) product mean;
-    d=1 is exactly 1 (the lifted substrate has no leading halo).
+    d=1 is exactly 1 (the lifted substrate has no leading halo).  On the
+    column-tiled substrate (``w_tile`` set, DESIGN.md §10) the carried
+    x-halo shrinks per step exactly like the leading halos, so the tile
+    width joins the product mean as one more recomputed axis; full-width
+    substrates (``w_tile=None``) re-wrap in-VMEM at zero recompute.
     """
     if spec.dim == 1:
         return 1.0
     if spec.dim == 3:
-        return halo_recompute_factor_nd(
-            spec.radius, t, (z_slab if z_slab is not None else strip_m,
-                             strip_m))
-    return halo_recompute_factor(spec.radius, t, strip_m)
+        sizes = (z_slab if z_slab is not None else strip_m, strip_m)
+    elif w_tile is None:
+        return halo_recompute_factor(spec.radius, t, strip_m)
+    else:
+        sizes = (strip_m,)
+    if w_tile is not None:
+        sizes = sizes + (w_tile,)
+    return halo_recompute_factor_nd(spec.radius, t, sizes)
 
 
 def _check_sparsity(s: float) -> None:
@@ -297,16 +310,18 @@ def perf_matrix(w: StencilWorkload, hw: HardwareSpec, sparsity: float) -> UnitPe
 
 def perf_matrix_reuse(w: StencilWorkload, hw: HardwareSpec, sparsity: float,
                       strip_m: int = 128,
-                      z_slab: Optional[int] = None) -> UnitPerf:
+                      z_slab: Optional[int] = None,
+                      w_tile: Optional[int] = None) -> UnitPerf:
     """Intermediate-reuse regime (DESIGN.md §4): alpha=1, halo-recompute beta
-    (dim-aware: ``reuse_beta``; ``z_slab`` matters only for 3D workloads).
+    (dim-aware: ``reuse_beta``; ``z_slab`` matters only for 3D workloads,
+    ``w_tile`` only on the column-tiled substrate -- DESIGN.md §10).
 
     ``sparsity`` is the scheme's S at the base radius r (the per-step banded
     operand), NOT the monolithic S at radius t*r.
     """
-    i = w.intensity_matrix_reuse(sparsity, strip_m, z_slab)
+    i = w.intensity_matrix_reuse(sparsity, strip_m, z_slab, w_tile)
     raw = attainable(hw.p_matrix, hw.bandwidth, i)
-    beta = reuse_beta(w.spec, w.t, strip_m, z_slab)
+    beta = reuse_beta(w.spec, w.t, strip_m, z_slab, w_tile)
     actual = (sparsity / beta) * raw
     return UnitPerf("matrix_reuse", i, raw, actual,
                     bound_state(hw.p_matrix, hw.bandwidth, i), hw.ridge_matrix)

@@ -52,6 +52,12 @@ class PricingContext:
     #: ``z_slab`` also feeds the reuse regime's dim-aware beta.
     z_slab: Optional[int] = None
     z_block: Optional[int] = None
+    #: Column-tiled W substrate (DESIGN.md §10; 0 = full width).  Like
+    #: h_block, the read amplification is already in ``workload.read_amp``;
+    #: ``w_tile`` additionally feeds the reuse regime's beta (the carried
+    #: x-halo is recomputed per step exactly like the leading axes).
+    w_tile: int = 0
+    w_block: int = 0
 
 
 #: Total ``select_backend`` invocations this process -- lets tests assert a
@@ -75,6 +81,8 @@ def select_backend(
     h_block: Optional[int] = None,
     z_slab: Optional[int] = None,
     z_block: Optional[int] = None,
+    w_tile: Optional[int] = None,
+    w_block: Optional[int] = None,
 ) -> Decision:
     """Pick the predicted-fastest backend for ``t`` fused steps of ``spec``.
 
@@ -97,9 +105,13 @@ def select_backend(
     workloads additionally take ``z_slab``/``z_block`` (pricing defaults:
     z_slab = strip_m, auto z_block) and price the product amplification
     (1 + 2h/strip_m)(1 + 2z_block/z_slab); 1D workloads always price the
-    lifted substrate (strip_m = 1, read amplification exactly 1).  The
-    resolved geometry and its read factor are appended to every reason
-    string, so ``ops.explain`` surfaces what the substrate costs.
+    lifted substrate (strip_m = 1, read amplification exactly 1).
+    ``w_tile``/``w_block`` (2D/3D) price the column-tiled W substrate
+    (DESIGN.md §10): the read-amp product gains the (1 + 2w_block/w_tile)
+    factor and the reuse beta the carried-x-halo recompute.  The resolved
+    geometry and its read factor (including the resolved ``w_tile``) are
+    appended to every reason string, so ``ops.explain`` surfaces what the
+    substrate costs.
     """
     global _invocations
     _invocations += 1
@@ -115,7 +127,7 @@ def select_backend(
     # shares resolve_substrate_geom's pin rules (including the hybrid
     # z_block=0 rejection), so the priced substrate is always buildable.
     geom = pricing_geom(spec.dim, t * spec.radius, strip_m, h_block,
-                        z_slab, z_block)
+                        z_slab, z_block, w_tile, w_block)
     read_amp = geom.read_amp
     w = pm.StencilWorkload(spec, t, dtype_bytes, read_amp=read_amp)
     s_mono = sparsity if sparsity is not None else \
@@ -129,7 +141,9 @@ def select_backend(
         strip_m=geom.strip_m, h_block=geom.h_block,
         use_sparse_unit=use_sparse_unit,
         z_slab=geom.z_slab if spec.dim == 3 else None,
-        z_block=geom.z_block if spec.dim == 3 else None))
+        z_block=geom.z_block if spec.dim == 3 else None,
+        w_tile=geom.w_tile if spec.dim >= 2 else 0,
+        w_block=geom.w_block if spec.dim >= 2 else 0))
     if not candidates:
         raise RuntimeError("no registered backend priced this workload")
 
@@ -142,7 +156,8 @@ def select_backend(
 
     if backend == "fused_matmul_reuse":
         beta = pm.reuse_beta(spec, t, geom.strip_m,
-                             geom.z_slab if spec.dim == 3 else None)
+                             geom.z_slab if spec.dim == 3 else None,
+                             geom.w_tile or None)
         reason = (
             f"intermediate-reuse regime wins: alpha=1 (vs monolithic "
             f"alpha={w.alpha:.3f}), S_r={s_reuse:.3f} at base radius (vs "

@@ -14,11 +14,11 @@ from .registry import (register_backend, unregister_backend,
 from .stencil_direct import stencil_direct
 from .stencil_matmul import (stencil_matmul, build_bands, build_bands_nd,
                              band_sparsity)
-from .common import (SubstrateGeom, choose_hblock, choose_slab_blocks,
-                     choose_strip, choose_strip_blocks, choose_tile,
-                     pricing_geom, resolve_strip_blocks,
+from .common import (SubstrateGeom, choose_col_blocks, choose_hblock,
+                     choose_slab_blocks, choose_strip, choose_strip_blocks,
+                     choose_tile, pricing_geom, resolve_strip_blocks,
                      resolve_substrate_geom, strip_in_specs,
-                     substrate_read_amp)
+                     substrate_read_amp, vmem_budget_bytes)
 
 
 def __getattr__(name):

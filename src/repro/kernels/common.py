@@ -62,14 +62,52 @@ d=2 instance of a general halo-plane substrate:
     vertical halo is 0, so each strip streams only its own rows
     (read amplification exactly 1) and the x-wrap stays in-VMEM.
 
+COLUMN-TILED W AXIS (DESIGN.md §10).  Both schemes above span the FULL
+width in VMEM, so grids with W >> VMEM (weather/fluid planes with W in
+the tens of thousands) cannot execute at all.  When the full-width
+working set exceeds the VMEM budget the substrate column-tiles the last
+axis too:
+
+  * the grid gains a (w-tile, w-block) dimension: each output cell is a
+    (strip_m, w_tile) tile (2D) or (z_slab, strip_m, w_tile) cell (3D),
+    and the single input reference shrinks to (h_block, w_block) /
+    (z_block, h_block, w_block), walking the FULL block ring -- own
+    blocks plus every neighbor block that can contain halo rows OR halo
+    columns -- into a VMEM scratch of
+    (strip_m + 2*h_block, w_tile + 2*w_block) (plus the z axis in 3D);
+  * the periodic x-halo is assembled from neighbor COLUMN blocks
+    (modulo wrap in the index map, exactly like the vertical axes)
+    instead of the in-VMEM ``wrap_columns`` concat -- scratch rows are
+    no longer complete global rows, so fused execution must CARRY a
+    2*t*r-wide x-halo (``w_block >= t*r``) and shrink it per step, the
+    same discipline the leading axes always had.  Reads per step become
+    the three-factor product
+
+        (1 + 2*h_block/strip_m)(1 + 2*z_block/z_slab)
+            (1 + 2*w_block/w_tile) * Z*H*W*D
+
+  * widths with no usable divisor (primes, awkward W) run through an
+    edge-tile remainder path: the input is periodically extended by one
+    w_block per side on the host, the column walk drops its modulo wrap
+    (the extension carries it), and the padded output columns are
+    sliced off -- so ANY width executes at a non-degenerate tile.
+
+``w_tile=0`` is the full-width fast path: the launchers and sizing are
+bit-for-bit the pre-column-tiling scheme, and auto-resolution only
+column-tiles when full width cannot fit the budget.  The whole-strip /
+whole-slab foils never column-tile (they are full-width by
+construction), so ``w_tile > 0`` requires the sub-blocked substrate.
+
 ``SubstrateGeom`` carries the resolved (z_slab, z_block, strip_m,
-h_block) geometry through plans, the selector and the cache keys;
-``resolve_substrate_geom`` is THE shared sizing rule for every rank.
+h_block, w_tile, w_block) geometry through plans, the selector and the
+cache keys; ``resolve_substrate_geom`` is THE shared sizing rule for
+every rank.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
@@ -85,9 +123,32 @@ NEIGHBOR_OFFSETS_STRIP = (-1, 0, 1)
 #: sub-blocked substrate issues ``strip_m/h_block + 2`` h-row blocks.
 STRIP_NEIGHBOR_LOADS = len(NEIGHBOR_OFFSETS_STRIP)
 
-#: Default VMEM working-set budget for strip sizing (bytes).  ~16 MB per
-#: core on TPU v4/v5; leave half for double buffering and the output strip.
+#: Default VMEM working-set budget for strip sizing (bytes).  TPU v4/v5
+#: cores have ~16 MB of VMEM; this budget is deliberately HALF of that
+#: (8 MB) so the other half stays free for Mosaic's double buffering and
+#: pipeline slack.  Override per process with the REPRO_VMEM_BUDGET
+#: environment variable (``vmem_budget_bytes``), validated like
+#: REPRO_PLAN_CACHE_SIZE.
 VMEM_BUDGET_BYTES = 8 * 1024 * 1024
+
+
+def vmem_budget_bytes() -> int:
+    """The effective VMEM sizing budget: ``REPRO_VMEM_BUDGET`` if set
+    (must be a positive integer number of bytes), else
+    :data:`VMEM_BUDGET_BYTES`.  Read at every geometry resolution, so
+    tests and long-running servers can retune without reimporting; the
+    plan cache folds the effective value into its keys."""
+    raw = os.environ.get("REPRO_VMEM_BUDGET")
+    if raw is None:
+        return VMEM_BUDGET_BYTES
+    try:
+        budget = int(raw)
+    except ValueError:
+        raise ValueError(
+            f"REPRO_VMEM_BUDGET must be an integer, got {raw!r}") from None
+    if budget < 1:
+        raise ValueError(f"REPRO_VMEM_BUDGET must be >= 1, got {budget}")
+    return budget
 
 
 def strip_in_specs(strip_m: int, n: int, grid_m: int):
@@ -165,13 +226,20 @@ def wrap_columns(x: jax.Array, halo: int) -> jax.Array:
 
 
 def choose_tile(n: int, preferred: int = 128) -> int:
-    """Largest divisor of ``n`` that is <= preferred (MXU-friendly when 128)."""
-    if n <= preferred:
-        return n
-    for cand in range(preferred, 0, -1):
-        if n % cand == 0:
-            return cand
-    return n
+    """Column-tile width for the banded MXU contraction: min(n, preferred).
+
+    Cap policy: the tile is NEVER degenerate -- widths that are not
+    multiples of ``preferred`` get a full-size tile plus one narrower
+    edge tile (both kernels handle the remainder by slicing the banded
+    operand, which contains every narrower band as a leading submatrix).
+    The historical rule searched for the largest divisor of ``n``, which
+    collapsed to 1-wide tiles on prime widths (choose_tile(257) == 1)
+    and to awkward off-lane tiles on near-misses (choose_tile(130) ==
+    65), silently destroying MXU utilization.
+    """
+    if n <= 0:
+        raise ValueError(f"width must be positive, got {n}")
+    return min(n, preferred)
 
 
 def choose_hblock(strip_m: int, halo: int) -> int:
@@ -180,17 +248,56 @@ def choose_hblock(strip_m: int, halo: int) -> int:
     ``h_block`` must cover the halo in one neighbor block (>= halo) and
     divide the strip.  Smaller blocks cut traffic (amplification is
     1 + 2h/strip_m) but multiply grid cells and shrink below the TPU
-    sublane tile for thin strips, so we floor at strip_m/16 -- amplification
-    lands at ~1.125 whenever the halo allows, and degrades gracefully
-    toward the whole-strip 3x as the halo forces h_block up (h_block =
-    strip_m whenever no proper divisor reaches the halo).
+    sublane tile for thin strips, so we floor at ceil(strip_m/16) --
+    amplification lands at ~1.125 whenever the halo allows, and degrades
+    gracefully toward the whole-strip 3x as the halo forces h_block up
+    (h_block = strip_m whenever no proper divisor reaches the halo).
     """
     if strip_m <= 0:
         raise ValueError(f"strip height must be positive, got {strip_m}")
-    floor = max(halo, strip_m / 16)
+    floor = max(halo, -(-strip_m // 16))      # integer ceil division
     cands = [d for d in range(1, strip_m + 1)
              if strip_m % d == 0 and d >= floor]
     return min(cands) if cands else strip_m
+
+
+def _strip_working_set(d: int, hb: int, n: int, halo: int,
+                       dtype_bytes: int) -> int:
+    """Full-width 2D VMEM working set, priced at the WORSE of the two
+    substrates -- 3 full strips (whole-strip foil) vs scratch +
+    in-flight h-block (sub-blocked) -- plus the horizontally-extended
+    f32 compute tile and the output strip."""
+    inputs = max(3 * d * n, (d + 2 * hb) * n + hb * n)
+    return (inputs + (d + 2 * halo) * (n + 2 * halo) + d * n) * dtype_bytes
+
+
+def _col_working_set_2d(sm: int, hb: int, wt: int, wb: int, halo: int,
+                        x_halo: int, dtype_bytes: int) -> int:
+    """Column-tiled 2D VMEM working set: scratch + in-flight block +
+    halo-extended compute tile + output tile (sub-blocked only -- the
+    whole-strip foil never column-tiles)."""
+    scratch = (sm + 2 * hb) * (wt + 2 * wb) + hb * wb
+    compute = (sm + 2 * halo) * (wt + 2 * x_halo)
+    return (scratch + compute + sm * wt) * dtype_bytes
+
+
+def _wtile_candidates(w: int, x_halo: int, preferred: int = 128) -> list:
+    """Column-tile widths worth considering for a width-``w`` grid.
+
+    Divisors of ``w`` (the aligned path: pure modulo-wrap column walk,
+    zero host traffic) that can hold the x-halo, plus the caps
+    ``min(w-1, k*preferred)`` for k in (1, 2, 4) -- non-divisor caps run
+    the edge-tile remainder path, so prime and awkward widths still get
+    a full-size tile instead of a degenerate divisor.  ``w`` itself is
+    excluded: that is the full-width fast path, not a column tiling.
+    """
+    lo = max(x_halo, 1)
+    cands = {d for d in range(lo, w) if w % d == 0}
+    for k in (1, 2, 4):
+        cap = min(w - 1, k * preferred)
+        if cap >= lo:
+            cands.add(cap)
+    return sorted(cands) or [max(w - 1, 1)]
 
 
 def choose_strip_blocks(
@@ -198,28 +305,29 @@ def choose_strip_blocks(
     n: int,
     halo: int,
     dtype_bytes: int = 4,
-    vmem_budget: int = VMEM_BUDGET_BYTES,
+    vmem_budget: int = None,
     preferred: int = 128,
 ) -> tuple:
-    """Jointly size (strip_m, h_block) under the VMEM budget.
+    """Jointly size the full-width (strip_m, h_block) under the VMEM budget.
 
     ``strip_m``: a divisor of ``h``, >= halo, fitting VMEM; among fitting
     divisors prefer the largest <= ``preferred`` (taller strips both
     amortize per-cell cost and shrink the halo read factor 1 + 2h/strip_m).
     ``h_block``: ``choose_hblock`` of the chosen strip.  The input-side
-    working set is priced at the WORSE of the two substrates -- 3 full
-    strips (whole-strip) vs scratch + in-flight h-block (sub-blocked) --
-    so a strip that fits the budget fits whichever substrate the caller
-    ends up running (the ``*_wholestrip`` foils share this sizing);
-    both substrates add the horizontally-extended compute tile and the
-    output strip.
+    working set is priced at the worse of the two substrates
+    (``_strip_working_set``), so a strip that fits the budget fits
+    whichever substrate the caller ends up running (the ``*_wholestrip``
+    foils share this sizing).  When NO full-width strip fits, the
+    smallest viable one is returned anyway -- ``resolve_strip_blocks``
+    detects that case and escalates to the column-tiled sizing
+    (``choose_col_blocks``) instead.
     """
+    if vmem_budget is None:
+        vmem_budget = vmem_budget_bytes()
 
     def working_set(d: int) -> int:
-        hb = choose_hblock(d, halo)
-        inputs = max(3 * d * n, (d + 2 * hb) * n + hb * n)
-        return (inputs
-                + (d + 2 * halo) * (n + 2 * halo) + d * n) * dtype_bytes
+        return _strip_working_set(d, choose_hblock(d, halo), n, halo,
+                                  dtype_bytes)
 
     divisors = [d for d in range(1, h + 1) if h % d == 0]
     viable = [d for d in divisors if d >= halo] or [h]
@@ -235,12 +343,74 @@ def choose_strip(
     n: int,
     halo: int,
     dtype_bytes: int = 4,
-    vmem_budget: int = VMEM_BUDGET_BYTES,
+    vmem_budget: int = None,
     preferred: int = 128,
 ) -> int:
     """Strip height only (see ``choose_strip_blocks`` for the joint choice)."""
     return choose_strip_blocks(h, n, halo, dtype_bytes, vmem_budget,
                                preferred)[0]
+
+
+def _axis_candidates(extent: int, halo: int, pin: int,
+                     preferred: int = 128) -> list:
+    """Leading-axis tile candidates: divisors >= halo capped at
+    ``preferred`` (pins pass through verbatim)."""
+    if pin is not None:
+        return [pin]
+    cands = [d for d in range(1, extent + 1)
+             if extent % d == 0 and d >= halo] or [extent]
+    capped = [d for d in cands if d <= preferred]
+    return capped or [min(cands)]
+
+
+def choose_col_blocks(
+    h: int,
+    w: int,
+    halo: int,
+    x_halo: int = None,
+    dtype_bytes: int = 4,
+    vmem_budget: int = None,
+    preferred: int = 128,
+    m_pin: int = None,
+    w_pin: int = None,
+) -> tuple:
+    """Jointly size the column-tiled 2D geometry
+    (strip_m, h_block, w_tile, w_block) under the VMEM budget.
+
+    Entered when the full-width working set cannot fit (or the caller
+    pinned ``w_tile``): the search spans strip candidates (divisors of
+    ``h`` >= halo, capped at ``preferred``) x column-tile candidates
+    (``_wtile_candidates``); blocks are ``choose_hblock`` of each tile,
+    with the w-block floored at the CARRIED x-halo ``x_halo`` (= t*r --
+    column-tiled kernels cannot re-wrap, DESIGN.md §10).  Among fitting
+    combinations the rule minimizes the read-amplification product
+    (1 + 2*h_block/strip_m)(1 + 2*w_block/w_tile), tie-breaking toward
+    fewer grid cells (larger tiles); when nothing fits, the smallest
+    working set wins.
+    """
+    if vmem_budget is None:
+        vmem_budget = vmem_budget_bytes()
+    xh = halo if x_halo is None else x_halo
+
+    def wb_of(wt: int) -> int:
+        return choose_hblock(wt, max(xh, 1))
+
+    def ws(sm: int, wt: int) -> int:
+        return _col_working_set_2d(sm, choose_hblock(sm, halo), wt,
+                                   wb_of(wt), halo, xh, dtype_bytes)
+
+    def amp(sm: int, wt: int) -> float:
+        return (substrate_read_amp(sm, choose_hblock(sm, halo))
+                * substrate_read_amp(wt, wb_of(wt)))
+
+    pairs = [(sm, wt)
+             for sm in _axis_candidates(h, halo, m_pin, preferred)
+             for wt in ([w_pin] if w_pin else _wtile_candidates(w, xh,
+                                                                preferred))]
+    fitting = [p for p in pairs if ws(*p) <= vmem_budget]
+    pool = fitting or [min(pairs, key=lambda p: ws(*p))]
+    sm, wt = min(pool, key=lambda p: (amp(*p), -p[0] * p[1]))
+    return sm, choose_hblock(sm, halo), wt, wb_of(wt)
 
 
 def choose_slab_blocks(
@@ -249,35 +419,51 @@ def choose_slab_blocks(
     n: int,
     halo: int,
     dtype_bytes: int = 4,
-    vmem_budget: int = VMEM_BUDGET_BYTES,
+    vmem_budget: int = None,
     preferred: int = 128,
     z_pin: int = None,
     m_pin: int = None,
+    w_pin: int = None,
+    x_halo: int = None,
 ) -> tuple:
-    """Jointly size the 3D geometry (z_slab, z_block, strip_m, h_block).
+    """Jointly size the 3D geometry
+    (z_slab, z_block, strip_m, h_block, w_tile, w_block).
 
     ``z_slab`` divides Z and ``strip_m`` divides H, both >= halo;
     ``z_block``/``h_block`` are ``choose_hblock`` of each (smallest
-    halo-covering divisor above the 1/16 floor).  The input working set is
-    priced at the WORSE of the two substrates -- 9 full neighbor slabs
-    (whole-slab foil) vs scratch + in-flight block (sub-blocked) -- plus
-    the f32 halo-extended compute slab and the output slab, so a geometry
-    that fits the budget fits whichever substrate ends up running.  Among
-    fitting (z_slab, strip_m) pairs (free axes capped at ``preferred``)
-    the rule minimizes the analytic read amplification
-    (1 + 2*h_block/strip_m)(1 + 2*z_block/z_slab), tie-breaking toward
-    fewer grid cells (larger slabs).
+    halo-covering divisor above the 1/16 floor).  Two phases:
 
-    ``z_pin``/``m_pin`` fix one (or both) axes to an explicit user pin:
-    the search then sizes only the FREE axis, conditioned on the pinned
-    value -- so a pinned strip of 1024 rows shrinks the chosen slab until
-    the joint working set fits, instead of being sized as if the strip
-    were auto.  Pins are exempt from the divisor/halo/``preferred``
-    filters (explicit values are validated strictly by the caller).
+      * FULL WIDTH (w_tile = w_block = 0, the fast path): the input
+        working set is priced at the WORSE of the two substrates -- 9
+        full neighbor slabs (whole-slab foil) vs scratch + in-flight
+        block (sub-blocked) -- plus the f32 halo-extended compute slab
+        and the output slab, so a geometry that fits the budget fits
+        whichever substrate ends up running.  Taken whenever any
+        full-width pair fits (or ``w_pin=0`` forces it).
+      * COLUMN-TILED (DESIGN.md §10): when no full-width pair fits (or
+        ``w_pin`` > 0), the search adds the (w_tile, w_block) axis --
+        ``_wtile_candidates`` of W, w_block floored at the carried
+        x-halo ``x_halo`` (= t*r) -- and prices the sub-blocked scratch
+        + compute + output cell only (the whole-slab foil never
+        column-tiles).
+
+    Among fitting combinations (free axes capped at ``preferred``) the
+    rule minimizes the analytic read-amplification product, tie-breaking
+    toward fewer grid cells (larger cells).  ``z_pin``/``m_pin``/
+    ``w_pin`` fix axes to explicit user pins: the search sizes only the
+    FREE axes conditioned on the pins.  Pins are exempt from the
+    divisor/halo/``preferred`` filters (explicit values are validated
+    strictly by the caller).
     """
+    if vmem_budget is None:
+        vmem_budget = vmem_budget_bytes()
+    xh = halo if x_halo is None else x_halo
 
     def blocks(zs: int, sm: int) -> tuple:
         return choose_hblock(zs, halo), choose_hblock(sm, halo)
+
+    def wb_of(wt: int) -> int:
+        return choose_hblock(wt, max(xh, 1))
 
     def working_set(zs: int, sm: int) -> int:
         zb, hb = blocks(zs, sm)
@@ -287,25 +473,38 @@ def choose_slab_blocks(
         compute = (zs + 2 * halo) * (sm + 2 * halo) * (n + 2 * halo)
         return (inputs + compute + zs * sm * n) * dtype_bytes
 
+    def working_set_col(zs: int, sm: int, wt: int) -> int:
+        zb, hb = blocks(zs, sm)
+        wb = wb_of(wt)
+        scratch = ((zs + 2 * zb) * (sm + 2 * hb) * (wt + 2 * wb)
+                   + zb * hb * wb)
+        compute = (zs + 2 * halo) * (sm + 2 * halo) * (wt + 2 * xh)
+        return (scratch + compute + zs * sm * wt) * dtype_bytes
+
     def amp(zs: int, sm: int) -> float:
         zb, hb = blocks(zs, sm)
         return substrate_read_amp(sm, hb) * substrate_read_amp(zs, zb)
 
-    def axis_candidates(extent: int, pin: int) -> list:
-        if pin is not None:
-            return [pin]
-        cands = [d for d in range(1, extent + 1)
-                 if extent % d == 0 and d >= halo] or [extent]
-        capped = [d for d in cands if d <= preferred]
-        return capped or [min(cands)]
+    pairs = [(zs, sm) for zs in _axis_candidates(z, halo, z_pin, preferred)
+             for sm in _axis_candidates(h, halo, m_pin, preferred)]
+    if not w_pin:
+        fitting = [p for p in pairs if working_set(*p) <= vmem_budget]
+        if fitting or w_pin == 0:
+            pool = fitting or [min(pairs, key=lambda p: working_set(*p))]
+            zs, sm = min(pool, key=lambda p: (amp(*p), -p[0] * p[1]))
+            zb, hb = blocks(zs, sm)
+            return zs, zb, sm, hb, 0, 0
 
-    pairs = [(zs, sm) for zs in axis_candidates(z, z_pin)
-             for sm in axis_candidates(h, m_pin)]
-    fitting = [p for p in pairs if working_set(*p) <= vmem_budget]
-    pool = fitting or [min(pairs, key=lambda p: working_set(*p))]
-    zs, sm = min(pool, key=lambda p: (amp(*p), -p[0] * p[1]))
+    w_cands = [w_pin] if w_pin else _wtile_candidates(n, xh, preferred)
+    triples = [(zs, sm, wt) for zs, sm in pairs for wt in w_cands]
+    fitting = [t for t in triples if working_set_col(*t) <= vmem_budget]
+    pool = fitting or [min(triples, key=lambda t: working_set_col(*t))]
+    zs, sm, wt = min(
+        pool, key=lambda t: (amp(t[0], t[1])
+                             * substrate_read_amp(t[2], wb_of(t[2])),
+                             -t[0] * t[1] * t[2]))
     zb, hb = blocks(zs, sm)
-    return zs, zb, sm, hb
+    return zs, zb, sm, hb, wt, wb_of(wt)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -316,6 +515,9 @@ class SubstrateGeom:
     with strip_m=1 and zero vertical halo).  ``h_block=0`` selects the
     whole-strip/whole-slab foil substrate (and forces ``z_block=0``);
     otherwise both block heights are >= the halo and divide their tile.
+    ``w_tile=0`` is the full-width fast path; ``w_tile > 0`` selects the
+    column-tiled substrate (DESIGN.md §10: sub-blocked only, with
+    ``w_block`` >= the carried x-halo t*r and dividing ``w_tile``).
     """
 
     dim: int
@@ -323,18 +525,22 @@ class SubstrateGeom:
     h_block: int                 # 0 = whole-strip/whole-slab foil
     z_slab: int = 1              # 3D only; 1 otherwise
     z_block: int = 0             # 3D only; 0 = whole-slab (with h_block=0)
+    w_tile: int = 0              # 0 = full width (fast path)
+    w_block: int = 0             # column halo block; 0 iff w_tile == 0
 
     @property
     def read_amp(self) -> float:
-        """Analytic grid-read amplification of this geometry (DESIGN.md §9):
-        1 (lifted 1D), 1 + 2h/strip_m (2D), the product
-        (1 + 2h/strip_m)(1 + 2z_block/z_slab) (3D); the foils read 3x (2D)
-        and 9x (3D)."""
+        """Analytic grid-read amplification of this geometry (DESIGN.md
+        §9/§10): 1 (lifted 1D), 1 + 2h/strip_m (2D), times
+        (1 + 2z_block/z_slab) (3D), times (1 + 2w_block/w_tile) when
+        column-tiled; the full-width foils read 3x (2D) and 9x (3D)."""
         if self.dim == 1:
             return 1.0
         amp = substrate_read_amp(self.strip_m, self.h_block)
         if self.dim == 3:
             amp *= substrate_read_amp(self.z_slab, self.z_block)
+        if self.w_tile:
+            amp *= substrate_read_amp(self.w_tile, self.w_block)
         return amp
 
     def describe(self) -> str:
@@ -348,6 +554,11 @@ class SubstrateGeom:
             geo = f"1D lifted, strip_m={self.strip_m}"
         else:
             geo = f"strip_m={self.strip_m}, h_block={self.h_block}"
+        if self.dim >= 2:
+            if self.w_tile:
+                geo += f", w_tile={self.w_tile}, w_block={self.w_block}"
+            else:
+                geo += ", w_tile=full"
         return f"substrate read_amp={self.read_amp:.3f}x ({geo})"
 
 
@@ -368,31 +579,73 @@ def _resolve_z_block(h_block: int, z_block: int, z_slab: int,
     return z_block if z_block is not None else choose_hblock(z_slab, halo)
 
 
+def _resolve_w_block(w_tile: int, w_block: int, h_block: int,
+                     x_halo: int) -> tuple:
+    """(w_tile, w_block) under the shared pin rules: ``w_tile`` in
+    (None, 0) is the full-width fast path (w_block forced 0; a lone
+    w_block pin is rejected); a positive ``w_tile`` requires the
+    sub-blocked substrate (the whole-strip/whole-slab foils are
+    full-width by construction) and gets ``choose_hblock`` of the tile
+    floored at the carried x-halo unless ``w_block`` is pinned too.
+    Both ``resolve_substrate_geom`` and ``pricing_geom`` route through
+    here, so plan building and grid-free pricing can never disagree.
+    """
+    if not w_tile:
+        if w_block:
+            raise ValueError(
+                f"w_block={w_block} without a w_tile names no substrate; "
+                "pin w_tile too (or drop both for full width)")
+        return 0, 0
+    if h_block == 0:
+        raise ValueError(
+            "the whole-strip/whole-slab foil substrate (h_block=0) spans "
+            "the full width; column tiling (w_tile > 0) requires the "
+            "sub-blocked substrate")
+    if w_block is None or w_block == 0:
+        return w_tile, choose_hblock(w_tile, max(x_halo, 1))
+    return w_tile, w_block
+
+
 def pricing_geom(dim: int, halo: int, strip_m: int = 128,
                  h_block: int = None, z_slab: int = None,
-                 z_block: int = None) -> SubstrateGeom:
+                 z_block: int = None, w_tile: int = None,
+                 w_block: int = None) -> SubstrateGeom:
     """Grid-free geometry resolution for pricing paths (the selector has
     no grid to size against): dim 1 is always the lifted substrate; dim 2
     takes ``strip_m`` as given with ``choose_hblock`` filling ``h_block``;
     dim 3 defaults ``z_slab`` to ``strip_m`` and resolves ``z_block``
-    under the same shared rule as ``resolve_substrate_geom``."""
+    under the same shared rule as ``resolve_substrate_geom``.  ``w_tile``
+    in (None, 0) prices the full-width fast path; a positive ``w_tile``
+    prices the column-tiled substrate (w_block auto-resolved at the
+    fused x-halo ``halo`` unless pinned)."""
     if dim == 1:
         return SubstrateGeom(dim=1, strip_m=1, h_block=1)
     hb = choose_hblock(strip_m, halo) if h_block is None else h_block
+    wt, wb = _resolve_w_block(w_tile, w_block, hb, halo)
     if dim == 2:
-        return SubstrateGeom(dim=2, strip_m=strip_m, h_block=hb)
+        return SubstrateGeom(dim=2, strip_m=strip_m, h_block=hb,
+                             w_tile=wt, w_block=wb)
     if dim != 3:
         raise ValueError(f"substrate supports 1D/2D/3D grids, got dim {dim}")
     zs = strip_m if z_slab is None else z_slab
     zb = _resolve_z_block(hb, z_block, zs, halo)
     return SubstrateGeom(dim=3, strip_m=strip_m, h_block=hb,
-                         z_slab=zs, z_block=zb)
+                         z_slab=zs, z_block=zb, w_tile=wt, w_block=wb)
+
+
+def _normalize_w_pin(w_tile, w_block, wid: int):
+    """Clamp explicit width pins to the grid: ``w_tile >= W`` IS the
+    full-width fast path (existing geometry bit-for-bit unchanged)."""
+    if w_tile is not None and w_tile >= wid:
+        return 0, 0
+    return w_tile, w_block
 
 
 def resolve_substrate_geom(grid_shape, halo: int, dtype_bytes: int,
                            tile_m: int = None, h_block: int = None,
-                           z_slab: int = None,
-                           z_block: int = None) -> SubstrateGeom:
+                           z_slab: int = None, z_block: int = None,
+                           w_tile: int = None, w_block: int = None,
+                           x_halo: int = None) -> SubstrateGeom:
     """Resolve the full substrate geometry from possibly-``None`` requests.
 
     THE shared N-D auto-sizing rule: the kernels, ``stencil_plan`` pricing
@@ -400,65 +653,98 @@ def resolve_substrate_geom(grid_shape, halo: int, dtype_bytes: int,
     and kernel-level sizing can never drift apart.  Rank comes from
     ``len(grid_shape)``:
 
-      * 1D: lifted 2D geometry (strip_m=1, zero vertical halo, read amp 1);
+      * 1D: lifted 2D geometry (strip_m=1, zero vertical halo, read amp 1;
+        never column-tiled);
       * 2D: exactly ``resolve_strip_blocks`` (z fields stay inert);
       * 3D: joint ``choose_slab_blocks`` when unpinned; explicit ``tile_m``
         / ``z_slab`` are clamped to the grid and get ``choose_hblock``
         blocks unless those are pinned too.  ``h_block=0`` selects the
         whole-slab foil and forces ``z_block=0``; a lone ``z_block=0``
         under a sub-blocked h_block is rejected (no hybrid substrate).
+
+    Width (DESIGN.md §10): ``w_tile=None`` auto-resolves -- full width
+    whenever the full-width working set fits the VMEM budget, the
+    column-tiled substrate otherwise; ``w_tile=0`` (or >= W) pins full
+    width; a positive ``w_tile`` pins the column tile.  ``x_halo`` is the
+    CARRIED per-side x-halo of column-tiled fused execution (t*r; the
+    column-tiled kernels cannot re-wrap partial rows) and defaults to
+    ``halo`` -- exact for the square kernels this repo builds.
     """
     dim = len(grid_shape)
     if dim == 1:
         hb = 0 if h_block == 0 else 1
         return SubstrateGeom(dim=1, strip_m=1, h_block=hb)
+    xh = halo if x_halo is None else x_halo
     if dim == 2:
-        strip_m, hb = resolve_strip_blocks(grid_shape, halo, dtype_bytes,
-                                           tile_m, h_block)
-        return SubstrateGeom(dim=2, strip_m=strip_m, h_block=hb)
+        strip_m, hb, wt, wb = resolve_strip_blocks(
+            grid_shape, halo, dtype_bytes, tile_m, h_block,
+            w_tile, w_block, xh)
+        return SubstrateGeom(dim=2, strip_m=strip_m, h_block=hb,
+                             w_tile=wt, w_block=wb)
     if dim != 3:
         raise ValueError(f"substrate supports 1D/2D/3D grids, got rank {dim}")
-    z, h, _ = grid_shape
+    z, h, wid = grid_shape
+    w_tile, w_block = _normalize_w_pin(w_tile, w_block, wid)
+    if w_block and w_tile is None:
+        _resolve_w_block(0, w_block, h_block, xh)    # raises: lone w_block
+        # pins are rejected on every path (see resolve_strip_blocks)
+    if h_block == 0 and w_tile:
+        _resolve_w_block(w_tile, w_block, 0, halo)   # raises: foil is
+        # full-width by construction
     # One pin-aware joint search: a pinned axis is fixed (clamped to the
-    # grid) and only the free axis is sized -- conditioned on the pin, so
+    # grid) and only the free axes are sized -- conditioned on the pins, so
     # the VMEM fit and amp-minimization always describe the geometry that
-    # actually runs.
-    zs, auto_zb, sm, auto_hb = choose_slab_blocks(
-        z, h, grid_shape[-1], halo, dtype_bytes,
+    # actually runs.  The whole-slab foil (h_block=0) never column-tiles.
+    zs, auto_zb, sm, auto_hb, wt, auto_wb = choose_slab_blocks(
+        z, h, wid, halo, dtype_bytes,
         z_pin=min(z_slab, z) if z_slab is not None else None,
-        m_pin=min(tile_m, h) if tile_m is not None else None)
+        m_pin=min(tile_m, h) if tile_m is not None else None,
+        w_pin=0 if h_block == 0 else w_tile,
+        x_halo=xh)
     hb = h_block if h_block is not None else auto_hb
     zb = _resolve_z_block(hb, z_block, zs, halo)
-    return SubstrateGeom(dim=3, strip_m=sm, h_block=hb, z_slab=zs, z_block=zb)
+    wt, wb = _resolve_w_block(wt, w_block if w_block else auto_wb, hb, xh)
+    return SubstrateGeom(dim=3, strip_m=sm, h_block=hb, z_slab=zs,
+                         z_block=zb, w_tile=wt, w_block=wb)
+
+
+def _check_wrap_radius(w: int, r: int) -> None:
+    """THE wrap-radius guard, shared by every rank's validation branch
+    (historically copy-pasted across the 1D/2D/3D paths)."""
+    if w < r:
+        raise ValueError(
+            f"wrap radius {r} exceeds grid width {w}; lower the radius")
 
 
 def validate_tiling(shape, strip_m: int, tile_n: int, halo: int,
                     radius: int = None, h_block: int = None,
-                    z_slab: int = None, z_block: int = None) -> None:
+                    z_slab: int = None, z_block: int = None,
+                    w_tile: int = None, w_block: int = None,
+                    x_halo: int = None) -> None:
     """Halo-plane substrate tiling constraints (1D, 2D and 3D grids).
 
     ``strip_m`` is the strip height (rows per output block); ``tile_n`` is
-    the column-tile width of the banded MXU contraction (pass the full width
-    for the VPU path, which never column-tiles).  ``radius`` is the per-step
-    wrap radius -- the only width constraint, since the horizontal halo is
-    re-wrapped at radius r each step regardless of fusion depth (defaults
-    to ``halo`` for callers that run a single step at the full radius).
-    ``h_block`` (sub-blocked substrate) must divide ``strip_m`` and cover
-    the vertical halo; pass ``None``/0 for the whole-strip substrate.
+    the column-chunk width of the banded MXU contraction (pass the full
+    width for the VPU path) -- any width in [1, W] is legal, the kernels
+    handle a narrower final chunk by slicing the banded operand.
+    ``radius`` is the per-step wrap radius (defaults to ``halo`` for
+    callers that run a single step at the full radius).  ``h_block``
+    (sub-blocked substrate) must divide ``strip_m`` and cover the
+    vertical halo; pass ``None``/0 for the whole-strip substrate.
     3D grids additionally constrain ``z_slab`` (divides Z, >= halo) and
     ``z_block`` (divides ``z_slab``, >= halo when sub-blocked).
+    Column-tiled launches (``w_tile`` > 0, DESIGN.md §10) require the
+    sub-blocked substrate and a ``w_block`` that divides ``w_tile`` and
+    covers the CARRIED x-halo ``x_halo`` (= t*r; defaults to ``halo``) --
+    ``w_tile`` need NOT divide W (edge tiles run the remainder path).
     """
+    r = halo if radius is None else radius
+    w = shape[-1]
     if len(shape) == 1:
         # Lifted-1D: no vertical support, so only the wrap radius binds.
-        w = shape[0]
-        r = halo if radius is None else radius
-        if w < r:
-            raise ValueError(
-                f"wrap radius {r} exceeds grid width {w}; lower the radius")
+        _check_wrap_radius(w, r)
         return
-    if len(shape) == 2:
-        h, w = shape
-    else:
+    if len(shape) == 3:
         z, h, w = shape
         zs = z if z_slab is None else z_slab
         if z % zs:
@@ -476,10 +762,14 @@ def validate_tiling(shape, strip_m: int, tile_n: int, halo: int,
                 raise ValueError(
                     f"halo {halo} exceeds z_block {z_block}; "
                     "enlarge z_block or lower fusion depth")
-    if h % strip_m or w % tile_n:
+    else:
+        h, w = shape
+    if h % strip_m:
         raise ValueError(
-            f"grid {shape} not divisible by tiles ({strip_m},{tile_n})"
-        )
+            f"grid {shape} rows not divisible by strip height {strip_m}")
+    if not 1 <= tile_n <= w:
+        raise ValueError(
+            f"column tile {tile_n} outside [1, {w}] for grid {shape}")
     if strip_m < halo:
         raise ValueError(
             f"halo {halo} exceeds strip height {strip_m}; "
@@ -495,28 +785,58 @@ def validate_tiling(shape, strip_m: int, tile_n: int, halo: int,
                 f"halo {halo} exceeds h_block {h_block}; "
                 "enlarge h_block or lower fusion depth"
             )
-    r = halo if radius is None else radius
-    if w < r:
-        raise ValueError(
-            f"wrap radius {r} exceeds grid width {w}; lower the radius"
-        )
+    if w_tile:
+        if not h_block:
+            raise ValueError(
+                "column tiling (w_tile > 0) requires the sub-blocked "
+                "substrate; the whole-strip/whole-slab foil (h_block=0) "
+                "spans the full width")
+        if w_tile > w:
+            raise ValueError(
+                f"w_tile {w_tile} exceeds grid width {w}")
+        xh = halo if x_halo is None else x_halo
+        if not w_block:
+            raise ValueError(
+                f"column tiling needs w_block >= the carried x-halo {xh}")
+        if w_tile % w_block:
+            raise ValueError(
+                f"w_block {w_block} does not divide w_tile {w_tile}")
+        if w_block < xh:
+            raise ValueError(
+                f"carried x-halo {xh} exceeds w_block {w_block}; "
+                "enlarge w_block or lower fusion depth")
+    _check_wrap_radius(w, r)
 
 
 def strip_substrate_call(compute, x: jax.Array, strip_m: int, h_block: int,
-                         halo: int, interpret: bool, consts=()) -> jax.Array:
-    """Launch ``compute`` over every output strip, on either halo substrate.
+                         halo: int, interpret: bool, consts=(),
+                         w_tile: int = 0, w_block: int = 0,
+                         x_halo: int = 0) -> jax.Array:
+    """Launch ``compute`` over every output strip, on any halo substrate.
 
     The ONE place both strip kernels lower through -- substrate changes
     (semantics, buffering, a third scheme) happen here, never per kernel.
-    ``compute(cur, *const_refs)`` receives the (strip_m + 2*halo, n) f32
-    halo-extended strip plus one VMEM ref per ``consts`` operand (operands
-    constant across the grid, e.g. banded weights) and returns the
-    (strip_m, n) f32 output strip; the launcher casts back to ``x.dtype``.
-    ``h_block=0`` runs the whole-strip 3-load pipeline; otherwise the
-    sub-blocked (strip, h-block) grid with VMEM scratch assembly (module
-    docstring).  ``halo=0`` (the lifted-1D case: no vertical support at
-    all) drops the neighbor loads entirely on either substrate -- each
-    strip streams only its own rows, read amplification exactly 1.
+    ``compute(cur, *const_refs)`` receives the f32 halo-extended region
+    plus one VMEM ref per ``consts`` operand (operands constant across
+    the grid, e.g. banded weights) and returns the output region; the
+    launcher casts back to ``x.dtype``.  ``h_block=0`` runs the
+    whole-strip 3-load pipeline; otherwise the sub-blocked
+    (strip, h-block) grid with VMEM scratch assembly (module docstring).
+    ``halo=0`` (the lifted-1D case: no vertical support at all) drops
+    the neighbor loads entirely on either substrate -- each strip
+    streams only its own rows, read amplification exactly 1.
+
+    Full width (``w_tile=0``): ``compute`` maps (strip_m + 2*halo, n) ->
+    (strip_m, n) and re-wraps the x-halo in-VMEM itself (every row is a
+    complete global row).  Column-tiled (``w_tile`` > 0, DESIGN.md §10):
+    the grid gains a w-tile dimension and the walk covers the full
+    (h_block, w_block) block ring; ``compute`` maps
+    (strip_m + 2*halo, w_tile + 2*x_halo) -> (strip_m, w_tile) and must
+    CARRY the ``x_halo``-deep x support (scratch rows are partial, so no
+    re-wrap is possible).  Widths not divisible by ``w_tile`` run the
+    edge-tile remainder path: the input is periodically extended by one
+    w_block per side on the host, the column walk drops its modulo wrap,
+    and the padded output columns are sliced off.
     """
     h, n = x.shape
     gm = h // strip_m
@@ -526,7 +846,14 @@ def strip_substrate_call(compute, x: jax.Array, strip_m: int, h_block: int,
         zeros = (0,) * c.ndim
         if n_grid_dims == 1:
             return pl.BlockSpec(c.shape, lambda i, z=zeros: z)
-        return pl.BlockSpec(c.shape, lambda i, j, z=zeros: z)
+        if n_grid_dims == 2:
+            return pl.BlockSpec(c.shape, lambda i, j, z=zeros: z)
+        return pl.BlockSpec(c.shape, lambda i, iw, j, z=zeros: z)
+
+    if w_tile:
+        return _strip_coltiled_call(compute, x, strip_m, h_block, halo,
+                                    w_tile, w_block, x_halo, interpret,
+                                    consts, const_spec)
 
     if halo == 0:
         # No vertical halo => no neighbor strips to fetch; one load per
@@ -587,8 +914,94 @@ def strip_substrate_call(compute, x: jax.Array, strip_m: int, h_block: int,
     )(x, *consts)
 
 
+def _extend_columns_for_tiling(x: jax.Array, w_block: int, gw: int,
+                               w_tile: int) -> jax.Array:
+    """Edge-tile remainder path's host-side input: periodically extend the
+    last axis by one w_block per side (so the non-wrapping column walk
+    still finds true periodic halo columns at both grid edges), then
+    zero-pad on the right up to ``gw * w_tile + 2 * w_block`` columns so
+    every fetched block is in bounds.  The pad region is only ever read
+    by output columns beyond W, which the launcher slices off.
+    """
+    n = x.shape[-1]
+    ext = jnp.concatenate([x[..., -w_block:], x, x[..., :w_block]], axis=-1)
+    pad_cols = gw * w_tile - n
+    if pad_cols:
+        pad = [(0, 0)] * x.ndim
+        pad[-1] = (0, pad_cols)
+        ext = jnp.pad(ext, pad)
+    return ext
+
+
+def _strip_coltiled_call(compute, x, strip_m, h_block, halo, w_tile,
+                         w_block, x_halo, interpret, consts, const_spec):
+    """The column-tiled 2D launch (DESIGN.md §10): grid
+    (strip, w-tile, ring) where the ring walks the full
+    (strip_m/h_block + 2) x (w_tile/w_block + 2) block neighborhood of
+    each (strip_m, w_tile) output tile into a VMEM scratch of
+    (strip_m + 2*h_block, w_tile + 2*w_block).  Aligned widths
+    (w_tile | W) wrap the column walk modulo W/w_block (periodic x for
+    free, like the vertical axes); other widths run the host-extended
+    remainder path (``_extend_columns_for_tiling``).
+    """
+    h, n = x.shape
+    gm = h // strip_m
+    out_dtype = x.dtype
+    nb = strip_m // h_block
+    nbw = w_tile // w_block
+    ring_w = nbw + 2
+    nj = (nb + 2) * ring_w
+    gw = -(-n // w_tile)
+    aligned = n % w_tile == 0
+    total_h = h // h_block
+
+    if aligned:
+        src, out_w = x, n
+        total_w = n // w_block
+
+        def col_index(iw, jw):
+            return (iw * nbw + jw - 1) % total_w
+    else:
+        src = _extend_columns_for_tiling(x, w_block, gw, w_tile)
+        out_w = gw * w_tile
+
+        def col_index(iw, jw):
+            return iw * nbw + jw        # the extension carries the wrap
+
+    def kern_col(blk_ref, *rest):
+        *const_refs, out_ref, scratch_ref = rest
+        j = pl.program_id(2)
+        jy, jw = j // ring_w, j % ring_w
+        scratch_ref[pl.ds(jy * h_block, h_block),
+                    pl.ds(jw * w_block, w_block)] = blk_ref[...]
+
+        @pl.when(j == nj - 1)
+        def _compute():
+            cur = scratch_ref[h_block - halo: h_block + strip_m + halo,
+                              w_block - x_halo: w_block + w_tile + x_halo
+                              ].astype(jnp.float32)
+            out_ref[...] = compute(cur, *const_refs).astype(out_dtype)
+
+    y = pl.pallas_call(
+        kern_col,
+        grid=(gm, gw, nj),
+        in_specs=[pl.BlockSpec(
+            (h_block, w_block),
+            lambda i, iw, j: ((i * nb + j // ring_w - 1) % total_h,
+                              col_index(iw, j % ring_w)))]
+        + [const_spec(c, 3) for c in consts],
+        out_specs=pl.BlockSpec((strip_m, w_tile), lambda i, iw, j: (i, iw)),
+        out_shape=jax.ShapeDtypeStruct((h, out_w), x.dtype),
+        scratch_shapes=[pltpu.VMEM((strip_m + 2 * h_block,
+                                    w_tile + 2 * w_block), x.dtype)],
+        interpret=interpret,
+    )(src, *consts)
+    return y if aligned else y[:, :n]
+
+
 def slab_substrate_call(compute, x: jax.Array, geom: SubstrateGeom,
-                        halo: int, interpret: bool, consts=()) -> jax.Array:
+                        halo: int, interpret: bool, consts=(),
+                        x_halo: int = 0) -> jax.Array:
     """Launch ``compute`` over every (z-slab, strip) output cell of a 3D
     grid, on either halo-plane substrate (module docstring, DESIGN.md §9).
 
@@ -608,6 +1021,14 @@ def slab_substrate_call(compute, x: jax.Array, geom: SubstrateGeom,
     assemble byte-identical extended slabs, so (with the kernels'
     optimization_barrier between assembly and compute) their outputs are
     bit-for-bit equal.
+
+    ``geom.w_tile`` > 0 selects the column-tiled scheme (DESIGN.md §10):
+    the grid gains a w-tile dimension, the input reference shrinks to
+    (z_block, h_block, w_block) walking the full 3-axis block ring, and
+    ``compute`` maps (z_slab + 2*halo, strip_m + 2*halo,
+    w_tile + 2*x_halo) -> (z_slab, strip_m, w_tile), CARRYING the x-halo
+    instead of re-wrapping (scratch rows are partial).  Widths not
+    divisible by w_tile run the host-extended edge-tile remainder path.
     """
     z, h, n = x.shape
     zs, sm = geom.z_slab, geom.strip_m
@@ -618,7 +1039,13 @@ def slab_substrate_call(compute, x: jax.Array, geom: SubstrateGeom,
         zeros = (0,) * c.ndim
         if n_grid_dims == 2:
             return pl.BlockSpec(c.shape, lambda i, j, zz=zeros: zz)
-        return pl.BlockSpec(c.shape, lambda i, j, k, zz=zeros: zz)
+        if n_grid_dims == 3:
+            return pl.BlockSpec(c.shape, lambda i, j, k, zz=zeros: zz)
+        return pl.BlockSpec(c.shape, lambda i, j, k, l, zz=zeros: zz)
+
+    if geom.w_tile:
+        return _slab_coltiled_call(compute, x, geom, halo, x_halo,
+                                   interpret, consts, const_spec)
 
     if not geom.h_block:
         def slab_spec(dz, dy):
@@ -691,6 +1118,81 @@ def slab_substrate_call(compute, x: jax.Array, geom: SubstrateGeom,
     )(x, *consts)
 
 
+def _slab_coltiled_call(compute, x, geom, halo, x_halo, interpret, consts,
+                        const_spec):
+    """The column-tiled 3D launch (DESIGN.md §10): grid
+    (z-slab, strip, w-tile, ring) where the ring walks the full
+    (z_slab/z_block + 2) x (strip_m/h_block + 2) x (w_tile/w_block + 2)
+    block neighborhood of each (z_slab, strip_m, w_tile) output cell into
+    a VMEM scratch of (z_slab + 2*z_block, strip_m + 2*h_block,
+    w_tile + 2*w_block).  Aligned widths wrap the column walk modulo
+    W/w_block; other widths run the host-extended remainder path.
+    """
+    z, h, n = x.shape
+    zs, sm, wt = geom.z_slab, geom.strip_m, geom.w_tile
+    zb, hb, wb = geom.z_block, geom.h_block, geom.w_block
+    gz, gm = z // zs, h // sm
+    out_dtype = x.dtype
+    nbz, nby, nbw = zs // zb, sm // hb, wt // wb
+    ring_y, ring_w = nby + 2, nbw + 2
+    nj = (nbz + 2) * ring_y * ring_w
+    gw = -(-n // wt)
+    aligned = n % wt == 0
+    total_z, total_y = z // zb, h // hb
+
+    if aligned:
+        src, out_w = x, n
+        total_w = n // wb
+
+        def col_index(iw, jw):
+            return (iw * nbw + jw - 1) % total_w
+    else:
+        src = _extend_columns_for_tiling(x, wb, gw, wt)
+        out_w = gw * wt
+
+        def col_index(iw, jw):
+            return iw * nbw + jw        # the extension carries the wrap
+
+    def block_index(iz, iy, iw, j):
+        jz = j // (ring_y * ring_w)
+        jy = (j // ring_w) % ring_y
+        jw = j % ring_w
+        return ((iz * nbz + jz - 1) % total_z,
+                (iy * nby + jy - 1) % total_y,
+                col_index(iw, jw))
+
+    def kern_col(blk_ref, *rest):
+        *const_refs, out_ref, scratch_ref = rest
+        j = pl.program_id(3)
+        jz = j // (ring_y * ring_w)
+        jy = (j // ring_w) % ring_y
+        jw = j % ring_w
+        scratch_ref[pl.ds(jz * zb, zb), pl.ds(jy * hb, hb),
+                    pl.ds(jw * wb, wb)] = blk_ref[...]
+
+        @pl.when(j == nj - 1)
+        def _compute():
+            cur = scratch_ref[zb - halo: zb + zs + halo,
+                              hb - halo: hb + sm + halo,
+                              wb - x_halo: wb + wt + x_halo
+                              ].astype(jnp.float32)
+            out_ref[...] = compute(cur, *const_refs).astype(out_dtype)
+
+    y = pl.pallas_call(
+        kern_col,
+        grid=(gz, gm, gw, nj),
+        in_specs=[pl.BlockSpec((zb, hb, wb), block_index)]
+        + [const_spec(c, 4) for c in consts],
+        out_specs=pl.BlockSpec((zs, sm, wt),
+                               lambda iz, iy, iw, j: (iz, iy, iw)),
+        out_shape=jax.ShapeDtypeStruct((z, h, out_w), x.dtype),
+        scratch_shapes=[pltpu.VMEM((zs + 2 * zb, sm + 2 * hb, wt + 2 * wb),
+                                   x.dtype)],
+        interpret=interpret,
+    )(src, *consts)
+    return y if aligned else y[..., :n]
+
+
 def substrate_read_amp(strip_m: int, h_block: int) -> float:
     """Analytic grid-read amplification of one kernel launch.
 
@@ -711,8 +1213,11 @@ def substrate_read_amp(strip_m: int, h_block: int) -> float:
 
 
 def resolve_strip_blocks(grid_shape, halo: int, dtype_bytes: int,
-                         tile_m: int = None, h_block: int = None) -> tuple:
-    """Resolve (strip_m, h_block) from possibly-``None`` user requests.
+                         tile_m: int = None, h_block: int = None,
+                         w_tile: int = None, w_block: int = None,
+                         x_halo: int = None) -> tuple:
+    """Resolve (strip_m, h_block, w_tile, w_block) from possibly-``None``
+    user requests.
 
     The 2D slice of the shared sizing rule -- ``resolve_substrate_geom``
     delegates its dim-2 branch here, so plan-level and kernel-level sizing
@@ -720,19 +1225,58 @@ def resolve_strip_blocks(grid_shape, halo: int, dtype_bytes: int,
     (``choose_strip_blocks``); an explicit ``tile_m`` is clamped to the
     grid and, when ``h_block`` is also ``None``, gets ``choose_hblock``
     of the clamped strip.  ``h_block=0`` passes through (whole-strip).
+
+    Width (DESIGN.md §10): full width (w_tile=0) whenever pinned so, the
+    foil substrate is requested (h_block=0, full-width by construction),
+    or the full-width working set fits the VMEM budget; otherwise the
+    column-tiled joint sizing ``choose_col_blocks`` runs, conditioned on
+    any strip/width pins.
     """
     h, wid = grid_shape
-    if tile_m is None:
-        strip_m, auto_hb = choose_strip_blocks(h, wid, halo, dtype_bytes)
-    else:
-        strip_m, auto_hb = min(tile_m, h), None
-    if h_block is None:
-        h_block = choose_hblock(strip_m, halo) if auto_hb is None else auto_hb
-    return strip_m, h_block
+    xh = halo if x_halo is None else x_halo
+    w_tile, w_block = _normalize_w_pin(w_tile, w_block, wid)
+    if w_block and w_tile is None:
+        # Uniform lone-pin rejection: a w_block without a w_tile names no
+        # substrate on EITHER resolution path -- acceptance must not flip
+        # with the VMEM budget (the auto w_tile need not be divisible).
+        _resolve_w_block(0, w_block, h_block, xh)
+    budget = vmem_budget_bytes()
+
+    def fullwidth() -> tuple:
+        if tile_m is None:
+            strip_m, auto_hb = choose_strip_blocks(h, wid, halo, dtype_bytes,
+                                                   budget)
+        else:
+            strip_m, auto_hb = min(tile_m, h), None
+        hb = h_block
+        if hb is None:
+            hb = choose_hblock(strip_m, halo) if auto_hb is None else auto_hb
+        return strip_m, hb
+
+    if w_tile == 0 or h_block == 0:
+        sm, hb = fullwidth()
+        # Reject lone w_block pins, and column tiling pinned onto the
+        # full-width-by-construction foil substrate.
+        _resolve_w_block(w_tile if h_block == 0 else 0, w_block, hb, xh)
+        return sm, hb, 0, 0
+    if w_tile is None:
+        sm, hb = fullwidth()
+        ws_hb = hb if hb else choose_hblock(sm, halo)
+        if _strip_working_set(sm, ws_hb, wid, halo, dtype_bytes) <= budget:
+            _resolve_w_block(0, w_block, hb, xh)
+            return sm, hb, 0, 0
+    sm, auto_hb, wt, auto_wb = choose_col_blocks(
+        h, wid, halo, xh, dtype_bytes, budget,
+        m_pin=min(tile_m, h) if tile_m is not None else None,
+        w_pin=w_tile)
+    hb = h_block if h_block is not None else auto_hb
+    wt, wb = _resolve_w_block(wt, w_block if w_block else auto_wb, hb, xh)
+    return sm, hb, wt, wb
 
 
 def hbm_read_bytes_per_step(shape, strip_m: int, dtype_bytes: int,
-                            bands_shape=None, h_block: int = 0) -> int:
+                            bands_shape=None, h_block: int = 0,
+                            w_tile: int = 0, w_block: int = 0) -> int:
     """Analytic HBM read traffic of one strip-substrate kernel launch.
 
     Whole-strip (``h_block=0``, the default -- this is an analytic model
@@ -741,21 +1285,34 @@ def hbm_read_bytes_per_step(shape, strip_m: int, dtype_bytes: int,
     three (strip_m, n) blocks -> the grid is read 3x per step (vs 9x for
     kernels.legacy).  Sub-blocked (``h_block > 0``): each output strip
     streams ``strip_m/h_block + 2`` (h_block, n) blocks -> the grid is
-    read ``1 + 2*h_block/strip_m`` times.  The banded operand (if any) is
-    charged once per output strip (its block index is constant within a
-    strip's revisit chain).
+    read ``1 + 2*h_block/strip_m`` times.  Column-tiled (``w_tile`` > 0,
+    DESIGN.md §10): each of the ``(h/strip_m)(ceil(w/w_tile))`` output
+    tiles streams its (strip_m + 2*h_block, w_tile + 2*w_block) block
+    neighborhood -> the product amplification
+    (1 + 2*h_block/strip_m)(1 + 2*w_block/w_tile) on aligned widths
+    (the remainder path adds one partial tile column plus the one-off
+    host extension, which is not per-step traffic).  The banded operand
+    (if any) is charged once per output cell (its block index is
+    constant within a cell's revisit chain).
     """
     import numpy as np
 
     h, w = shape
     gm = h // strip_m
-    # One formula for both substrates: substrate_read_amp is the model (and
-    # rejects the h_block=None 'auto' sentinel); rows = strip_m * amp is
-    # exact (3*strip_m whole-strip, strip_m + 2*h_block sub-blocked).
+    # One formula per axis: substrate_read_amp is the model (and rejects
+    # the h_block=None 'auto' sentinel); rows = strip_m * amp is exact
+    # (3*strip_m whole-strip, strip_m + 2*h_block sub-blocked).
     rows_per_strip = round(strip_m * substrate_read_amp(strip_m, h_block))
-    total = gm * rows_per_strip * w * dtype_bytes
+    if w_tile:
+        gw = -(-w // w_tile)
+        cols_per_tile = round(w_tile * substrate_read_amp(w_tile, w_block))
+        cells = gm * gw
+        total = cells * rows_per_strip * cols_per_tile * dtype_bytes
+    else:
+        cells = gm
+        total = gm * rows_per_strip * w * dtype_bytes
     if bands_shape is not None:
-        total += gm * int(np.prod(bands_shape)) * dtype_bytes
+        total += cells * int(np.prod(bands_shape)) * dtype_bytes
     return total
 
 
@@ -767,8 +1324,11 @@ def hbm_read_bytes_per_step_3d(shape, geom: SubstrateGeom, dtype_bytes: int,
     cells streams 9 full (z_slab, strip_m, W) slabs -> the grid is read 9x
     per step.  Sub-blocked: each cell streams the
     (z_slab + 2*z_block)(strip_m + 2*h_block) block ring -> the grid is
-    read (1 + 2*h_block/strip_m)(1 + 2*z_block/z_slab) times.  The banded
-    operand (if any) is charged once per output cell, as in 2D.
+    read (1 + 2*h_block/strip_m)(1 + 2*z_block/z_slab) times.
+    Column-tiled (``geom.w_tile`` > 0): the x axis joins the ring and
+    the amplification gains the (1 + 2*w_block/w_tile) factor
+    (DESIGN.md §10).  The banded operand (if any) is charged once per
+    output cell, as in 2D.
     """
     import numpy as np
 
@@ -780,7 +1340,14 @@ def hbm_read_bytes_per_step_3d(shape, geom: SubstrateGeom, dtype_bytes: int,
                    * substrate_read_amp(geom.z_slab, geom.z_block))
     rows = round(geom.strip_m
                  * substrate_read_amp(geom.strip_m, geom.h_block))
-    total = cells * planes * rows * w * dtype_bytes
+    if geom.w_tile:
+        gw = -(-w // geom.w_tile)
+        cols = round(geom.w_tile
+                     * substrate_read_amp(geom.w_tile, geom.w_block))
+        cells *= gw
+        total = cells * planes * rows * cols * dtype_bytes
+    else:
+        total = cells * planes * rows * w * dtype_bytes
     if bands_shape is not None:
         total += cells * int(np.prod(bands_shape)) * dtype_bytes
     return total

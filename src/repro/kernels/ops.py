@@ -56,6 +56,8 @@ def stencil_apply(
     h_block: Optional[int] = None,
     z_slab: Optional[int] = None,
     z_block: Optional[int] = None,
+    w_tile: Optional[int] = None,
+    w_block: Optional[int] = None,
     interpret: Optional[bool] = None,
     compute_dtype=None,
 ) -> jax.Array:
@@ -64,15 +66,17 @@ def stencil_apply(
     Thin wrapper: equivalent to building ``stencil_plan(weights, x.shape,
     x.dtype, t, ...)`` and calling it -- identical signatures share one
     cached plan.  1D, 2D and 3D grids are supported (the grid rank must
-    match ``weights.ndim``).  ``tile_m``/``tile_n``/``z_slab`` default to
-    ``None`` = auto-sized by the kernels (``resolve_substrate_geom`` /
-    ``choose_tile``); explicit values are validated strictly."""
+    match ``weights.ndim``).  ``tile_m``/``tile_n``/``z_slab``/``w_tile``
+    default to ``None`` = auto-sized by the kernels
+    (``resolve_substrate_geom`` / ``choose_tile``; ``w_tile`` stays full
+    width unless the full-width working set exceeds the VMEM budget --
+    DESIGN.md §10); explicit values are validated strictly."""
     plan = stencil_plan(
         weights, x.shape, x.dtype, t, hw=hw,
         backend=None if backend == "auto" else backend,
         tile_m=tile_m, tile_n=tile_n, h_block=h_block,
-        z_slab=z_slab, z_block=z_block, interpret=interpret,
-        compute_dtype=compute_dtype,
+        z_slab=z_slab, z_block=z_block, w_tile=w_tile, w_block=w_block,
+        interpret=interpret, compute_dtype=compute_dtype,
     )
     return plan(x)
 
@@ -82,6 +86,7 @@ def explain(
     hw: pm.HardwareSpec = pm.TPU_V5E_BF16, tile_n: int = 128,
     strip_m: int = 128, h_block: Optional[int] = None,
     z_slab: Optional[int] = None, z_block: Optional[int] = None,
+    w_tile: Optional[int] = None, w_block: Optional[int] = None,
     grid_shape=None, tile_m: Optional[int] = None,
 ) -> Decision:
     """Expose the dispatch decision (scenario, predicted speedup, reason).
@@ -89,24 +94,28 @@ def explain(
     Delegates to ``repro.kernels.plan.decide`` -- the same single decision
     path plan building and the ``auto`` backend consult.  The reason
     string includes the substrate's read-amplification factor and the
-    resolved (z_slab, strip_m, h_block) geometry for every rank.  Plans
-    price the geometry they resolve FOR THEIR GRID, so pass ``grid_shape``
-    -- plus the same ``tile_m``/``h_block``/``z_slab``/``z_block`` pins
-    you would hand ``stencil_plan`` -- and the identical resolution runs
-    here, guaranteeing ``explain`` agrees with what such a plan actually
+    resolved (z_slab, strip_m, h_block, w_tile) geometry for every rank.
+    Plans price the geometry they resolve FOR THEIR GRID, so pass
+    ``grid_shape`` -- plus the same ``tile_m``/``h_block``/``z_slab``/
+    ``z_block``/``w_tile``/``w_block`` pins you would hand
+    ``stencil_plan`` -- and the identical resolution runs here,
+    guaranteeing ``explain`` agrees with what such a plan actually
     executes (``strip_m`` is then superseded by the resolution).  Without
     ``grid_shape`` the decision is priced at the documented defaults
-    (strip_m=128, z_slab=strip_m for 3D, auto blocks), which only coincide
-    with plans whose grids resolve to them."""
+    (strip_m=128, z_slab=strip_m for 3D, auto blocks, full width), which
+    only coincide with plans whose grids resolve to them."""
     spec = spec_from_weights(weights)
     if grid_shape is not None:
         from .common import resolve_substrate_geom
         geom = resolve_substrate_geom(
             tuple(int(n) for n in grid_shape), t * spec.radius, dtype_bytes,
-            tile_m, h_block, z_slab, z_block)
+            tile_m, h_block, z_slab, z_block, w_tile, w_block)
         strip_m, h_block = geom.strip_m, geom.h_block
         z_slab = geom.z_slab if geom.dim == 3 else None
         z_block = geom.z_block if geom.dim == 3 else None
+        w_tile = geom.w_tile if geom.dim >= 2 else None
+        w_block = geom.w_block if geom.dim >= 2 else None
     return decide(spec, t, dtype_bytes, hw,
                   tile_n=tile_n, strip_m=strip_m, h_block=h_block,
-                  z_slab=z_slab, z_block=z_block)
+                  z_slab=z_slab, z_block=z_block,
+                  w_tile=w_tile, w_block=w_block)

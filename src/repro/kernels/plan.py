@@ -61,14 +61,19 @@ def decide(
     h_block: Optional[int] = None,
     z_slab: Optional[int] = None,
     z_block: Optional[int] = None,
+    w_tile: Optional[int] = None,
+    w_block: Optional[int] = None,
 ) -> Decision:
     """THE decision path: plan building, ``stencil_apply(backend="auto")``
     and ``ops.explain`` all consult this one function, so they can never
     disagree about the priced ``Decision``.  ``z_slab``/``z_block`` matter
-    only for 3D specs (the halo-plane substrate's depth geometry)."""
+    only for 3D specs (the halo-plane substrate's depth geometry);
+    ``w_tile``/``w_block`` price the column-tiled W substrate
+    (DESIGN.md §10; ``None``/0 = full width)."""
     return select_backend(spec, t, dtype_bytes=dtype_bytes, hw=hw,
                           tile_n=tile_n, strip_m=strip_m, h_block=h_block,
-                          z_slab=z_slab, z_block=z_block)
+                          z_slab=z_slab, z_block=z_block,
+                          w_tile=w_tile, w_block=w_block)
 
 
 class StencilPlan:
@@ -236,6 +241,8 @@ def stencil_plan(
     h_block: Optional[int] = None,
     z_slab: Optional[int] = None,
     z_block: Optional[int] = None,
+    w_tile: Optional[int] = None,
+    w_block: Optional[int] = None,
     interpret: Optional[bool] = None,
     compute_dtype=None,
     use_cache: bool = True,
@@ -264,6 +271,10 @@ def stencil_plan(
         auto, ``0`` = whole-strip/whole-slab foil); part of the cache key.
       z_slab/z_block: 3D grids only -- slab depth and halo-plane block of
         the halo-plane substrate (``None`` = auto); part of the cache key.
+      w_tile/w_block: column-tiled W substrate (DESIGN.md §10; ``None`` =
+        auto -- full width whenever it fits the VMEM budget, ``0`` pins
+        full width); part of the cache key, as is the effective VMEM
+        budget (``REPRO_VMEM_BUDGET``) the auto sizing consulted.
       interpret: Pallas interpret mode; ``None`` = off-TPU default.
       use_cache: bypass the process-wide plan cache when ``False``.
     """
@@ -292,10 +303,13 @@ def stencil_plan(
         shard_key = (id(mesh), tuple(shard_spec), dist_mode)
     # registry.generation() invalidates plans whose selection (or builder,
     # under overwrite=True) predates a registry change -- a newly priced
-    # backend must win future auto plans, not be masked by the cache
+    # backend must win future auto plans, not be masked by the cache.
+    # The effective VMEM budget is part of the key: auto geometry depends
+    # on it, so retuning REPRO_VMEM_BUDGET must never serve stale plans.
+    from .common import vmem_budget_bytes
     key = (_weights_key(weights), grid_shape, _dtype_key(dtype), t, hw,
            shard_key, backend, tile_m, tile_n, h_block, z_slab, z_block,
-           interpret,
+           w_tile, w_block, vmem_budget_bytes(), interpret,
            None if compute_dtype is None else _dtype_key(compute_dtype),
            registry.generation())
     if use_cache and key in _CACHE:
@@ -313,13 +327,15 @@ def stencil_plan(
     from .common import resolve_substrate_geom
     geom_px = resolve_substrate_geom(
         grid_shape, t * spec.radius, np.dtype(dtype).itemsize,
-        tile_m, h_block, z_slab, z_block)
+        tile_m, h_block, z_slab, z_block, w_tile, w_block)
     decision = decide(
         spec, t, dtype_bytes=np.dtype(dtype).itemsize, hw=hw,
         tile_n=tile_n if tile_n is not None else 128,
         strip_m=geom_px.strip_m, h_block=geom_px.h_block,
         z_slab=geom_px.z_slab if geom_px.dim == 3 else None,
         z_block=geom_px.z_block if geom_px.dim == 3 else None,
+        w_tile=geom_px.w_tile if geom_px.dim >= 2 else None,
+        w_block=geom_px.w_block if geom_px.dim >= 2 else None,
     )
     exec_backend = backend if backend is not None else decision.backend
 
@@ -327,7 +343,7 @@ def stencil_plan(
         spec=spec, weights=weights, grid_shape=grid_shape,
         dtype=np.dtype(dtype), t=t, tile_m=tile_m, tile_n=tile_n,
         interpret=interpret, compute_dtype=compute_dtype, h_block=h_block,
-        z_slab=z_slab, z_block=z_block,
+        z_slab=z_slab, z_block=z_block, w_tile=w_tile, w_block=w_block,
     )
 
     halo_plan = None
@@ -383,7 +399,8 @@ def _build_distributed(mesh, axis_names, dist_mode, ctx, exec_backend):
     local = None if exec_backend == "reference" else pallas_local_apply(
         exec_backend, interpret=ctx.interpret,
         tile_m=ctx.tile_m, tile_n=ctx.tile_n, h_block=ctx.h_block,
-        z_slab=ctx.z_slab, z_block=ctx.z_block)
+        z_slab=ctx.z_slab, z_block=ctx.z_block,
+        w_tile=ctx.w_tile, w_block=ctx.w_block)
     stepper = make_distributed_stepper(
         mesh, axis_names, ctx.weights, t=ctx.t, mode=dist_mode,
         local_apply=local)

@@ -62,6 +62,8 @@ class PlanContext:
     h_block: Optional[int] = None   # None = auto, 0 = whole-strip/slab foil
     z_slab: Optional[int] = None    # 3D grids: slab depth (None = auto)
     z_block: Optional[int] = None   # 3D grids: halo-plane block (None = auto)
+    w_tile: Optional[int] = None    # None = auto, 0 = full width (fast path)
+    w_block: Optional[int] = None   # column halo block (None = auto)
 
     @property
     def radius(self) -> int:
@@ -72,20 +74,28 @@ class PlanContext:
         return fuse_weights(self.weights, self.t)
 
     def resolve_geom(self, halo: int) -> SubstrateGeom:
-        """Full substrate geometry under the kernels' own N-D rule."""
+        """Full substrate geometry under the kernels' own N-D rule.
+
+        ``halo`` is the vertical/leading halo of the regime being built;
+        the carried x-halo of a column-tiled launch equals it for the
+        square kernels this repo builds, so it doubles as ``x_halo``.
+        """
         return resolve_substrate_geom(self.grid_shape, halo,
                                       np.dtype(self.dtype).itemsize,
                                       self.tile_m, self.h_block,
-                                      self.z_slab, self.z_block)
+                                      self.z_slab, self.z_block,
+                                      self.w_tile, self.w_block, halo)
 
     def resolve_tile_n(self) -> int:
-        """Column-tile width of the banded contraction (MXU paths)."""
+        """Column-chunk width of the banded contraction (MXU paths)."""
         wid = self.grid_shape[-1]
         return choose_tile(wid) if self.tile_n is None else min(self.tile_n, wid)
 
     def kernel_kwargs(self, geom: SubstrateGeom) -> dict:
         """The substrate-geometry kwargs both strip kernels accept."""
         kw = dict(tile_m=geom.strip_m, h_block=geom.h_block)
+        if geom.dim >= 2:
+            kw.update(w_tile=geom.w_tile, w_block=geom.w_block)
         if geom.dim == 3:
             kw.update(z_slab=geom.z_slab, z_block=geom.z_block)
         return kw
@@ -94,7 +104,8 @@ class PlanContext:
                  radius: int) -> None:
         validate_tiling(self.grid_shape, geom.strip_m, tile_n, halo, radius,
                         geom.h_block,
-                        geom.z_slab if geom.dim == 3 else None, geom.z_block)
+                        geom.z_slab if geom.dim == 3 else None, geom.z_block,
+                        geom.w_tile, geom.w_block, halo)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -333,12 +344,14 @@ def _price_fused_matmul(p):
 
 def _price_fused_matmul_reuse(p):
     # t=1 reuse degenerates to "matmul"; only offered at depth.  The sparse
-    # unit has no reuse analogue modeled (DESIGN.md §8).  z_slab (3D) feeds
-    # the dim-aware beta; it is None for 1D/2D workloads.
+    # unit has no reuse analogue modeled (DESIGN.md §8).  z_slab (3D) and
+    # w_tile (column-tiled substrate) feed the dim-aware beta; both are
+    # None/0 for full-width 1D/2D workloads.
     if p.workload.t == 1:
         return None
     return pm.perf_matrix_reuse(p.workload, p.hw, p.s_reuse,
-                                p.strip_m, p.z_slab).actual_flops
+                                p.strip_m, p.z_slab,
+                                p.w_tile or None).actual_flops
 
 
 register_backend("direct", _build_direct, _price_direct,

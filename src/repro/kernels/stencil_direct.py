@@ -27,6 +27,12 @@ This kernel IS `stencil_fused`'s engine; ``t=1`` is the plain baseline.
 ``h_block=0`` selects the whole-strip/whole-slab foil substrate (kept for
 the ``*_wholestrip`` benchmark foils); both substrates assemble
 byte-identical extended regions, so their outputs are bit-for-bit equal.
+
+Grids whose FULL-WIDTH working set exceeds the VMEM budget execute on
+the column-tiled substrate (DESIGN.md §10): the grid gains a
+(w_tile, w_block) dimension, the x-halo is assembled from neighbor
+column blocks instead of the in-VMEM wrap, and the tap-sum CARRIES a
+2*t*r-wide x support that shrinks per step (``wrap_x=False``).
 """
 from __future__ import annotations
 
@@ -38,12 +44,17 @@ from .common import (resolve_substrate_geom, slab_substrate_call,
                      strip_substrate_call, validate_tiling, wrap_columns)
 
 
-def _stencil_steps(cur: jax.Array, weights, t: int, radius: int) -> jax.Array:
+def _stencil_steps(cur: jax.Array, weights, t: int, radius: int,
+                   wrap_x: bool = True) -> jax.Array:
     """``t`` unrolled tap-sum updates on a halo-extended f32 region.
 
     N-D: ``weights`` has ``cur.ndim`` axes; each step consumes the
-    per-axis kernel extent on every leading axis and re-wraps the last
-    axis at ``radius`` (the per-step x support).  The barrier keeps XLA
+    per-axis kernel extent on every leading axis.  ``wrap_x`` (the
+    full-width substrates, where every row is a complete global row)
+    re-wraps the last axis at ``radius`` per step; ``wrap_x=False`` (the
+    column-tiled substrate, DESIGN.md §10 -- rows are partial, no wrap
+    exists) instead CONSUMES the carried x-halo like a leading axis,
+    shrinking the last dim by 2*radius per step.  The barrier keeps XLA
     from fusing the region assembly (refs concatenated by the whole
     substrates, a scratch slice for the sub-blocked ones) into the tap
     sum -- assembly-dependent FMA formation would otherwise perturb the
@@ -52,9 +63,13 @@ def _stencil_steps(cur: jax.Array, weights, t: int, radius: int) -> jax.Array:
     """
     cur = jax.lax.optimization_barrier(cur)
     wshape = weights.shape
-    n = cur.shape[-1]
     for _ in range(t):
-        z = wrap_columns(cur, radius)         # (..., n + 2r), periodic
+        if wrap_x:
+            z = wrap_columns(cur, radius)     # (..., n + 2r), periodic
+            n = cur.shape[-1]
+        else:
+            z = cur                           # halo carried in the region
+            n = cur.shape[-1] - 2 * radius
         lead = tuple(cur.shape[i] - (wshape[i] - 1)
                      for i in range(cur.ndim - 1))
         acc = jnp.zeros(lead + (n,), jnp.float32)
@@ -78,6 +93,8 @@ def stencil_direct(
     h_block: int = None,
     z_slab: int = None,
     z_block: int = None,
+    w_tile: int = None,
+    w_block: int = None,
     interpret: bool = False,
 ) -> jax.Array:
     """``t`` fused time steps of an N-D stencil, periodic boundary.
@@ -85,39 +102,49 @@ def stencil_direct(
     ``weights``: host-side (2r+1)^d ndarray (zeros outside support); the
     grid rank must match ``weights.ndim`` (1, 2 or 3).  ``tile_m`` is the
     strip height and ``h_block`` the halo sub-block height; 3D grids add
-    ``z_slab`` (slab depth) and ``z_block`` (halo-plane block depth) --
-    any left ``None`` (default) is auto-sized via
-    ``resolve_substrate_geom`` (divisors, halo-covering, VMEM-budgeted);
-    explicit values are validated strictly.  ``h_block=0`` disables
-    sub-blocking (whole-strip 3-load / whole-slab 9-load foil substrate).
-    ``tile_n`` is accepted for signature parity with the MXU kernel but
-    unused (the VPU path never column-tiles).
+    ``z_slab`` (slab depth) and ``z_block`` (halo-plane block depth);
+    2D/3D grids add ``w_tile``/``w_block`` (the column-tiled W substrate,
+    DESIGN.md §10: ``w_tile=0`` pins full width, ``None`` auto-tiles only
+    when full width exceeds the VMEM budget) -- any left ``None``
+    (default) is auto-sized via ``resolve_substrate_geom`` (divisors,
+    halo-covering, VMEM-budgeted); explicit values are validated
+    strictly.  ``h_block=0`` disables sub-blocking (whole-strip 3-load /
+    whole-slab 9-load foil substrate).  ``tile_n`` is accepted for
+    signature parity with the MXU kernel but unused (the VPU path's only
+    column tiling is the substrate's own).
     """
-    del tile_n  # strips always span the full width
+    del tile_n  # the VPU compute never chunks columns
     w = np.asarray(weights)
     if x.ndim != w.ndim:
         raise ValueError(f"grid rank {x.ndim} != kernel rank {w.ndim}")
     if x.ndim == 1:
         # The lifted (1, N) grid admits exactly two h_blocks (0 = foil,
-        # 1 = sub-blocked); coerce like resolve_substrate_geom's dim-1
-        # rule so kernel-level and plan-level pins can never disagree.
+        # 1 = sub-blocked) and never column-tiles; coerce like
+        # resolve_substrate_geom's dim-1 rule so kernel-level and
+        # plan-level pins can never disagree.
         hb = h_block if h_block in (None, 0) else 1
         y = stencil_direct(x[None, :], w[None, :], t=t, tile_m=1,
-                           h_block=hb, interpret=interpret)
+                           h_block=hb, w_tile=0, interpret=interpret)
         return y[0]
 
     radius = (w.shape[-1] - 1) // 2
     halo = t * ((w.shape[0] - 1) // 2)        # 0 for the lifted-1D kernel
     wid = x.shape[-1]
+    x_halo = t * radius                       # carried if column-tiled
     geom = resolve_substrate_geom(x.shape, halo, x.dtype.itemsize,
-                                  tile_m, h_block, z_slab, z_block)
+                                  tile_m, h_block, z_slab, z_block,
+                                  w_tile, w_block, x_halo)
     validate_tiling(x.shape, geom.strip_m, wid, halo, radius, geom.h_block,
-                    geom.z_slab if x.ndim == 3 else None, geom.z_block)
+                    geom.z_slab if x.ndim == 3 else None, geom.z_block,
+                    geom.w_tile, geom.w_block, x_halo)
 
     def compute(cur):
-        return _stencil_steps(cur, w, t, radius)
+        return _stencil_steps(cur, w, t, radius, wrap_x=not geom.w_tile)
 
     if x.ndim == 3:
-        return slab_substrate_call(compute, x, geom, halo, interpret)
+        return slab_substrate_call(compute, x, geom, halo, interpret,
+                                   x_halo=x_halo if geom.w_tile else 0)
     return strip_substrate_call(compute, x, geom.strip_m, geom.h_block,
-                                halo, interpret)
+                                halo, interpret, w_tile=geom.w_tile,
+                                w_block=geom.w_block,
+                                x_halo=x_halo if geom.w_tile else 0)

@@ -27,7 +27,12 @@ halo-extended rows from (h_block, N) blocks -- (1 + 2*h_block/strip_m)x
 HBM reads per step -- with the horizontal halo wrapped in-VMEM.
 ``h_block=0`` selects the whole-strip 3-load substrate (the
 ``*_wholestrip`` benchmark foils); both assemble byte-identical extended
-strips, so outputs are bit-for-bit equal.
+strips, so outputs are bit-for-bit equal.  Widths exceeding the VMEM
+budget column-tile the last axis too (DESIGN.md §10): the contraction
+then consumes a CARRIED 2*t*r x-halo instead of re-wrapping, and a
+final chunk narrower than ``tile_n`` (awkward/prime widths -- the
+choose_tile cap policy) contracts against the banded operand's leading
+submatrix, which IS the narrower band.
 
 Two fusion regimes share this kernel (paper §2.2.3 + DESIGN.md §4):
 
@@ -106,50 +111,70 @@ def band_sparsity(weights: np.ndarray, tile_n: int) -> float:
 
 
 def _banded_step(z: jax.Array, bands_ref, offsets, lead_extents,
-                 radius: int, tile_n: int, compute_dtype) -> jax.Array:
-    """One radius-r banded contraction on full-width rows, any rank.
+                 radius: int, tile_n: int, compute_dtype,
+                 wrap_x: bool = True) -> jax.Array:
+    """One radius-r banded contraction, any rank.
 
-    ``z``: (..., n) rows that are complete global rows; ``offsets`` the
-    host-side leading shift tuples matching ``bands_ref`` rows (the
-    flattened (z, y) shift pairs for 3D, (dy,) singletons for 2D);
-    ``lead_extents`` the kernel's leading-axis extents.  Returns the
-    update with every leading axis shrunk by its kernel extent - 1,
-    accumulated in f32 across column tiles: each (dz, dy) shifted slab is
-    flattened to rows and contracted against its banded operand.
+    ``z``: (..., n) rows; ``offsets`` the host-side leading shift tuples
+    matching ``bands_ref`` rows (the flattened (z, y) shift pairs for
+    3D, (dy,) singletons for 2D); ``lead_extents`` the kernel's
+    leading-axis extents.  Returns the update with every leading axis
+    shrunk by its kernel extent - 1, accumulated in f32 across column
+    chunks of width ``tile_n``: each (dz, dy) shifted slab is flattened
+    to rows and contracted against its banded operand.
+
+    ``wrap_x`` (full-width substrates: rows are complete global rows)
+    wraps the periodic x-halo in-VMEM; ``wrap_x=False`` (the
+    column-tiled substrate, DESIGN.md §10) consumes the CARRIED x-halo
+    instead, shrinking the last axis by 2*radius.  A final chunk
+    narrower than ``tile_n`` (widths not divisible by the tile -- the
+    choose_tile cap policy) contracts against the leading submatrix of
+    the banded operand, which is exactly the narrower band.
     """
-    n = z.shape[-1]
+    if wrap_x:
+        zw = wrap_columns(z, radius)                   # (..., n + 2r)
+        n_out = z.shape[-1]
+    else:
+        zw = z                                         # halo carried
+        n_out = z.shape[-1] - 2 * radius
     lead = tuple(z.shape[i] - (lead_extents[i] - 1)
                  for i in range(len(lead_extents)))
     m = 1
     for d in lead:
         m *= d
-    zw = wrap_columns(z, radius)                       # (..., n + 2r)
+    bands_w = bands_ref.shape[-1]
     cols = []
-    for j in range(n // tile_n):
-        acc = jnp.zeros((m, tile_n), jnp.float32)
+    start = 0
+    while start < n_out:
+        wcur = min(tile_n, n_out - start)
+        acc = jnp.zeros((m, wcur), jnp.float32)
         for p, off in enumerate(offsets):
             sl = tuple(slice(off[i], off[i] + lead[i])
                        for i in range(len(lead)))
-            a = zw[sl + (slice(j * tile_n,
-                               j * tile_n + tile_n + 2 * radius),)]
-            a = a.reshape(m, tile_n + 2 * radius)
-            b = bands_ref[p].astype(compute_dtype)     # (tile_n + 2r, tile_n)
-            acc = acc + jax.lax.dot(a.astype(compute_dtype), b,
+            a = zw[sl + (slice(start, start + wcur + 2 * radius),)]
+            a = a.reshape(m, wcur + 2 * radius)
+            b = bands_ref[p]                  # (bands_w + 2r, bands_w)
+            if wcur != bands_w:
+                b = b[:wcur + 2 * radius, :wcur]
+            acc = acc + jax.lax.dot(a.astype(compute_dtype),
+                                    b.astype(compute_dtype),
                                     preferred_element_type=jnp.float32)
         cols.append(acc)
+        start += wcur
     out = cols[0] if len(cols) == 1 else jnp.concatenate(cols, axis=1)
-    return out.reshape(lead + (n,))
+    return out.reshape(lead + (n_out,))
 
 
 def _banded_steps(cur: jax.Array, bands_ref, offsets, lead_extents, t: int,
-                  radius: int, tile_n: int, compute_dtype) -> jax.Array:
+                  radius: int, tile_n: int, compute_dtype,
+                  wrap_x: bool = True) -> jax.Array:
     # Barrier between region assembly and contraction: keeps the
     # substrates' compute graphs identical so their outputs stay bit-for-bit
     # equal (see stencil_direct._stencil_steps).
     cur = jax.lax.optimization_barrier(cur)
     for _ in range(t):
         cur = _banded_step(cur, bands_ref, offsets, lead_extents, radius,
-                           tile_n, compute_dtype)
+                           tile_n, compute_dtype, wrap_x)
     return cur
 
 
@@ -162,6 +187,8 @@ def stencil_matmul(
     h_block: int = None,
     z_slab: int = None,
     z_block: int = None,
+    w_tile: int = None,
+    w_block: int = None,
     interpret: bool = False,
     compute_dtype=None,
 ) -> jax.Array:
@@ -177,34 +204,42 @@ def stencil_matmul(
     BASE kernel with intermediates resident in VMEM (``fused_matmul_reuse``
     in repro.kernels.ops).
 
-    ``tile_m`` is the strip height; ``tile_n`` the column-tile width of each
-    contraction (the banded operand is (rows, tile_n + 2r, tile_n));
-    ``h_block`` the halo sub-block height (``None`` = auto, 0 = whole-strip
-    /whole-slab foil substrate); 3D grids add ``z_slab``/``z_block``.  Any
-    left ``None`` is auto-chosen (``resolve_substrate_geom`` /
-    ``choose_tile``); explicit values are validated strictly.
+    ``tile_m`` is the strip height; ``tile_n`` the column-chunk width of
+    each contraction (the banded operand is (rows, tile_n + 2r, tile_n);
+    widths not divisible by ``tile_n`` contract a narrower final chunk
+    against the operand's leading submatrix, so awkward/prime widths
+    keep full-size chunks -- the ``choose_tile`` cap policy);
+    ``h_block`` the halo sub-block height (``None`` = auto, 0 =
+    whole-strip/whole-slab foil substrate); 3D grids add
+    ``z_slab``/``z_block``; 2D/3D grids add ``w_tile``/``w_block`` (the
+    column-tiled W substrate, DESIGN.md §10 -- each step then consumes a
+    carried x-halo instead of re-wrapping).  Any left ``None`` is
+    auto-chosen (``resolve_substrate_geom`` / ``choose_tile``); explicit
+    values are validated strictly.
     """
     w = np.asarray(weights)
     if x.ndim != w.ndim:
         raise ValueError(f"grid rank {x.ndim} != kernel rank {w.ndim}")
     if x.ndim == 1:
         # coerce h_block exactly like resolve_substrate_geom's dim-1 rule
-        # (see stencil_direct)
+        # (see stencil_direct); 1D never column-tiles
         hb = h_block if h_block in (None, 0) else 1
         y = stencil_matmul(x[None, :], w[None, :], t=t, tile_m=1,
-                           tile_n=tile_n, h_block=hb,
+                           tile_n=tile_n, h_block=hb, w_tile=0,
                            interpret=interpret, compute_dtype=compute_dtype)
         return y[0]
 
     radius = (w.shape[-1] - 1) // 2
     halo = t * ((w.shape[0] - 1) // 2)        # 0 for the lifted-1D kernel
     wid = x.shape[-1]
+    x_halo = t * radius                       # carried if column-tiled
     geom = resolve_substrate_geom(x.shape, halo, x.dtype.itemsize,
-                                  tile_m, h_block, z_slab, z_block)
+                                  tile_m, h_block, z_slab, z_block,
+                                  w_tile, w_block, x_halo)
     tile_n = choose_tile(wid) if tile_n is None else min(tile_n, wid)
     validate_tiling(x.shape, geom.strip_m, tile_n, halo, radius,
                     geom.h_block, geom.z_slab if x.ndim == 3 else None,
-                    geom.z_block)
+                    geom.z_block, geom.w_tile, geom.w_block, x_halo)
     if compute_dtype is None:
         compute_dtype = x.dtype
 
@@ -214,10 +249,14 @@ def stencil_matmul(
 
     def compute(cur, bands_ref):
         return _banded_steps(cur, bands_ref, offsets, lead_extents, t,
-                             radius, tile_n, compute_dtype)
+                             radius, tile_n, compute_dtype,
+                             wrap_x=not geom.w_tile)
 
     if x.ndim == 3:
         return slab_substrate_call(compute, x, geom, halo, interpret,
-                                   consts=(bands,))
+                                   consts=(bands,),
+                                   x_halo=x_halo if geom.w_tile else 0)
     return strip_substrate_call(compute, x, geom.strip_m, geom.h_block,
-                                halo, interpret, consts=(bands,))
+                                halo, interpret, consts=(bands,),
+                                w_tile=geom.w_tile, w_block=geom.w_block,
+                                x_halo=x_halo if geom.w_tile else 0)

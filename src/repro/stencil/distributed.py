@@ -151,6 +151,8 @@ def pallas_local_apply(
     h_block: Optional[int] = None,
     z_slab: Optional[int] = None,
     z_block: Optional[int] = None,
+    w_tile: Optional[int] = None,
+    w_block: Optional[int] = None,
 ) -> Callable:
     """Build a ``local_apply`` plug-in running the strip-mined Pallas kernels.
 
@@ -171,7 +173,11 @@ def pallas_local_apply(
     exercise the multi-cell path.  ``h_block``/``z_block`` select the halo
     block heights of the substrate (``None`` = auto, ``h_block=0`` =
     whole-strip/whole-slab foil) -- the modulo wrap of either substrate is
-    equally harmless here.
+    equally harmless here.  ``w_tile``/``w_block`` select the column-tiled
+    W substrate (DESIGN.md §10) for W-sharded meshes whose local width
+    still exceeds VMEM (``None`` = auto: full width whenever it fits the
+    budget); the column walk's wrap is as harmless as the row wrap -- it
+    only pollutes the discarded halo ring.
     """
     import numpy as _np
 
@@ -184,7 +190,7 @@ def pallas_local_apply(
         kw = dict(
             tile_m=tile_m if tile_m is not None else xe.shape[-2],
             tile_n=tile_n if tile_n is not None else xe.shape[-1],
-            h_block=h_block,
+            h_block=h_block, w_tile=w_tile, w_block=w_block,
         ) if xe.ndim >= 2 else dict(tile_n=tile_n)
         if xe.ndim == 3:
             kw.update(z_slab=z_slab if z_slab is not None else xe.shape[0],

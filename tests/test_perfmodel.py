@@ -185,6 +185,25 @@ class TestReuseRegime:
             pm.halo_recompute_factor(1, 8, 32) < \
             pm.halo_recompute_factor(3, 8, 32)
 
+    def test_beta_column_tiled_adds_x_axis(self):
+        """On the column-tiled substrate (DESIGN.md §10) the carried
+        x-halo is recomputed per step like the leading halos: the tile
+        width joins the product mean, full-width betas are unchanged."""
+        assert pm.reuse_beta(B21, 4, 32) == \
+            pm.halo_recompute_factor(1, 4, 32)           # full width: 2D
+        got = pm.reuse_beta(B21, 4, 32, w_tile=64)
+        want = pm.halo_recompute_factor_nd(1, 4, (32, 64))
+        assert got == pytest.approx(want)
+        assert got > pm.reuse_beta(B21, 4, 32)           # strictly costlier
+        # 3D: (z_slab, strip_m, w_tile) product mean
+        spec3 = type(B21)("box", 3, 1)
+        got3 = pm.reuse_beta(spec3, 2, 16, z_slab=8, w_tile=64)
+        assert got3 == pytest.approx(
+            pm.halo_recompute_factor_nd(1, 2, (8, 16, 64)))
+        # lifted 1D never column-tiles and never recomputes
+        spec1 = type(B21)("box", 1, 1)
+        assert pm.reuse_beta(spec1, 4, 1) == 1.0
+
     def test_intensity_formula(self):
         # I_reuse = beta * t * K / (S * D)  (ISSUE: t*K/(S*D) as beta -> 1)
         w = pm.StencilWorkload(B21, 4, 4)

@@ -359,6 +359,104 @@ class TestPlan3D:
                          z_slab=6, h_block=2, z_block=0)
 
 
+class TestPlanColumnTiled:
+    """The column-tiled W substrate at the plan layer (DESIGN.md §10):
+    explain == plan.decision parity on awkward widths (the satellite's W
+    in {257, 300, 1000} sweep, 2D and 3D), w_tile in the reason string
+    and the cache key, and the budget-driven auto escalation."""
+
+    @pytest.mark.parametrize("wid", [257, 300, 1000])
+    def test_explain_parity_awkward_widths_2d(self, wid):
+        w = make_weights(StencilSpec("box", 2, 1), seed=3)
+        grid = (48, wid)
+        for t in (1, 2):
+            plan = stencil_plan(w, grid, np.float32, t)
+            d = explain(w, t, dtype_bytes=4, hw=plan.hw, grid_shape=grid)
+            assert d == plan.decision
+            assert "w_tile=" in d.reason
+        # pins thread identically, including explicit column tiles
+        for pins in ({"w_tile": 0}, {"tile_m": 24, "h_block": 12,
+                                     "w_tile": 64},
+                     {"tile_m": 24, "h_block": 12, "w_tile": 64,
+                      "w_block": 8}):
+            plan = stencil_plan(w, grid, np.float32, 2, **pins)
+            d = explain(w, 2, dtype_bytes=4, hw=plan.hw, grid_shape=grid,
+                        **pins)
+            assert d == plan.decision
+
+    @pytest.mark.parametrize("wid", [257, 300, 1000])
+    def test_explain_parity_awkward_widths_3d(self, wid):
+        w = make_weights(StencilSpec("box", 3, 1), seed=3)
+        grid = (12, 24, wid)
+        for t in (1, 2):
+            plan = stencil_plan(w, grid, np.float32, t)
+            d = explain(w, t, dtype_bytes=4, hw=plan.hw, grid_shape=grid)
+            assert d == plan.decision
+            assert "w_tile=" in d.reason
+        pins = {"tile_m": 12, "z_slab": 6, "h_block": 2, "z_block": 2,
+                "w_tile": 32}
+        plan = stencil_plan(w, grid, np.float32, 2, **pins)
+        d = explain(w, 2, dtype_bytes=4, hw=plan.hw, grid_shape=grid, **pins)
+        assert d == plan.decision
+        assert "w_tile=32" in d.reason
+
+    def test_fullwidth_reason_reports_w_tile(self):
+        """Every 2D/3D reason now reports the resolved width policy --
+        'w_tile=full' on the fast path."""
+        w = make_weights(StencilSpec("box", 2, 1), seed=0)
+        d = explain(w, 2, 4, grid_shape=(64, 64))
+        assert "w_tile=full" in d.reason
+
+    def test_awkward_width_plans_execute(self):
+        """Plans on awkward widths execute through the remainder path and
+        match the oracle -- with an explicit column tile AND fully auto."""
+        w = make_weights(StencilSpec("star", 2, 1), seed=2)
+        x = _x(48, 257)
+        ref = stencil_direct_ref(x, w, 2)
+        for pins in ({}, {"tile_m": 24, "h_block": 12, "w_tile": 64}):
+            plan = stencil_plan(w, x.shape, x.dtype, 2, **pins)
+            np.testing.assert_allclose(np.asarray(plan(x)), np.asarray(ref),
+                                       atol=1e-4)
+
+    def test_cache_keys_on_w_tile_and_budget(self, monkeypatch):
+        """Distinct w_tile pins get distinct plans; retuning
+        REPRO_VMEM_BUDGET invalidates (the auto geometry depends on it)."""
+        from repro.kernels import clear_plan_cache, plan_cache_stats
+
+        clear_plan_cache()
+        w = make_weights(StencilSpec("box", 2, 1), seed=5)
+        base = dict(tile_m=24, h_block=12)
+        p1 = stencil_plan(w, (48, 256), np.float32, 1, **base)
+        p2 = stencil_plan(w, (48, 256), np.float32, 1, w_tile=64, **base)
+        p3 = stencil_plan(w, (48, 256), np.float32, 1, w_tile=64,
+                          w_block=16, **base)
+        assert len({id(p) for p in (p1, p2, p3)}) == 3
+        assert stencil_plan(w, (48, 256), np.float32, 1, w_tile=64,
+                            **base) is p2
+        monkeypatch.setenv("REPRO_VMEM_BUDGET", "65536")
+        p4 = stencil_plan(w, (48, 256), np.float32, 1, w_tile=64, **base)
+        assert p4 is not p2                    # budget is part of the key
+        monkeypatch.setenv("REPRO_VMEM_BUDGET", "not-a-number")
+        with pytest.raises(ValueError, match="integer"):
+            stencil_plan(w, (48, 256), np.float32, 1, **base)
+        monkeypatch.delenv("REPRO_VMEM_BUDGET")
+        clear_plan_cache()
+
+    def test_budget_driven_auto_column_tiles_through_plan(self, monkeypatch):
+        """Under a tiny budget the fully-auto plan column-tiles: the
+        decision reason reports a positive w_tile and execution matches
+        the oracle bit-for-bit (box VPU path, t=1)."""
+        monkeypatch.setenv("REPRO_VMEM_BUDGET", "16384")
+        w = make_weights(StencilSpec("box", 2, 1), seed=7)
+        x = _x(32, 1024)
+        plan = stencil_plan(w, x.shape, x.dtype, 1, backend="direct",
+                            use_cache=False)
+        assert "w_tile=" in plan.decision.reason
+        assert "w_tile=full" not in plan.decision.reason
+        ref = stencil_direct_ref(x, w, 1)
+        np.testing.assert_array_equal(np.asarray(plan(x)), np.asarray(ref))
+
+
 class TestRegistry:
     def test_unknown_backend_raises(self):
         w = make_weights(StencilSpec("box", 2, 1), seed=0)

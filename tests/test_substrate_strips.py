@@ -11,12 +11,13 @@ import numpy as np
 import pytest
 
 from repro.kernels import common, legacy
-from repro.kernels.common import (SubstrateGeom, choose_hblock,
-                                  choose_slab_blocks, choose_strip,
-                                  choose_strip_blocks,
-                                  hbm_read_bytes_per_step_3d,
+from repro.kernels.common import (SubstrateGeom, choose_col_blocks,
+                                  choose_hblock, choose_slab_blocks,
+                                  choose_strip, choose_strip_blocks,
+                                  choose_tile, hbm_read_bytes_per_step_3d,
                                   resolve_substrate_geom,
-                                  substrate_read_amp, validate_tiling)
+                                  substrate_read_amp, validate_tiling,
+                                  vmem_budget_bytes)
 from repro.kernels.ref import stencil_direct_ref
 from repro.kernels.stencil_direct import stencil_direct
 from repro.kernels.stencil_matmul import stencil_matmul
@@ -248,7 +249,8 @@ class TestSubstrate3D:
         """Auto joint sizing always beats the 9x foil (the acceptance
         bound), and by a wide margin for shallow halos."""
         for halo in (1, 2, 4):
-            zs, zb, sm, hb = choose_slab_blocks(64, 256, 512, halo)
+            zs, zb, sm, hb, wt, wb = choose_slab_blocks(64, 256, 512, halo)
+            assert (wt, wb) == (0, 0)     # full width fits at this size
             g = SubstrateGeom(dim=3, strip_m=sm, h_block=hb,
                               z_slab=zs, z_block=zb)
             assert g.read_amp < 9.0
@@ -266,10 +268,11 @@ class TestSubstrate3D:
 
     def test_choose_slab_blocks_divides_and_covers(self):
         for (z, h, halo) in [(64, 256, 3), (48, 96, 8), (16, 32, 4)]:
-            zs, zb, sm, hb = choose_slab_blocks(z, h, 128, halo)
+            zs, zb, sm, hb, wt, wb = choose_slab_blocks(z, h, 128, halo)
             assert z % zs == 0 and h % sm == 0
             assert zs % zb == 0 and sm % hb == 0
             assert zb >= halo and hb >= halo
+            assert (wt, wb) == (0, 0)     # full width fits at this size
 
     def test_validate_errors(self):
         w = make_weights(StencilSpec("box", 3, 1), seed=0)
@@ -371,10 +374,17 @@ class TestValidateTiling:
         with pytest.raises(ValueError, match="divisible"):
             stencil_direct(_x(60, 64), w, tile_m=32, interpret=True)
 
-    def test_cols_not_divisible_matmul(self):
+    def test_cols_not_divisible_matmul_runs_remainder(self):
+        """tile_n no longer needs to divide W: the final narrower chunk
+        contracts against the banded operand's leading submatrix (the
+        choose_tile cap-policy satellite) and matches the oracle."""
         w = make_weights(StencilSpec("box", 2, 1), seed=0)
-        with pytest.raises(ValueError, match="divisible"):
-            stencil_matmul(_x(64, 60), w, tile_m=32, tile_n=32, interpret=True)
+        x = _x(64, 60)
+        y = stencil_matmul(x, w, tile_m=32, tile_n=32, interpret=True)
+        ref = stencil_direct_ref(x, w, 1)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(ref), atol=2e-5)
+        with pytest.raises(ValueError, match="column tile"):
+            stencil_matmul(x, w, tile_m=32, tile_n=0, interpret=True)
 
     def test_halo_exceeds_strip(self):
         w = make_weights(StencilSpec("box", 2, 3), seed=0)
@@ -500,3 +510,293 @@ class TestTrafficAccounting:
         yd = legacy.stencil_direct_9pt(x, w, t=2, tile_m=32, tile_n=32,
                                        interpret=True)
         np.testing.assert_allclose(np.asarray(yd), np.asarray(ref), atol=1e-4)
+
+
+class TestChooseTile:
+    """The choose_tile bugfix satellite: pad-or-cap policy, never a
+    degenerate tile (the old largest-divisor rule returned 1 on primes
+    and off-lane divisors like 65 on near-misses)."""
+
+    def test_never_degenerate_sweep(self):
+        """The acceptance sweep: for every n <= 4096 the tile is
+        min(n, 128) -- never below min(n, 8), never above n."""
+        for n in range(1, 4097):
+            tile = choose_tile(n)
+            assert tile == min(n, 128)
+            assert tile >= min(n, 8)
+            assert tile <= n
+
+    def test_issue_cases(self):
+        assert choose_tile(257) == 128        # was 1 (prime width)
+        assert choose_tile(130) == 128        # was 65 (off-lane divisor)
+        assert choose_tile(100) == 100
+        assert choose_tile(4096) == 128
+        assert choose_tile(300, preferred=256) == 256
+
+    def test_rejects_nonpositive(self):
+        with pytest.raises(ValueError, match="positive"):
+            choose_tile(0)
+
+
+class TestChooseHBlockProperty:
+    """The choose_hblock satellite: integer ceil-division floor, plus the
+    exhaustive property sweep (divides the strip, covers the halo)."""
+
+    def test_property_sweep(self):
+        for strip_m in range(1, 129):
+            for halo in range(0, strip_m + 1):
+                hb = choose_hblock(strip_m, halo)
+                assert isinstance(hb, int)
+                assert strip_m % hb == 0, (strip_m, halo, hb)
+                assert hb >= halo, (strip_m, halo, hb)
+                # the 1/16 floor is integer ceil division
+                assert hb >= min(strip_m, -(-strip_m // 16))
+
+    def test_floor_is_integer_ceil(self):
+        # strip_m=24: ceil(24/16)=2; the smallest halo-0 divisor >= 2 is 2
+        assert choose_hblock(24, 0) == 2
+        assert choose_hblock(32, 0) == 2
+        assert choose_hblock(17, 0) == 17     # prime: no proper divisor
+
+
+class TestWrapRadiusGuard:
+    """The shared wrap-radius guard satellite: one check, every rank
+    (the 1D/2D/3D branches used to carry their own copies; the 3D path
+    was untested)."""
+
+    @pytest.mark.parametrize("shape,kwargs", [
+        ((8,), {}),
+        ((32, 8), {}),
+        ((16, 32, 8), dict(z_slab=16)),
+    ])
+    def test_all_ranks_raise(self, shape, kwargs):
+        with pytest.raises(ValueError, match="wrap radius"):
+            validate_tiling(shape, 16, 8, 9, **kwargs)
+
+    def test_3d_kernel_path(self):
+        w = make_weights(StencilSpec("box", 3, 3), seed=0)
+        with pytest.raises(ValueError, match="wrap radius"):
+            stencil_direct(_x3(8, 16, 2), w, tile_m=8, z_slab=8,
+                           interpret=True)
+
+    def test_valid_radius_passes(self):
+        validate_tiling((8,), 1, 8, 4)
+        validate_tiling((16, 32, 32), 16, 32, 4, z_slab=16)
+
+
+class TestColumnTiled:
+    """The PR's tentpole: the column-tiled W substrate (DESIGN.md §10).
+    Substrate equivalence (column-tiled vs whole-width), the remainder
+    path on awkward widths, the three-factor traffic formula, and the
+    auto sizing's budget-driven escalation."""
+
+    #: Awkward widths of the ISSUE's acceptance sweep: prime, composite
+    #: with no 128-friendly divisor, and 8-divisible-but-not-128.
+    AWKWARD_W = (257, 300, 1000)
+
+    @pytest.mark.parametrize("wid", (64,) + AWKWARD_W)
+    @pytest.mark.parametrize("r", [1, 2])
+    @pytest.mark.parametrize("shape", ["box", "star"])
+    def test_direct_t1_vs_wholewidth(self, shape, r, wid):
+        """Single-step VPU: column-tiled (aligned AND remainder paths) is
+        BIT-for-bit the whole-width kernel in f32 for box kernels (no
+        structural zero taps => same tap sequence => same FMA formation);
+        star kernels' skipped taps let XLA contract differently on some
+        widths, perturbing the last ulp (the seed 3D-oracle caveat)."""
+        w = make_weights(StencilSpec(shape, 2, r), seed=r)
+        x = _x(48, wid)
+        whole = stencil_direct(x, w, t=1, tile_m=24, h_block=12,
+                               interpret=True)
+        sub = stencil_direct(x, w, t=1, tile_m=24, h_block=12, w_tile=32,
+                             interpret=True)
+        if shape == "box":
+            np.testing.assert_array_equal(np.asarray(sub), np.asarray(whole))
+        else:
+            np.testing.assert_allclose(np.asarray(sub), np.asarray(whole),
+                                       atol=1e-6)
+
+    @pytest.mark.parametrize("wid", (64,) + AWKWARD_W)
+    @pytest.mark.parametrize("r,t", [(1, 1), (1, 2), (2, 2), (3, 4)])
+    @pytest.mark.parametrize("shape", ["box", "star"])
+    def test_matmul_bitwise_vs_wholewidth(self, shape, r, t, wid):
+        """The MXU banded path is BIT-for-bit equal between the
+        column-tiled and whole-width substrates at every depth, aligned
+        and remainder widths alike: each output column contracts the
+        same taps against the same band column, and zero band entries
+        are exact no-ops -- the satellite's substrate-equivalence sweep
+        on W in {257, 300, 1000}."""
+        w = make_weights(StencilSpec(shape, 2, r), seed=r)
+        x = _x(48, wid)
+        whole = stencil_matmul(x, w, t=t, tile_m=24, h_block=12,
+                               interpret=True)
+        sub = stencil_matmul(x, w, t=t, tile_m=24, h_block=12, w_tile=32,
+                             interpret=True)
+        np.testing.assert_array_equal(np.asarray(sub), np.asarray(whole))
+
+    @pytest.mark.parametrize("wid", (64, 257, 300))
+    @pytest.mark.parametrize("r,t", [(1, 2), (2, 2), (1, 4)])
+    def test_direct_depth_close_vs_wholewidth(self, r, t, wid):
+        """Fused VPU steps: the carried-x-halo graph differs from the
+        re-wrap graph, so XLA's FMA formation may perturb the last ulp
+        (exactly the seed caveat for the 3D oracle at r=2, t=2) -- the
+        values agree to float32 resolution."""
+        w = make_weights(StencilSpec("star", 2, r), seed=r)
+        x = _x(48, wid)
+        whole = stencil_direct(x, w, t=t, tile_m=24, h_block=12,
+                               interpret=True)
+        sub = stencil_direct(x, w, t=t, tile_m=24, h_block=12, w_tile=32,
+                             interpret=True)
+        np.testing.assert_allclose(np.asarray(sub), np.asarray(whole),
+                                   atol=1e-6)
+
+    @pytest.mark.parametrize("wid", [32, 37, 257])
+    @pytest.mark.parametrize("shape", ["box", "star"])
+    def test_3d_column_tiled(self, shape, wid):
+        """3D slab substrate with a column-tiled W: matmul bit-for-bit vs
+        whole-width, direct bitwise at t=1 for box (allclose for star --
+        see test_direct_t1_vs_wholewidth) and oracle-close at depth."""
+        w = make_weights(StencilSpec(shape, 3, 1), seed=1)
+        x = _x3(12, 24, wid)
+        pins = dict(tile_m=12, z_slab=6, h_block=2, z_block=2,
+                    interpret=True)
+        whole = stencil_direct(x, w, t=1, **pins)
+        sub = stencil_direct(x, w, t=1, w_tile=16, **pins)
+        if shape == "box":
+            np.testing.assert_array_equal(np.asarray(sub), np.asarray(whole))
+        else:
+            np.testing.assert_allclose(np.asarray(sub), np.asarray(whole),
+                                       atol=1e-6)
+        mw = stencil_matmul(x, w, t=2, tile_n=16, **pins)
+        ms = stencil_matmul(x, w, t=2, tile_n=16, w_tile=16, **pins)
+        np.testing.assert_array_equal(np.asarray(ms), np.asarray(mw))
+        ref = stencil_direct_ref(x, w, 2)
+        np.testing.assert_allclose(np.asarray(ms), np.asarray(ref),
+                                   atol=2e-4)
+
+    def test_reuse_bitwise_vs_sequential_column_tiled(self):
+        """The reuse regime's exactness guarantee survives column tiling:
+        t fused radius-r contractions == t sequential launches, bitwise."""
+        w = make_weights(StencilSpec("box", 2, 1), seed=0)
+        x = _x(48, 64)
+        fused = stencil_matmul(x, w, t=3, tile_m=24, h_block=12, w_tile=32,
+                               interpret=True)
+        seq = x
+        for _ in range(3):
+            seq = stencil_matmul(seq, w, t=1, tile_m=24, h_block=12,
+                                 w_tile=32, interpret=True)
+        np.testing.assert_array_equal(np.asarray(fused), np.asarray(seq))
+
+    def test_wide_grid_exceeding_budget_executes_bitwise(self, monkeypatch):
+        """THE acceptance criterion: 2D and 3D grids whose FULL-WIDTH
+        working set exceeds the VMEM budget execute through auto
+        resolution (which column-tiles), bit-for-bit equal to the
+        reference oracle in f32, with the resolved geometry carrying a
+        positive w_tile."""
+        monkeypatch.setenv("REPRO_VMEM_BUDGET", "16384")
+        assert vmem_budget_bytes() == 16384
+
+        # 2D: even the thinnest full-width strip needs ~33 KB > budget
+        assert min(common._strip_working_set(d, choose_hblock(d, 1),
+                                             1024, 1, 4)
+                   for d in (1, 2, 4, 8, 16, 32)) > 16384
+        g2 = resolve_substrate_geom((32, 1024), 1, 4)
+        assert g2.w_tile > 0 and g2.w_block >= 1
+        w = make_weights(StencilSpec("box", 2, 1), seed=3)
+        x = _x(32, 1024)
+        ref = stencil_direct_ref(x, w, 1)
+        y = stencil_direct(x, w, t=1, interpret=True)     # all-auto
+        np.testing.assert_array_equal(np.asarray(y), np.asarray(ref))
+
+        # 3D
+        g3 = resolve_substrate_geom((8, 16, 512), 1, 4)
+        assert g3.w_tile > 0
+        w3 = make_weights(StencilSpec("box", 3, 1), seed=3)
+        x3 = _x3(8, 16, 512)
+        ref3 = stencil_direct_ref(x3, w3, 1)
+        y3 = stencil_direct(x3, w3, t=1, interpret=True)  # all-auto
+        np.testing.assert_array_equal(np.asarray(y3), np.asarray(ref3))
+
+    def test_auto_stays_fullwidth_when_it_fits(self):
+        """Default budget, modest widths: the resolution never
+        column-tiles, so every pre-existing geometry is unchanged."""
+        for shape in [(192, 160), (64, 64), (256, 512)]:
+            g = resolve_substrate_geom(shape, 2, 4)
+            assert g.w_tile == 0 and g.w_block == 0
+        g = resolve_substrate_geom((12, 24, 32), 2, 4)
+        assert g.w_tile == 0
+
+    def test_read_bytes_three_factor_formula(self):
+        """Analytic reads == (1 + 2h/strip)(1 + 2wb/wt) * H*W*D in 2D and
+        the (z, y, w) product in 3D, exactly, for aligned widths."""
+        H, W, D = 64, 256, 4
+        grid_bytes = H * W * D
+        for sm, hb in [(16, 4), (32, 8)]:
+            for wt, wb in [(32, 8), (64, 16), (128, 32)]:
+                got = common.hbm_read_bytes_per_step(
+                    (H, W), sm, D, h_block=hb, w_tile=wt, w_block=wb)
+                want = (1 + 2 * hb / sm) * (1 + 2 * wb / wt) * grid_bytes
+                assert got == pytest.approx(want)
+                g = SubstrateGeom(dim=2, strip_m=sm, h_block=hb,
+                                  w_tile=wt, w_block=wb)
+                assert g.read_amp == pytest.approx(got / grid_bytes)
+        Z = 16
+        grid_bytes3 = Z * H * W * D
+        g3 = SubstrateGeom(dim=3, strip_m=16, h_block=4, z_slab=8,
+                           z_block=2, w_tile=64, w_block=16)
+        got3 = hbm_read_bytes_per_step_3d((Z, H, W), g3, D)
+        want3 = ((1 + 2 * 4 / 16) * (1 + 2 * 2 / 8) * (1 + 2 * 16 / 64)
+                 * grid_bytes3)
+        assert got3 == pytest.approx(want3)
+        assert g3.read_amp == pytest.approx(got3 / grid_bytes3)
+
+    def test_choose_col_blocks_divides_and_covers(self):
+        for (h, wid, halo) in [(64, 4096, 2), (128, 1000, 3), (32, 257, 1)]:
+            sm, hb, wt, wb = choose_col_blocks(h, wid, halo,
+                                               vmem_budget=64 * 1024)
+            assert h % sm == 0 and sm % hb == 0 and hb >= halo
+            assert wt % wb == 0 and wb >= halo and 0 < wt < wid
+
+    def test_validate_errors(self):
+        w = make_weights(StencilSpec("box", 2, 1), seed=0)
+        x = _x(48, 64)
+        with pytest.raises(ValueError, match="does not divide w_tile"):
+            stencil_direct(x, w, tile_m=24, h_block=12, w_tile=32,
+                           w_block=5, interpret=True)
+        w2 = make_weights(StencilSpec("box", 2, 2), seed=0)
+        with pytest.raises(ValueError, match="x-halo"):
+            stencil_direct(x, w2, t=2, tile_m=24, h_block=12, w_tile=32,
+                           w_block=2, interpret=True)
+        with pytest.raises(ValueError, match="full-width|foil"):
+            stencil_direct(x, w, tile_m=24, h_block=0, w_tile=32,
+                           interpret=True)
+        with pytest.raises(ValueError, match="w_tile"):
+            resolve_substrate_geom((48, 64), 1, 4, w_block=8)
+
+    def test_lone_wblock_rejected_on_every_path(self, monkeypatch):
+        """A w_block pin without a w_tile is rejected uniformly: its
+        acceptance must not flip when the VMEM budget forces the
+        column-tiled escalation (the auto w_tile need not be divisible
+        by an arbitrary pinned block)."""
+        monkeypatch.setenv("REPRO_VMEM_BUDGET", "16384")
+        with pytest.raises(ValueError, match="w_tile"):
+            resolve_substrate_geom((32, 1024), 1, 4, w_block=5)
+        with pytest.raises(ValueError, match="w_tile"):
+            resolve_substrate_geom((8, 16, 512), 1, 4, w_block=5)
+        with pytest.raises(ValueError, match="exceeds grid width"):
+            validate_tiling((48, 64), 24, 64, 1, h_block=12, w_tile=128,
+                            w_block=8)
+        # whole-slab foil + column tiling rejected in 3D too
+        with pytest.raises(ValueError, match="full-width|foil"):
+            resolve_substrate_geom((12, 24, 32), 1, 4, tile_m=12,
+                                   z_slab=6, h_block=0, w_tile=16)
+
+    def test_wtile_at_grid_width_is_fullwidth_fast_path(self):
+        """w_tile >= W normalizes to the full-width fast path: identical
+        geometry, identical (bitwise) results."""
+        g = resolve_substrate_geom((48, 64), 1, 4, w_tile=64)
+        assert g.w_tile == 0
+        w = make_weights(StencilSpec("box", 2, 1), seed=0)
+        x = _x(48, 64)
+        a = stencil_direct(x, w, tile_m=24, interpret=True)
+        b = stencil_direct(x, w, tile_m=24, w_tile=64, interpret=True)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
