@@ -4,12 +4,65 @@ Every wall-clock number a benchmark emits must come from ``time_us``: it
 warms the call up (triggering trace+compile OUTSIDE the timed region) and
 blocks on device completion per iteration, so BENCH_*.json numbers are
 comparable across PRs instead of measuring import+compile noise.
+
+``case_budget`` bounds one case's wall clock: a pathological compile (the
+exact failure mode the guard layer exists for) raises :class:`CaseTimeout`
+instead of wedging ``scripts/verify.sh`` forever; the harness records the
+case as ``timed_out`` and continues.
 """
 from __future__ import annotations
 
+import signal
+import threading
 import time
+from contextlib import contextmanager
 
 import jax
+
+from repro.core.envutil import env_int
+
+#: Default per-case wall-clock budget (seconds); override with
+#: REPRO_BENCH_BUDGET_S.  0 disables the budget entirely.
+BENCH_BUDGET_S = 300
+
+
+class CaseTimeout(RuntimeError):
+    """One benchmark case exceeded its wall-clock budget."""
+
+
+def bench_budget_s() -> int:
+    return env_int("REPRO_BENCH_BUDGET_S", BENCH_BUDGET_S, minimum=0)
+
+
+@contextmanager
+def case_budget(seconds: int = None):
+    """Raise :class:`CaseTimeout` if the block runs longer than the budget.
+
+    SIGALRM-based, so it interrupts a wedged XLA compile mid-flight --
+    a cooperative deadline check could not.  Degrades to a no-op when the
+    budget is 0/disabled, off the main thread (signals unavailable), or
+    when an outer alarm is already pending (nested budgets must not
+    cancel the enclosing deadline).
+    """
+    if seconds is None:
+        seconds = bench_budget_s()
+    usable = (seconds > 0
+              and threading.current_thread() is threading.main_thread()
+              and signal.getitimer(signal.ITIMER_REAL)[0] == 0)
+    if not usable:
+        yield
+        return
+
+    def on_alarm(signum, frame):
+        raise CaseTimeout(f"benchmark case exceeded {seconds}s budget")
+
+    prior = signal.signal(signal.SIGALRM, on_alarm)
+    signal.setitimer(signal.ITIMER_REAL, seconds)
+    try:
+        yield
+    finally:
+        signal.setitimer(signal.ITIMER_REAL, 0)
+        signal.signal(signal.SIGALRM, prior)
 
 
 def time_us(fn, *args, iters: int = 3, warmup: int = 1) -> float:

@@ -54,8 +54,9 @@ import numpy as np
 
 sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)), ".."))
 
-from benchmarks.timing import time_us
-from repro.kernels import common, legacy, stencil_plan
+from benchmarks.timing import CaseTimeout, case_budget, time_us
+from repro.core import events as guard_events
+from repro.kernels import common, legacy, plan_cache_stats, stencil_plan
 from repro.kernels.common import (SubstrateGeom, choose_hblock,
                                   hbm_read_bytes_per_step_3d,
                                   resolve_substrate_geom,
@@ -294,6 +295,18 @@ def _case_wide(shape: str, r: int, t: int, xw) -> dict:
             os.environ["REPRO_VMEM_BUDGET"] = old_budget
 
 
+def _budgeted(fn, label: str, *args) -> dict:
+    """Run one case under the per-case wall-clock budget; a blown budget
+    records a ``timed_out`` row instead of wedging the whole sweep."""
+    try:
+        with case_budget():
+            return fn(*args)
+    except CaseTimeout as e:
+        print(f"traffic: case {label} timed out ({e}); continuing",
+              file=sys.stderr)
+        return {"case": label, "timed_out": True, "error": str(e)}
+
+
 def run() -> list[str]:
     rng = np.random.default_rng(0)
     x = jnp.asarray(rng.normal(size=(N, N)).astype(np.float32))
@@ -301,13 +314,16 @@ def run() -> list[str]:
     quick = bool(os.environ.get("BENCH_QUICK"))
     radii = QUICK_RADII if quick else RADII
     depths = QUICK_DEPTHS if quick else DEPTHS
-    rows = [_case(shape, r, t, x)
+    rows = [_budgeted(_case, f"{shape}2d-r{r}-t{t}", shape, r, t, x)
             for shape in SHAPES for r in radii for t in depths]
     cases3d = QUICK_CASES_3D if quick else CASES_3D
-    rows3d = [_case3d(shape, r, t, x3) for shape, r, t in cases3d]
+    rows3d = [_budgeted(_case3d, f"{shape}3d-r{r}-t{t}", shape, r, t, x3)
+              for shape, r, t in cases3d]
     xw = jnp.asarray(rng.normal(size=N_WIDE).astype(np.float32))
     cases_wide = QUICK_CASES_WIDE if quick else CASES_WIDE
-    rows_wide = [_case_wide(shape, r, t, xw) for shape, r, t in cases_wide]
+    rows_wide = [_budgeted(_case_wide, f"{shape}2d-r{r}-t{t}-wide",
+                           shape, r, t, xw)
+                 for shape, r, t in cases_wide]
 
     with open(JSON_PATH_QUICK if quick else JSON_PATH, "w") as f:
         json.dump({"grid": N, "tile": TILE, "dtype_bytes": DTYPE_BYTES,
@@ -319,7 +335,15 @@ def run() -> list[str]:
                    "vmem_budget_wide": WIDE_BUDGET,
                    "timing": "interpret-mode CPU (relative only)",
                    "cases": rows, "cases_3d": rows3d,
-                   "cases_wide": rows_wide}, f, indent=1)
+                   "cases_wide": rows_wide,
+                   # Guard-layer record of the sweep: empty on a clean
+                   # run (asserted by scripts/verify.sh) -- any event
+                   # here means a kernel failed and degraded mid-bench.
+                   "guard_events": guard_events.snapshot(),
+                   "plan_stats": plan_cache_stats()}, f, indent=1)
+    rows = [c for c in rows if not c.get("timed_out")]
+    rows3d = [c for c in rows3d if not c.get("timed_out")]
+    rows_wide = [c for c in rows_wide if not c.get("timed_out")]
 
     out = ["traffic.case,loads_old/new/sub,read_amp_direct_new,"
            "read_amp_direct_sub,rdMB_step_mm_old,rdMB_step_mm_new,"

@@ -1,0 +1,63 @@
+"""Shared environment-variable parsing for the runtime's tuning knobs.
+
+Every ``REPRO_*`` knob (``REPRO_VMEM_BUDGET``, ``REPRO_PLAN_CACHE_SIZE``,
+``REPRO_FAULTS``, ``REPRO_BENCH_BUDGET_S``, ``REPRO_NAN_WATCHDOG``, ...)
+parses through these helpers, so a malformed value always produces the
+same style of actionable message -- naming the variable, the offending
+value, and the accepted form -- instead of a raw ``ValueError`` from
+``int()`` deep inside a kernel-sizing path.  Values are re-read on every
+call (no import-time caching): tests and long-running servers retune
+without reimporting, matching the historical behavior of
+``vmem_budget_bytes`` / ``plan_cache_max``.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+
+def env_str(name: str, default: Optional[str] = None) -> Optional[str]:
+    """The raw value of ``name``; empty/whitespace-only counts as unset
+    (an empty export is a shell accident, never a meaningful knob)."""
+    raw = os.environ.get(name)
+    if raw is None or not raw.strip():
+        return default
+    return raw.strip()
+
+
+def env_int(name: str, default: int, minimum: int = 1) -> int:
+    """Integer knob ``name``: the parsed value if set, else ``default``.
+
+    Raises ``ValueError`` with the variable name and offending text on
+    garbage (``"zero"``, ``"8MB"``), and on values below ``minimum``
+    (negative cache bounds / budgets are always configuration errors, not
+    requests for "unbounded").
+    """
+    raw = env_str(name)
+    if raw is None:
+        return default
+    try:
+        value = int(raw)
+    except ValueError:
+        raise ValueError(
+            f"{name} must be an integer, got {raw!r}") from None
+    if value < minimum:
+        raise ValueError(
+            f"{name} must be >= {minimum}, got {value}")
+    return value
+
+
+def env_flag(name: str, default: bool = False) -> bool:
+    """Boolean knob: ``1/true/yes/on`` enable, ``0/false/no/off`` disable
+    (case-insensitive); anything else is a configuration error."""
+    raw = env_str(name)
+    if raw is None:
+        return default
+    low = raw.lower()
+    if low in ("1", "true", "yes", "on"):
+        return True
+    if low in ("0", "false", "no", "off"):
+        return False
+    raise ValueError(
+        f"{name} must be a boolean (1/0/true/false/yes/no/on/off), "
+        f"got {raw!r}")

@@ -5,12 +5,18 @@ kernels.legacy for traffic benchmarking).
 The public surface is the plan API: ``stencil_plan`` compiles the paper's
 decision procedure + kernel lowering into a reusable ``StencilPlan``;
 ``stencil_apply`` is the one-shot compatibility wrapper over it; backends
-register through ``repro.kernels.registry``."""
+register through ``repro.kernels.registry``.  ``guarded_stencil_plan``
+wraps a plan in the guarded execution layer (failure taxonomy +
+degradation ladder, DESIGN.md §11)."""
 from .ops import stencil_apply, explain
 from .plan import (StencilPlan, stencil_plan, spec_from_weights,
                    plan_cache_stats, plan_cache_max, clear_plan_cache)
 from .registry import (register_backend, unregister_backend,
-                       registered_backends, get_backend)
+                       registered_backends, get_backend, fallback_ladder)
+from .guard import (GuardedExecutionError, GuardedPlan, HaloExchangeError,
+                    KernelCompileError, NumericalFaultError, PlanBuildError,
+                    VmemOverflowError, classify_failure,
+                    guarded_stencil_plan)
 from .stencil_direct import stencil_direct
 from .stencil_matmul import (stencil_matmul, build_bands, build_bands_nd,
                              band_sparsity)

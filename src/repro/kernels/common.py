@@ -138,17 +138,8 @@ def vmem_budget_bytes() -> int:
     :data:`VMEM_BUDGET_BYTES`.  Read at every geometry resolution, so
     tests and long-running servers can retune without reimporting; the
     plan cache folds the effective value into its keys."""
-    raw = os.environ.get("REPRO_VMEM_BUDGET")
-    if raw is None:
-        return VMEM_BUDGET_BYTES
-    try:
-        budget = int(raw)
-    except ValueError:
-        raise ValueError(
-            f"REPRO_VMEM_BUDGET must be an integer, got {raw!r}") from None
-    if budget < 1:
-        raise ValueError(f"REPRO_VMEM_BUDGET must be >= 1, got {budget}")
-    return budget
+    from repro.core.envutil import env_int
+    return env_int("REPRO_VMEM_BUDGET", VMEM_BUDGET_BYTES, minimum=1)
 
 
 def strip_in_specs(strip_m: int, n: int, grid_m: int):
@@ -838,6 +829,13 @@ def strip_substrate_call(compute, x: jax.Array, strip_m: int, h_block: int,
     w_block per side on the host, the column walk drops its modulo wrap,
     and the padded output columns are sliced off.
     """
+    # Fault-injection hooks (repro.testing.faults): each plan traces its
+    # jitted runner exactly once, so a hook here models "the Nth kernel
+    # compile fails" / "the VMEM estimate lied".  No-ops unless armed.
+    from repro.testing.faults import maybe_fail
+    maybe_fail("compile")
+    maybe_fail("vmem")
+
     h, n = x.shape
     gm = h // strip_m
     out_dtype = x.dtype
@@ -1030,6 +1028,11 @@ def slab_substrate_call(compute, x: jax.Array, geom: SubstrateGeom,
     instead of re-wrapping (scratch rows are partial).  Widths not
     divisible by w_tile run the host-extended edge-tile remainder path.
     """
+    # Same fault-injection hooks as strip_substrate_call (trace-time).
+    from repro.testing.faults import maybe_fail
+    maybe_fail("compile")
+    maybe_fail("vmem")
+
     z, h, n = x.shape
     zs, sm = geom.z_slab, geom.strip_m
     gz, gm = z // zs, h // sm

@@ -60,6 +60,8 @@ def stencil_apply(
     w_block: Optional[int] = None,
     interpret: Optional[bool] = None,
     compute_dtype=None,
+    guard: bool = False,
+    watchdog: Optional[bool] = None,
 ) -> jax.Array:
     """Advance the grid ``t`` time steps with the selected backend.
 
@@ -70,14 +72,26 @@ def stencil_apply(
     default to ``None`` = auto-sized by the kernels
     (``resolve_substrate_geom`` / ``choose_tile``; ``w_tile`` stays full
     width unless the full-width working set exceeds the VMEM budget --
-    DESIGN.md §10); explicit values are validated strictly."""
-    plan = stencil_plan(
-        weights, x.shape, x.dtype, t, hw=hw,
-        backend=None if backend == "auto" else backend,
+    DESIGN.md §10); explicit values are validated strictly.
+
+    ``guard=True`` routes through the guarded execution layer
+    (``repro.kernels.guard``, DESIGN.md §11): kernel failures degrade
+    down the fallback ladder instead of raising, and ``watchdog``
+    (None = the ``REPRO_NAN_WATCHDOG`` env flag) arms the NaN/Inf check
+    with a checked re-run.  On a clean run both paths execute the
+    identical cached plan."""
+    kw = dict(
+        hw=hw, backend=None if backend == "auto" else backend,
         tile_m=tile_m, tile_n=tile_n, h_block=h_block,
         z_slab=z_slab, z_block=z_block, w_tile=w_tile, w_block=w_block,
         interpret=interpret, compute_dtype=compute_dtype,
     )
+    if guard:
+        from .guard import guarded_stencil_plan
+        plan = guarded_stencil_plan(weights, x.shape, x.dtype, t,
+                                    watchdog=watchdog, **kw)
+    else:
+        plan = stencil_plan(weights, x.shape, x.dtype, t, **kw)
     return plan(x)
 
 

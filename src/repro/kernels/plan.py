@@ -182,35 +182,97 @@ from collections import OrderedDict
 PLAN_CACHE_MAX = 512
 
 _CACHE: "OrderedDict" = OrderedDict()
-_STATS = {"hits": 0, "misses": 0}
+_STATS = {"hits": 0, "misses": 0,
+          # guard-layer counters (repro.kernels.guard): plan builds that
+          # raised, plan executions that raised, degradation-ladder moves,
+          # and negative-cache short-circuits.  All zero unless something
+          # actually failed -- asserted by the clean-run acceptance tests.
+          "build_failures": 0, "exec_failures": 0,
+          "fallbacks": 0, "negative_hits": 0}
+
+#: Negative-result registry: signature key -> {"cause", "backend", "stamp"}.
+#: A signature lands here when its build/execution failed, so the guard
+#: ladder short-circuits repeat failures straight past the known-bad rung
+#: without re-attempting the (possibly slow) doomed compile.  Entries
+#: expire after ``plan_cache_max()`` cache churn -- a transient failure
+#: (e.g. memory pressure) must not blacklist a signature forever.
+_NEGATIVE: "OrderedDict" = OrderedDict()
+_churn = 0  # total successful + negative insertions, the expiry clock
 
 
 def plan_cache_max() -> int:
     """The effective LRU bound: ``REPRO_PLAN_CACHE_SIZE`` if set (must be a
     positive integer), else :data:`PLAN_CACHE_MAX`."""
-    raw = os.environ.get("REPRO_PLAN_CACHE_SIZE")
-    if raw is None:
-        return PLAN_CACHE_MAX
-    try:
-        bound = int(raw)
-    except ValueError:
-        raise ValueError(
-            f"REPRO_PLAN_CACHE_SIZE must be an integer, got {raw!r}") from None
-    if bound < 1:
-        raise ValueError(
-            f"REPRO_PLAN_CACHE_SIZE must be >= 1, got {bound}")
-    return bound
+    from repro.core.envutil import env_int
+    return env_int("REPRO_PLAN_CACHE_SIZE", PLAN_CACHE_MAX, minimum=1)
 
 
 def plan_cache_stats() -> dict:
-    """``{"hits": int, "misses": int, "size": int}`` for the process cache."""
-    return {"hits": _STATS["hits"], "misses": _STATS["misses"],
-            "size": len(_CACHE)}
+    """Cache + guard counters: hits/misses/size plus ``build_failures``,
+    ``exec_failures``, ``fallbacks``, ``negative_hits``, ``negative_size``."""
+    out = dict(_STATS)
+    out["size"] = len(_CACHE)
+    out["negative_size"] = len(_NEGATIVE)
+    return out
 
 
 def clear_plan_cache() -> None:
+    global _churn
     _CACHE.clear()
-    _STATS["hits"] = _STATS["misses"] = 0
+    _NEGATIVE.clear()
+    _churn = 0
+    for k in _STATS:
+        _STATS[k] = 0
+
+
+def _tick_churn() -> None:
+    """Advance the expiry clock and drop negative entries older than one
+    full cache turnover (``plan_cache_max()`` insertions)."""
+    global _churn
+    _churn += 1
+    bound = plan_cache_max()
+    while _NEGATIVE:
+        stamp = next(iter(_NEGATIVE.values()))["stamp"]
+        if _churn - stamp <= bound:
+            break
+        _NEGATIVE.popitem(last=False)
+
+
+def note_plan_failure(key, cause: str, backend: str,
+                      stage: str = "build") -> None:
+    """Record a failed signature in the negative registry (guard layer).
+
+    The failed plan itself is evicted from the LRU -- a failed build or a
+    plan whose execution raised must never be served again."""
+    discard_plan(key)
+    _STATS["build_failures" if stage == "build" else "exec_failures"] += 1
+    _NEGATIVE[key] = {"cause": cause, "backend": backend, "stamp": _churn}
+    _NEGATIVE.move_to_end(key)
+    _tick_churn()
+
+
+def failed_plan(key):
+    """The negative entry for ``key`` if present and unexpired, else None.
+    A hit counts toward ``negative_hits`` -- it means the guard skipped a
+    known-doomed rung."""
+    entry = _NEGATIVE.get(key)
+    if entry is None:
+        return None
+    if _churn - entry["stamp"] > plan_cache_max():
+        del _NEGATIVE[key]
+        return None
+    _STATS["negative_hits"] += 1
+    return dict(entry)
+
+
+def discard_plan(key) -> bool:
+    """Evict ``key`` from the plan LRU (no-op if absent)."""
+    return _CACHE.pop(key, None) is not None
+
+
+def record_fallback() -> None:
+    """One degradation-ladder move (guard layer bookkeeping)."""
+    _STATS["fallbacks"] += 1
 
 
 def _weights_key(w: np.ndarray) -> Tuple:
@@ -225,6 +287,75 @@ def _dtype_key(dt) -> str:
 # ---------------------------------------------------------------------------
 # Plan construction
 # ---------------------------------------------------------------------------
+def plan_signature(
+    spec_or_weights: Union[StencilSpec, np.ndarray],
+    grid_shape: Sequence[int],
+    dtype,
+    t: int = 1,
+    *,
+    hw: pm.HardwareSpec = pm.TPU_V5E_BF16,
+    mesh=None,
+    shard_spec: Optional[Sequence[Optional[str]]] = None,
+    dist_mode: str = "fused",
+    backend: Optional[str] = None,
+    tile_m: Optional[int] = None,
+    tile_n: Optional[int] = None,
+    h_block: Optional[int] = None,
+    z_slab: Optional[int] = None,
+    z_block: Optional[int] = None,
+    w_tile: Optional[int] = None,
+    w_block: Optional[int] = None,
+    interpret: Optional[bool] = None,
+    compute_dtype=None,
+) -> Tuple:
+    """Validate plan arguments and return ``(key, weights, grid_shape,
+    interpret)`` -- the deterministic cache signature WITHOUT building.
+
+    This is the raw-argument gate: genuine user errors (bad ``t``, rank
+    mismatch, unknown backend) raise here, unguarded, so the guard layer
+    never mistakes a caller bug for a kernel failure.  The key is pure --
+    it depends only on the arguments plus the process env (VMEM budget,
+    registry generation), never on device state -- which is what lets
+    every shard of a distributed mesh agree on the same fallback rung
+    without communicating.
+    """
+    if t < 1:
+        raise ValueError(f"fusion depth must be >= 1, got {t}")
+    if backend is not None:
+        registry.get_backend(backend)          # fail fast on unknown names
+    if mesh is not None and shard_spec is None:
+        raise ValueError("a mesh-parameterized plan needs shard_spec "
+                         "(one mesh-axis name per grid dim, None=unsharded)")
+
+    if isinstance(spec_or_weights, StencilSpec):
+        weights = jacobi_weights(spec_or_weights)
+    else:
+        weights = np.asarray(spec_or_weights)
+    grid_shape = tuple(int(n) for n in grid_shape)
+    if len(grid_shape) != weights.ndim:
+        raise ValueError(
+            f"grid rank {len(grid_shape)} != kernel rank {weights.ndim}; "
+            "the plan's grid_shape must match the stencil dimensionality")
+    if interpret is None:
+        interpret = _default_interpret()
+
+    shard_key = None
+    if mesh is not None:
+        shard_key = (id(mesh), tuple(shard_spec), dist_mode)
+    # registry.generation() invalidates plans whose selection (or builder,
+    # under overwrite=True) predates a registry change -- a newly priced
+    # backend must win future auto plans, not be masked by the cache.
+    # The effective VMEM budget is part of the key: auto geometry depends
+    # on it, so retuning REPRO_VMEM_BUDGET must never serve stale plans.
+    from .common import vmem_budget_bytes
+    key = (_weights_key(weights), grid_shape, _dtype_key(dtype), t, hw,
+           shard_key, backend, tile_m, tile_n, h_block, z_slab, z_block,
+           w_tile, w_block, vmem_budget_bytes(), interpret,
+           None if compute_dtype is None else _dtype_key(compute_dtype),
+           registry.generation())
+    return key, weights, grid_shape, interpret
+
+
 def stencil_plan(
     spec_or_weights: Union[StencilSpec, np.ndarray],
     grid_shape: Sequence[int],
@@ -278,40 +409,12 @@ def stencil_plan(
       interpret: Pallas interpret mode; ``None`` = off-TPU default.
       use_cache: bypass the process-wide plan cache when ``False``.
     """
-    if t < 1:
-        raise ValueError(f"fusion depth must be >= 1, got {t}")
-    if backend is not None:
-        registry.get_backend(backend)          # fail fast on unknown names
-    if mesh is not None and shard_spec is None:
-        raise ValueError("a mesh-parameterized plan needs shard_spec "
-                         "(one mesh-axis name per grid dim, None=unsharded)")
-
-    if isinstance(spec_or_weights, StencilSpec):
-        weights = jacobi_weights(spec_or_weights)
-    else:
-        weights = np.asarray(spec_or_weights)
-    grid_shape = tuple(int(n) for n in grid_shape)
-    if len(grid_shape) != weights.ndim:
-        raise ValueError(
-            f"grid rank {len(grid_shape)} != kernel rank {weights.ndim}; "
-            "the plan's grid_shape must match the stencil dimensionality")
-    if interpret is None:
-        interpret = _default_interpret()
-
-    shard_key = None
-    if mesh is not None:
-        shard_key = (id(mesh), tuple(shard_spec), dist_mode)
-    # registry.generation() invalidates plans whose selection (or builder,
-    # under overwrite=True) predates a registry change -- a newly priced
-    # backend must win future auto plans, not be masked by the cache.
-    # The effective VMEM budget is part of the key: auto geometry depends
-    # on it, so retuning REPRO_VMEM_BUDGET must never serve stale plans.
-    from .common import vmem_budget_bytes
-    key = (_weights_key(weights), grid_shape, _dtype_key(dtype), t, hw,
-           shard_key, backend, tile_m, tile_n, h_block, z_slab, z_block,
-           w_tile, w_block, vmem_budget_bytes(), interpret,
-           None if compute_dtype is None else _dtype_key(compute_dtype),
-           registry.generation())
+    key, weights, grid_shape, interpret = plan_signature(
+        spec_or_weights, grid_shape, dtype, t, hw=hw, mesh=mesh,
+        shard_spec=shard_spec, dist_mode=dist_mode, backend=backend,
+        tile_m=tile_m, tile_n=tile_n, h_block=h_block, z_slab=z_slab,
+        z_block=z_block, w_tile=w_tile, w_block=w_block,
+        interpret=interpret, compute_dtype=compute_dtype)
     if use_cache and key in _CACHE:
         _STATS["hits"] += 1
         _CACHE.move_to_end(key)
@@ -372,6 +475,7 @@ def stencil_plan(
         _CACHE[key] = plan
         while len(_CACHE) > bound:
             _CACHE.popitem(last=False)
+        _tick_churn()
     return plan
 
 

@@ -115,6 +115,12 @@ class BackendDef:
     price: Optional[Callable] = None   # price(PricingContext) -> float | None
     description: str = ""
     unit: Optional[str] = None         # "vector" | "matrix" | None (other)
+    #: Position on the guard layer's degradation ladder (DESIGN.md §11):
+    #: lower = more aggressive, higher = more conservative.  ``None`` means
+    #: the backend is never a fallback target (legacy 2D-only foils,
+    #: matmul wholestrip foils).  The reference oracle carries the largest
+    #: rank so the ladder always terminates on it.
+    fallback_rank: Optional[int] = None
 
 
 _REGISTRY: Dict[str, BackendDef] = {}
@@ -129,15 +135,17 @@ def generation() -> int:
 
 def register_backend(name: str, build: Callable, price: Callable = None,
                      description: str = "", unit: str = None,
-                     overwrite: bool = False) -> BackendDef:
+                     overwrite: bool = False,
+                     fallback_rank: Optional[int] = None) -> BackendDef:
     """Register an execution backend under ``name``.
 
     ``build(ctx: PlanContext) -> run(x)`` constructs the executable;
     ``price(pctx) -> Optional[float]`` (optional) makes it an auto-selection
     candidate; ``unit`` classifies it for Decision bookkeeping ("vector" or
     "matrix" -- the predicted matrix-vs-vector speedup considers only
-    matrix-unit candidates).  Re-registering an existing name raises unless
-    ``overwrite``.
+    matrix-unit candidates); ``fallback_rank`` (optional) places it on the
+    guard layer's degradation ladder (see :func:`fallback_ladder`).
+    Re-registering an existing name raises unless ``overwrite``.
     """
     global _generation
     if name == "auto":
@@ -146,7 +154,8 @@ def register_backend(name: str, build: Callable, price: Callable = None,
         raise ValueError(f"backend {name!r} already registered "
                          "(pass overwrite=True to replace)")
     bd = BackendDef(name=name, build=build, price=price,
-                    description=description, unit=unit)
+                    description=description, unit=unit,
+                    fallback_rank=fallback_rank)
     _REGISTRY[name] = bd
     _generation += 1
     return bd
@@ -188,6 +197,27 @@ def priced_candidates(pctx) -> Dict[str, float]:
 def candidate_units() -> Dict[str, Optional[str]]:
     """Registered name -> unit classification ("vector"/"matrix"/None)."""
     return {name: bd.unit for name, bd in _REGISTRY.items()}
+
+
+def fallback_ladder(after: Optional[str] = None) -> Tuple[str, ...]:
+    """Ranked backends in degradation order (most aggressive first).
+
+    ``after=name`` returns only the rungs strictly more conservative than
+    ``name`` -- the remaining ladder once ``name`` has failed.  A backend
+    with no rank (foils, plug-ins) yields the FULL ladder: an unranked
+    regime that fails falls back onto the standard sequence from the top.
+    """
+    ranked = sorted((bd for bd in _REGISTRY.values()
+                     if bd.fallback_rank is not None),
+                    key=lambda bd: bd.fallback_rank)
+    names = tuple(bd.name for bd in ranked)
+    if after is None:
+        return names
+    cut = _REGISTRY.get(after)
+    if cut is None or cut.fallback_rank is None:
+        return names
+    return tuple(bd.name for bd in ranked
+                 if bd.fallback_rank > cut.fallback_rank)
 
 
 # ---------------------------------------------------------------------------
@@ -354,23 +384,28 @@ def _price_fused_matmul_reuse(p):
                                 p.w_tile or None).actual_flops
 
 
+# Fallback ranks order the degradation ladder from most aggressive (deep
+# fusion, MXU, VMEM-hungry) to most conservative (reference oracle): each
+# rung drops one source of fragility -- intermediate reuse, then the MXU,
+# then temporal fusion, then halo-row sub-blocking, then Pallas entirely.
 register_backend("direct", _build_direct, _price_direct,
                  "t sequential VPU kernel steps (halo r per step)",
-                 unit="vector")
+                 unit="vector", fallback_rank=50)
 register_backend("fused_direct", _build_fused_direct, _price_fused_direct,
                  "one VPU kernel, t in-VMEM steps (temporal fusion)",
-                 unit="vector")
+                 unit="vector", fallback_rank=40)
 register_backend("matmul", _build_matmul, _price_matmul,
-                 "t sequential MXU banded contractions", unit="matrix")
+                 "t sequential MXU banded contractions", unit="matrix",
+                 fallback_rank=30)
 register_backend("fused_matmul", _build_fused_matmul, _price_fused_matmul,
                  "monolithic fusion: one radius-t*r banded contraction",
-                 unit="matrix")
+                 unit="matrix", fallback_rank=20)
 register_backend("fused_matmul_reuse", _build_fused_matmul_reuse,
                  _price_fused_matmul_reuse,
                  "one MXU kernel, t radius-r contractions, VMEM intermediates",
-                 unit="matrix")
+                 unit="matrix", fallback_rank=10)
 register_backend("reference", _build_reference,
-                 description="pure-jnp oracle (debug)")
+                 description="pure-jnp oracle (debug)", fallback_rank=1000)
 register_backend("legacy_direct", _build_legacy_direct,
                  description="seed 9-tile VPU scheme (benchmark foil)",
                  unit="vector")
@@ -382,14 +417,18 @@ register_backend("legacy_matmul", _build_legacy_matmul,
 # sub-blocking disabled, unpriced so they never win selection -- they exist
 # so benchmarks/traffic.py can measure seed / whole-strip / sub-blocked
 # three ways and tests can assert bit-for-bit substrate equivalence.
-for _name, _build, _unit in (
-    ("direct", _build_direct, "vector"),
-    ("fused_direct", _build_fused_direct, "vector"),
-    ("matmul", _build_matmul, "matrix"),
-    ("fused_matmul", _build_fused_matmul, "matrix"),
-    ("fused_matmul_reuse", _build_fused_matmul_reuse, "matrix"),
+# The direct-family wholestrip foils also serve as the ladder's
+# penultimate rungs (DESIGN.md §11): after every sub-blocked regime has
+# failed, the 3-load substrate drops halo-row sub-blocking -- the last
+# Pallas configuration before surrendering to the reference oracle.
+for _name, _build, _unit, _rank in (
+    ("direct", _build_direct, "vector", 60),
+    ("fused_direct", _build_fused_direct, "vector", 55),
+    ("matmul", _build_matmul, "matrix", None),
+    ("fused_matmul", _build_fused_matmul, "matrix", None),
+    ("fused_matmul_reuse", _build_fused_matmul_reuse, "matrix", None),
 ):
     register_backend(f"{_name}_wholestrip", _wholestrip(_build),
                      description=f"{_name} on the whole-strip 3-load "
                                  "substrate (benchmark foil)",
-                     unit=_unit)
+                     unit=_unit, fallback_rank=_rank)

@@ -24,8 +24,8 @@ from repro.models import layers as nn_layers
 from repro.models import transformer, rwkv_model
 
 
-def main():
-    ap = argparse.ArgumentParser()
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(prog="repro.launch.serve")
     ap.add_argument("--arch", default="llama3.2-1b", choices=sorted(ARCHS))
     ap.add_argument("--smoke", action="store_true", default=True)
     ap.add_argument("--batch", type=int, default=4)
@@ -33,7 +33,25 @@ def main():
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--check", action="store_true",
                     help="verify cached decode == uncached forward argmax")
-    args = ap.parse_args()
+    return ap
+
+
+def parse_args(argv=None) -> argparse.Namespace:
+    ap = build_parser()
+    args = ap.parse_args(argv)
+    # Reject degenerate loop bounds up front: --prompt-len 0 would leave
+    # the prefill loop body unexecuted and crash on the undefined next
+    # token; --gen 0 similarly empties the decode loop.  ap.error exits
+    # with a usage message and status 2, the argparse convention.
+    for name in ("batch", "prompt_len", "gen"):
+        value = getattr(args, name)
+        if value < 1:
+            ap.error(f"--{name.replace('_', '-')} must be >= 1, got {value}")
+    return args
+
+
+def main(argv=None):
+    args = parse_args(argv)
 
     cfg = (SMOKE if args.smoke else ARCHS)[args.arch]
     if cfg.family in ("whisper", "vlm", "hybrid", "moe"):
@@ -52,7 +70,6 @@ def main():
     # family-agnostic; transformer families also have a batched prefill)
     caches = model.init_caches(B, max_seq)
     t0 = time.perf_counter()
-    tok = jnp.asarray(prompts[:, :1])
     for i in range(P):
         nxt, caches = serve(params, caches, jnp.asarray(prompts[:, i:i+1]),
                             jnp.asarray(i, jnp.int32))

@@ -80,6 +80,10 @@ def _halo_exchange_dim(x: jax.Array, dim: int, radius: int, axis_name: str) -> j
 
 def _extend(x: jax.Array, radius: int, dim_axis_names: Sequence[Optional[str]]) -> jax.Array:
     """Halo-extend every dim: ppermute when sharded, periodic pad when local."""
+    # Fault-injection hook (repro.testing.faults): models a failed
+    # ppermute ring at trace time.  No-op unless armed.
+    from repro.testing.faults import maybe_fail
+    maybe_fail("halo")
     for dim, axis_name in enumerate(dim_axis_names):
         if axis_name is None:
             pad = [(0, 0)] * x.ndim
@@ -153,6 +157,7 @@ def pallas_local_apply(
     z_block: Optional[int] = None,
     w_tile: Optional[int] = None,
     w_block: Optional[int] = None,
+    guard: bool = False,
 ) -> Callable:
     """Build a ``local_apply`` plug-in running the strip-mined Pallas kernels.
 
@@ -178,6 +183,14 @@ def pallas_local_apply(
     still exceeds VMEM (``None`` = auto: full width whenever it fits the
     budget); the column walk's wrap is as harmless as the row wrap -- it
     only pollutes the discarded halo ring.
+
+    ``guard=True`` builds the per-shard plan through the guarded
+    execution layer (``repro.kernels.guard``, DESIGN.md §11): a kernel
+    failure walks the degradation ladder instead of crashing the
+    stepper.  The ladder is a pure function of the plan signature and
+    process env -- every shard sees the same (block shape, depth, env)
+    signature, so all shards land on the SAME fallback rung without
+    communicating.
     """
     import numpy as _np
 
@@ -195,10 +208,16 @@ def pallas_local_apply(
         if xe.ndim == 3:
             kw.update(z_slab=z_slab if z_slab is not None else xe.shape[0],
                       z_block=z_block)
-        plan = stencil_plan(
-            wn, xe.shape, xe.dtype, steps, backend=backend,
-            interpret=interpret, **kw,
-        )
+        if guard:
+            from repro.kernels.guard import guarded_stencil_plan
+            plan = guarded_stencil_plan(
+                wn, xe.shape, xe.dtype, steps, backend=backend,
+                interpret=interpret, **kw)
+        else:
+            plan = stencil_plan(
+                wn, xe.shape, xe.dtype, steps, backend=backend,
+                interpret=interpret, **kw,
+            )
         full = plan(xe)
         if not h:
             return full

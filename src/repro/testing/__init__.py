@@ -1,0 +1,28 @@
+"""Test-support utilities shipped with the library (fault injection).
+
+Lives under ``repro`` (not ``tests/``) because the CI fault-matrix legs
+and ``scripts/fault_sweep.py`` need it importable from an installed
+tree, and because the injection points inside the kernels must import it
+unconditionally.
+"""
+from .faults import (  # noqa: F401
+    FaultSpec,
+    active_faults,
+    corrupt_output,
+    fault_hits,
+    inject,
+    maybe_fail,
+    parse_faults,
+    reset_faults,
+)
+
+__all__ = [
+    "FaultSpec",
+    "active_faults",
+    "corrupt_output",
+    "fault_hits",
+    "inject",
+    "maybe_fail",
+    "parse_faults",
+    "reset_faults",
+]

@@ -1,0 +1,40 @@
+"""Serve CLI argument validation: degenerate loop bounds must die with a
+usage error, not an UnboundLocalError deep in the prefill loop."""
+import pytest
+
+from repro.launch.serve import build_parser, parse_args
+
+
+class TestServeArgValidation:
+    @pytest.mark.parametrize("flag,value", [
+        ("--batch", "0"), ("--batch", "-1"),
+        ("--prompt-len", "0"), ("--prompt-len", "-3"),
+        ("--gen", "0"), ("--gen", "-2"),
+    ])
+    def test_non_positive_bounds_exit_with_usage_error(self, flag, value,
+                                                       capsys):
+        with pytest.raises(SystemExit) as ei:
+            parse_args([flag, value])
+        assert ei.value.code == 2                      # argparse convention
+        err = capsys.readouterr().err
+        assert "must be >= 1" in err
+        assert flag in err
+
+    def test_valid_bounds_parse(self):
+        args = parse_args(["--batch", "2", "--prompt-len", "4", "--gen", "8"])
+        assert (args.batch, args.prompt_len, args.gen) == (2, 4, 8)
+        assert args.arch == "llama3.2-1b"
+
+    def test_non_integer_rejected_by_argparse(self, capsys):
+        with pytest.raises(SystemExit) as ei:
+            parse_args(["--batch", "two"])
+        assert ei.value.code == 2
+
+    def test_parser_has_no_side_effects(self):
+        # build_parser is importable without touching jax/model state, so
+        # CLI docs/tests can introspect flags cheaply
+        ap = build_parser()
+        flags = {a.option_strings[0] for a in ap._actions
+                 if a.option_strings}
+        assert {"--batch", "--prompt-len", "--gen",
+                "--arch", "--check"} <= flags
