@@ -74,4 +74,45 @@ print(f"verify: {len(cases)} 3D traffic case(s) in {path}, "
       f"{len(wide)} wide case(s), column-tiled < whole-width foil; "
       "guard event log clean")
 EOF
+
+# Serving gate (DESIGN.md §12): the batched engine must beat per-request
+# dispatch on identical traffic, bitwise-equal, with P50/P99 freshly
+# measured into BENCH_serving.json, and the plan cache must prove the
+# sharing contract -- at least (requests - distinct signatures) hits.
+python benchmarks/serving.py ${BENCH_QUICK:+--quick}
+
+python - <<'EOF'
+import json, os
+path = "BENCH_serving.json"
+assert os.path.getmtime(path) >= os.path.getmtime(os.environ["BENCH_STAMP"]), \
+    f"{path} was not rewritten by this run (serving benchmark failed?)"
+with open(path) as f:
+    d = json.load(f)
+seq, bat = d["sequential"], d["batched"]
+assert bat["requests_per_s"] > seq["requests_per_s"], \
+    (f"batched engine lost to per-request dispatch: "
+     f"{bat['requests_per_s']:.0f} <= {seq['requests_per_s']:.0f} req/s")
+assert d["bitwise_match"], "batched responses diverged from unbatched plans"
+lat = bat["latency"]
+for k in ("p50_ms", "p99_ms"):
+    assert lat.get(k, 0) > 0, f"batched latency {k} missing or zero"
+assert bat["failed"] == 0, f"{bat['failed']} serving request(s) failed"
+assert bat["responded"] == bat["submitted"], \
+    f"lost requests: responded {bat['responded']} != submitted {bat['submitted']}"
+# Plan-sharing contract: every request past the first per signature must
+# hit the cache (sequential side alone guarantees this many hits; the
+# engine's (signature, bucket) plans add more).
+pc = d["plan_cache"]
+need = seq["requests"] - len(d["signatures"])
+assert pc["hits_delta"] >= need, \
+    f"plan cache hits {pc['hits_delta']} < requests - signatures = {need}"
+guard = d["guard_events"]
+assert guard.get("events", []) == [], \
+    f"serving batch degraded on a clean run: {guard['events']}"
+assert guard.get("dropped", 0) == 0, "guard event ring buffer overflowed"
+print(f"verify: serving {bat['requests_per_s']:.0f} req/s batched vs "
+      f"{seq['requests_per_s']:.0f} sequential ({d['speedup']:.2f}x), "
+      f"P50 {lat['p50_ms']:.1f} ms P99 {lat['p99_ms']:.1f} ms, "
+      f"{pc['hits_delta']} plan-cache hits, bitwise OK")
+EOF
 rm -f "$BENCH_STAMP"

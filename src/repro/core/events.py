@@ -23,6 +23,9 @@ class EventLog:
 
     def __init__(self, capacity: int = _CAPACITY):
         self._capacity = int(capacity)
+        if self._capacity < 1:
+            raise ValueError(
+                f"EventLog capacity must be >= 1, got {capacity}")
         self._buf: deque = deque(maxlen=self._capacity)
         self._lock = threading.Lock()
         self._seq = 0

@@ -1196,6 +1196,29 @@ def _slab_coltiled_call(compute, x, geom, halo, x_halo, interpret, consts,
     return y if aligned else y[..., :n]
 
 
+def fold_batch(run, mode: str):
+    """Fold a leading batch axis through a single-grid runner (DESIGN.md
+    §12): the returned callable consumes ``(B,) + grid_shape`` and is
+    bitwise-equal to stacking ``B`` calls of ``run``.
+
+    ``mode="vmap"`` batches the kernels themselves -- Pallas's batching
+    rule prepends a batch grid dimension, so one launch covers the whole
+    bucket (the right shape on real hardware, where the extra grid
+    dimension is free).  ``mode="map"`` scans ``run`` over the batch
+    inside one jitted computation -- per-request VMEM working set and
+    numerics are IDENTICAL to the unbatched plan, and the host dispatch +
+    sync cost is paid once per bucket instead of once per request (the
+    right shape under interpret mode, where emulated kernels make Python
+    dispatch the bottleneck).  The serving engine picks via the plan's
+    ``batch_mode`` ("auto" resolves per DESIGN.md §12).
+    """
+    if mode == "vmap":
+        return jax.vmap(run)
+    if mode == "map":
+        return lambda xb: jax.lax.map(run, xb)
+    raise ValueError(f"fold_batch mode must be 'vmap' or 'map', got {mode!r}")
+
+
 def substrate_read_amp(strip_m: int, h_block: int) -> float:
     """Analytic grid-read amplification of one kernel launch.
 

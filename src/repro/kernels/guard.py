@@ -377,6 +377,14 @@ class GuardedPlan:
         return self._plan.grid_shape
 
     @property
+    def batch(self):
+        return self._plan.batch
+
+    @property
+    def input_shape(self):
+        return self._plan.input_shape
+
+    @property
     def decision(self):
         return self._plan.decision
 
@@ -414,7 +422,7 @@ class GuardedPlan:
         return self._checked(x)
 
     def __call__(self, x: jax.Array) -> jax.Array:
-        if tuple(x.shape) != self._plan.grid_shape:
+        if tuple(x.shape) != self._plan.input_shape:
             # caller bug, not a kernel failure: propagate raw
             return self._plan(x)
         tracing = isinstance(x, jax.core.Tracer)
@@ -467,7 +475,14 @@ def guarded_stencil_plan(spec_or_weights, grid_shape, dtype, t: int = 1,
 
     Raw argument errors (bad ``t``, rank mismatch, unknown backend) raise
     immediately and unguarded -- the ladder only absorbs *kernel*
-    failures, never caller bugs."""
+    failures, never caller bugs.
+
+    ``batch=B`` plans are guarded per-batch (DESIGN.md §12): a failing
+    rung demotes the WHOLE bucket -- every request in it -- and the
+    degraded rung re-executes the full batched input, so no request is
+    ever answered from a half-failed launch.  The ``batch``/``batch_mode``
+    kwargs ride through every rung unchanged (only geometry pins are
+    dropped on the degraded rung)."""
     # the raw-argument gate: validates before any rung is attempted
     _plan.plan_signature(spec_or_weights, grid_shape, dtype, t,
                          **{k: v for k, v in kwargs.items()

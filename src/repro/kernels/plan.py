@@ -18,16 +18,25 @@ single jitted callable, so repeated calls hit XLA's compile cache and
 never re-enter selection, sizing, or weight composition.
 
 Plans are cached process-wide, keyed on the full execution signature
-(weights digest, grid shape, dtype, t, hardware, tiling, interpret,
-compute dtype, sharding, backend override) with hit/miss counters
-(:func:`plan_cache_stats`).  ``repro.kernels.ops.stencil_apply`` survives
-as a thin wrapper that builds-or-fetches a plan per call.
+(weights digest, grid shape, dtype, t, hardware, tiling, batch axis,
+interpret, compute dtype, sharding, backend override) with hit/miss
+counters (:func:`plan_cache_stats`).  ``repro.kernels.ops.stencil_apply``
+survives as a thin wrapper that builds-or-fetches a plan per call.
+
+``stencil_plan(..., batch=B)`` folds a leading batch axis through the
+kernels (DESIGN.md §12): one plan invocation advances ``B`` independent
+grids of the SAME geometry, bitwise-equal to a loop of ``B`` unbatched
+invocations.  The serving engine (``repro.serve``) is the intended
+client -- it coalesces queued requests by plan signature and dispatches
+one batched launch per bucket.  Cache mutation is lock-protected: the
+engine builds and fetches plans from worker threads.
 """
 from __future__ import annotations
 
 import hashlib
+import threading
 import time
-from typing import Optional, Sequence, Tuple, Union
+from typing import Dict, Optional, Sequence, Tuple, Union
 
 import jax
 import numpy as np
@@ -96,10 +105,12 @@ class StencilPlan:
     def __init__(self, *, spec, weights, grid_shape, dtype, t, hw, backend,
                  decision, fn, tile_m, tile_n, interpret, compute_dtype,
                  mesh=None, shard_spec=None, dist_mode=None, halo_plan=None,
-                 key=None, build_time_s=0.0):
+                 key=None, build_time_s=0.0, batch=None, batch_mode=None):
         self.spec = spec
         self.weights = weights
         self.grid_shape = grid_shape
+        self.batch = batch
+        self.batch_mode = batch_mode
         self.dtype = dtype
         self.t = t
         self.hw = hw
@@ -118,11 +129,20 @@ class StencilPlan:
         self.build_time_s = build_time_s
 
     # -- execution ------------------------------------------------------
+    @property
+    def input_shape(self) -> Tuple[int, ...]:
+        """The array shape one invocation consumes: ``grid_shape`` for an
+        unbatched plan, ``(batch,) + grid_shape`` for a batched one."""
+        if self.batch is None:
+            return self.grid_shape
+        return (self.batch,) + self.grid_shape
+
     def __call__(self, x: jax.Array) -> jax.Array:
-        if tuple(x.shape) != self.grid_shape:
+        if tuple(x.shape) != self.input_shape:
             raise ValueError(
-                f"plan was built for grid {self.grid_shape}, got {x.shape}; "
-                "build a new plan for a new geometry")
+                f"plan was built for input {self.input_shape} "
+                f"(grid {self.grid_shape}, batch {self.batch}), got "
+                f"{x.shape}; build a new plan for a new geometry")
         return self.fn(x)
 
     def step(self, x: jax.Array) -> jax.Array:
@@ -143,7 +163,9 @@ class StencilPlan:
         d = self.decision
         lines = [
             f"StencilPlan {self.spec.name} t={self.t} grid={self.grid_shape} "
-            f"dtype={np.dtype(self.dtype).name} on {self.hw.name}",
+            + ("" if self.batch is None
+               else f"batch={self.batch} ({self.batch_mode}) ")
+            + f"dtype={np.dtype(self.dtype).name} on {self.hw.name}",
             f"  executes : {self.backend}"
             + ("" if self.backend == d.backend
                else f" (override; auto would pick {d.backend})"),
@@ -164,16 +186,27 @@ class StencilPlan:
     def __repr__(self) -> str:
         return (f"StencilPlan({self.spec.name}, t={self.t}, "
                 f"grid={self.grid_shape}, backend={self.backend!r}, "
-                f"distributed={self.mesh is not None})")
+                + ("" if self.batch is None else f"batch={self.batch}, ")
+                + f"distributed={self.mesh is not None})")
 
 
 # ---------------------------------------------------------------------------
 # Plan cache: bounded LRU (plans pin weights, jitted executables, and --
 # for distributed plans -- the mesh, so a long-running server sweeping
 # geometries must not grow without bound).
+#
+# One re-entrant lock serializes every cache/counter mutation: the serving
+# engine (repro.serve.engine) builds and fetches plans from dispatcher
+# threads, and the guard ladder mutates the negative registry from
+# whichever thread hit the failure.  Plan BUILDING stays outside the lock
+# (it traces and jits -- seconds, not microseconds); two threads racing to
+# build the same signature both build, the second insert wins, and the
+# counters stay consistent (hits + misses == lookups).
 # ---------------------------------------------------------------------------
 import os
 from collections import OrderedDict
+
+_LOCK = threading.RLock()
 
 #: Default maximum cached plans; least-recently-used entries are evicted
 #: beyond the bound.  Override per process with the REPRO_PLAN_CACHE_SIZE
@@ -209,25 +242,29 @@ def plan_cache_max() -> int:
 
 def plan_cache_stats() -> dict:
     """Cache + guard counters: hits/misses/size plus ``build_failures``,
-    ``exec_failures``, ``fallbacks``, ``negative_hits``, ``negative_size``."""
-    out = dict(_STATS)
-    out["size"] = len(_CACHE)
-    out["negative_size"] = len(_NEGATIVE)
+    ``exec_failures``, ``fallbacks``, ``negative_hits``, ``negative_size``.
+    The snapshot is atomic -- taken under the cache lock."""
+    with _LOCK:
+        out = dict(_STATS)
+        out["size"] = len(_CACHE)
+        out["negative_size"] = len(_NEGATIVE)
     return out
 
 
 def clear_plan_cache() -> None:
     global _churn
-    _CACHE.clear()
-    _NEGATIVE.clear()
-    _churn = 0
-    for k in _STATS:
-        _STATS[k] = 0
+    with _LOCK:
+        _CACHE.clear()
+        _NEGATIVE.clear()
+        _churn = 0
+        for k in _STATS:
+            _STATS[k] = 0
 
 
 def _tick_churn() -> None:
     """Advance the expiry clock and drop negative entries older than one
-    full cache turnover (``plan_cache_max()`` insertions)."""
+    full cache turnover (``plan_cache_max()`` insertions).  Callers must
+    hold ``_LOCK``."""
     global _churn
     _churn += 1
     bound = plan_cache_max()
@@ -244,49 +281,92 @@ def note_plan_failure(key, cause: str, backend: str,
 
     The failed plan itself is evicted from the LRU -- a failed build or a
     plan whose execution raised must never be served again."""
-    discard_plan(key)
-    _STATS["build_failures" if stage == "build" else "exec_failures"] += 1
-    _NEGATIVE[key] = {"cause": cause, "backend": backend, "stamp": _churn}
-    _NEGATIVE.move_to_end(key)
-    _tick_churn()
+    with _LOCK:
+        _CACHE.pop(key, None)
+        _STATS["build_failures" if stage == "build" else "exec_failures"] += 1
+        _NEGATIVE[key] = {"cause": cause, "backend": backend, "stamp": _churn}
+        _NEGATIVE.move_to_end(key)
+        _tick_churn()
 
 
 def failed_plan(key):
     """The negative entry for ``key`` if present and unexpired, else None.
     A hit counts toward ``negative_hits`` -- it means the guard skipped a
     known-doomed rung."""
-    entry = _NEGATIVE.get(key)
-    if entry is None:
-        return None
-    if _churn - entry["stamp"] > plan_cache_max():
-        del _NEGATIVE[key]
-        return None
-    _STATS["negative_hits"] += 1
-    return dict(entry)
+    with _LOCK:
+        entry = _NEGATIVE.get(key)
+        if entry is None:
+            return None
+        if _churn - entry["stamp"] > plan_cache_max():
+            del _NEGATIVE[key]
+            return None
+        _STATS["negative_hits"] += 1
+        return dict(entry)
 
 
 def discard_plan(key) -> bool:
     """Evict ``key`` from the plan LRU (no-op if absent)."""
-    return _CACHE.pop(key, None) is not None
+    with _LOCK:
+        return _CACHE.pop(key, None) is not None
 
 
 def record_fallback() -> None:
     """One degradation-ladder move (guard layer bookkeeping)."""
-    _STATS["fallbacks"] += 1
+    with _LOCK:
+        _STATS["fallbacks"] += 1
+
+
+#: dtype -> canonical name memo.  ``np.dtype(dt).name`` walks numpy's
+#: dtype-printing machinery (~5us); on the serving submit path that is
+#: paid per REQUEST, so the handful of dtypes a process ever sees are
+#: cached.  Keys are the raw ``dt`` arguments (dtype objects, scalar
+#: types, strings -- all hashable and all stable aliases of their name).
+_DTYPE_NAMES: Dict = {}
+
+
+def _dtype_name(dt) -> str:
+    name = _DTYPE_NAMES.get(dt)
+    if name is None:
+        name = _DTYPE_NAMES[dt] = np.dtype(dt).name
+    return name
 
 
 def _weights_key(w: np.ndarray) -> Tuple:
     digest = hashlib.sha1(np.ascontiguousarray(w).tobytes()).hexdigest()
-    return (w.shape, str(w.dtype), digest)
+    return (w.shape, _dtype_name(w.dtype), digest)
 
 
 def _dtype_key(dt) -> str:
-    return np.dtype(dt).name
+    return _dtype_name(dt)
 
 
 # ---------------------------------------------------------------------------
 # Plan construction
 # ---------------------------------------------------------------------------
+#: How a batched plan folds its leading batch axis (DESIGN.md §12):
+#:   "vmap" -- jax.vmap over the single-grid runner (Pallas prepends a
+#:            batch grid dimension: one launch covers the batch);
+#:   "map"  -- jax.lax.map (a scanned loop of the single-grid runner
+#:            inside ONE jitted computation: per-request VMEM working set
+#:            identical to the unbatched plan, dispatch paid once);
+#:   "auto" -- "map" under interpret mode (the scan amortizes Python
+#:            dispatch, which dominates emulated kernels), "vmap" when
+#:            compiling for real hardware (the batched grid dimension is
+#:            free there).
+#: Both are bitwise-equal to a loop of unbatched plans -- the equivalence
+#: sweep in tests/test_serve_batch.py asserts it per backend/dtype/rank.
+BATCH_MODES = ("auto", "vmap", "map")
+
+
+def _resolve_batch_mode(batch_mode: str, interpret: bool) -> str:
+    if batch_mode not in BATCH_MODES:
+        raise ValueError(f"batch_mode must be one of {BATCH_MODES}, "
+                         f"got {batch_mode!r}")
+    if batch_mode == "auto":
+        return "map" if interpret else "vmap"
+    return batch_mode
+
+
 def plan_signature(
     spec_or_weights: Union[StencilSpec, np.ndarray],
     grid_shape: Sequence[int],
@@ -305,6 +385,8 @@ def plan_signature(
     z_block: Optional[int] = None,
     w_tile: Optional[int] = None,
     w_block: Optional[int] = None,
+    batch: Optional[int] = None,
+    batch_mode: str = "auto",
     interpret: Optional[bool] = None,
     compute_dtype=None,
 ) -> Tuple:
@@ -321,6 +403,15 @@ def plan_signature(
     """
     if t < 1:
         raise ValueError(f"fusion depth must be >= 1, got {t}")
+    if batch is not None:
+        if int(batch) < 1:
+            raise ValueError(f"batch must be >= 1, got {batch}")
+        batch = int(batch)
+        if mesh is not None:
+            raise ValueError(
+                "batched plans do not compose with distributed meshes yet; "
+                "shard the request stream across hosts instead "
+                "(repro.serve coalesces per host)")
     if backend is not None:
         registry.get_backend(backend)          # fail fast on unknown names
     if mesh is not None and shard_spec is None:
@@ -338,6 +429,11 @@ def plan_signature(
             "the plan's grid_shape must match the stencil dimensionality")
     if interpret is None:
         interpret = _default_interpret()
+    # The RESOLVED fold mode lands in the key (pure: a function of the
+    # arguments + resolved interpret), so "auto" on CPU and an explicit
+    # "map" share one plan while "vmap" plans never alias them.
+    batch_key = None if batch is None \
+        else (batch, _resolve_batch_mode(batch_mode, interpret))
 
     shard_key = None
     if mesh is not None:
@@ -350,7 +446,7 @@ def plan_signature(
     from .common import vmem_budget_bytes
     key = (_weights_key(weights), grid_shape, _dtype_key(dtype), t, hw,
            shard_key, backend, tile_m, tile_n, h_block, z_slab, z_block,
-           w_tile, w_block, vmem_budget_bytes(), interpret,
+           w_tile, w_block, batch_key, vmem_budget_bytes(), interpret,
            None if compute_dtype is None else _dtype_key(compute_dtype),
            registry.generation())
     return key, weights, grid_shape, interpret
@@ -374,6 +470,8 @@ def stencil_plan(
     z_block: Optional[int] = None,
     w_tile: Optional[int] = None,
     w_block: Optional[int] = None,
+    batch: Optional[int] = None,
+    batch_mode: str = "auto",
     interpret: Optional[bool] = None,
     compute_dtype=None,
     use_cache: bool = True,
@@ -406,6 +504,13 @@ def stencil_plan(
         auto -- full width whenever it fits the VMEM budget, ``0`` pins
         full width); part of the cache key, as is the effective VMEM
         budget (``REPRO_VMEM_BUDGET``) the auto sizing consulted.
+      batch: when given, the plan consumes ``(batch,) + grid_shape`` and
+        advances ``batch`` independent grids per invocation, bitwise-equal
+        to a loop of unbatched plans (DESIGN.md §12).  Geometry sizing and
+        selection stay per-grid -- the batch axis never widens the VMEM
+        working set of a "map" plan.  Part of the cache key.
+      batch_mode: how the batch axis folds -- see :data:`BATCH_MODES`
+        ("auto" = "map" under interpret, "vmap" compiled).
       interpret: Pallas interpret mode; ``None`` = off-TPU default.
       use_cache: bypass the process-wide plan cache when ``False``.
     """
@@ -414,12 +519,14 @@ def stencil_plan(
         shard_spec=shard_spec, dist_mode=dist_mode, backend=backend,
         tile_m=tile_m, tile_n=tile_n, h_block=h_block, z_slab=z_slab,
         z_block=z_block, w_tile=w_tile, w_block=w_block,
+        batch=batch, batch_mode=batch_mode,
         interpret=interpret, compute_dtype=compute_dtype)
-    if use_cache and key in _CACHE:
-        _STATS["hits"] += 1
-        _CACHE.move_to_end(key)
-        return _CACHE[key]
-    _STATS["misses"] += 1
+    with _LOCK:
+        if use_cache and key in _CACHE:
+            _STATS["hits"] += 1
+            _CACHE.move_to_end(key)
+            return _CACHE[key]
+        _STATS["misses"] += 1
 
     t0 = time.perf_counter()
     spec = spec_from_weights(weights)
@@ -450,8 +557,13 @@ def stencil_plan(
     )
 
     halo_plan = None
+    resolved_mode = None
     if mesh is None:
         run = registry.get_backend(exec_backend).build(ctx)
+        if batch is not None:
+            from .common import fold_batch
+            resolved_mode = _resolve_batch_mode(batch_mode, interpret)
+            run = fold_batch(run, resolved_mode)
         fn = jax.jit(run)
     else:
         fn, halo_plan = _build_distributed(
@@ -466,16 +578,19 @@ def stencil_plan(
         dist_mode=dist_mode if mesh is not None else None,
         halo_plan=halo_plan, key=key,
         build_time_s=time.perf_counter() - t0,
+        batch=None if batch is None else int(batch),
+        batch_mode=resolved_mode,
     )
     if use_cache:
-        # Read (and validate) the bound BEFORE inserting: a malformed
-        # REPRO_PLAN_CACHE_SIZE must never leave the cache growing with
-        # eviction disabled.
-        bound = plan_cache_max()
-        _CACHE[key] = plan
-        while len(_CACHE) > bound:
-            _CACHE.popitem(last=False)
-        _tick_churn()
+        with _LOCK:
+            # Read (and validate) the bound BEFORE inserting: a malformed
+            # REPRO_PLAN_CACHE_SIZE must never leave the cache growing with
+            # eviction disabled.
+            bound = plan_cache_max()
+            _CACHE[key] = plan
+            while len(_CACHE) > bound:
+                _CACHE.popitem(last=False)
+            _tick_churn()
     return plan
 
 

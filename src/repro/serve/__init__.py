@@ -1,0 +1,31 @@
+"""repro.serve: batched plan-sharing serving engine (DESIGN.md §12).
+
+Production stencil traffic is many concurrent small problems sharing a
+handful of plan signatures -- the same amortization problem the paper's
+profitability criteria solve one level down.  This package executes
+millions of requests through a handful of compiled plans:
+
+  * ``coalesce``  -- group queued requests by plan signature and pad them
+    into power-of-two batch buckets (``repro.serve.coalesce``);
+  * ``StencilServer`` -- the async engine: ``submit`` returns a future,
+    a dispatcher thread runs batched guarded plans, and
+    ``jax.block_until_ready`` fires only at response boundaries
+    (``repro.serve.engine``);
+  * ``ServeMetrics`` -- requests/s, batch occupancy, and P50/P99 latency
+    histograms (``repro.serve.metrics``), dumped to BENCH_serving.json by
+    ``benchmarks/serving.py``.
+
+Knobs: ``REPRO_SERVE_BUCKETS``, ``REPRO_SERVE_MAX_BATCH``,
+``REPRO_SERVE_QUEUE_TIMEOUT_MS`` (all via ``repro.core.envutil``).
+"""
+from .coalesce import (Batch, ServeRequest, choose_bucket, coalesce,
+                       serve_buckets, serve_max_batch,
+                       serve_queue_timeout_ms, stack_batch)
+from .engine import StencilServer
+from .metrics import LatencyHistogram, ServeMetrics
+
+__all__ = [
+    "Batch", "LatencyHistogram", "ServeMetrics", "ServeRequest",
+    "StencilServer", "choose_bucket", "coalesce", "serve_buckets",
+    "serve_max_batch", "serve_queue_timeout_ms", "stack_batch",
+]

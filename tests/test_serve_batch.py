@@ -1,0 +1,120 @@
+"""Batched plan equivalence: ``stencil_plan(..., batch=B)`` must be
+BITWISE-equal to a loop of unbatched plans -- across rank, stencil shape,
+dtype, batch size and both fold modes.  This is the contract the serving
+engine's throughput claim stands on (DESIGN.md §12): batching that
+changed a single bit would be a different computation, not an
+optimization.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import clear_plan_cache, plan_cache_stats, stencil_plan
+from repro.kernels.plan import BATCH_MODES, _resolve_batch_mode, plan_signature
+from repro.stencil import StencilSpec, jacobi_weights
+
+#: (dim, grid, t): 3D stays at t=1 -- interpret-mode emulation makes deep
+#: 3D fusion the slowest thing in the suite and depth is orthogonal to
+#: the batch fold being tested.
+_GEOM = {2: ((16, 16), 2), 3: ((8, 8, 8), 1)}
+
+
+def _case(dim, shape, dtype_name):
+    spec = StencilSpec(shape, dim, 1)
+    w = jacobi_weights(spec)
+    grid, t = _GEOM[dim]
+    dt = jnp.bfloat16 if dtype_name == "bfloat16" else np.float32
+    rng = np.random.default_rng(dim * 7 + len(shape))
+    xs = jnp.asarray(rng.normal(size=(8,) + grid), dtype=dt)
+    return w, grid, t, xs
+
+
+class TestBatchedBitwiseSweep:
+    """The ISSUE-7 acceptance sweep: 2D/3D x box/star x f32/bf16 x
+    B in {1, 3, 8}, both fold modes, vs a loop of unbatched plans."""
+
+    @pytest.mark.parametrize("dtype_name", ["float32", "bfloat16"])
+    @pytest.mark.parametrize("shape", ["box", "star"])
+    @pytest.mark.parametrize("dim", [2, 3])
+    @pytest.mark.parametrize("mode", ["map", "vmap"])
+    @pytest.mark.parametrize("B", [1, 3, 8])
+    def test_batched_equals_unbatched_loop(self, dim, shape, dtype_name,
+                                           mode, B):
+        w, grid, t, xs = _case(dim, shape, dtype_name)
+        xb = xs[:B]
+        unbatched = stencil_plan(w, grid, xb.dtype, t)
+        want = np.stack([np.asarray(jax.block_until_ready(unbatched(x)))
+                         for x in xb])
+        batched = stencil_plan(w, grid, xb.dtype, t, batch=B,
+                               batch_mode=mode)
+        got = np.asarray(jax.block_until_ready(batched(xb)))
+        assert got.dtype == want.dtype
+        np.testing.assert_array_equal(got, want), \
+            f"{shape}-{dim}D {dtype_name} B={B} mode={mode}"
+
+
+class TestBatchedPlanShape:
+    def test_input_shape_and_rank_check(self):
+        w, grid, t, xs = _case(2, "box", "float32")
+        p = stencil_plan(w, grid, np.float32, t, batch=4)
+        assert p.input_shape == (4,) + grid
+        with pytest.raises(ValueError, match="built for input"):
+            p(xs[0])                          # unbatched input to batched plan
+
+    def test_unbatched_plan_rejects_batched_input(self):
+        w, grid, t, xs = _case(2, "box", "float32")
+        p = stencil_plan(w, grid, np.float32, t)
+        assert p.input_shape == grid
+        with pytest.raises(ValueError, match="built for input"):
+            p(xs[:4])
+
+    def test_explain_names_batch(self):
+        w, grid, t, _ = _case(2, "star", "float32")
+        p = stencil_plan(w, grid, np.float32, t, batch=8, batch_mode="map")
+        assert "batch=8" in p.explain() and "map" in p.explain()
+
+
+class TestBatchInCacheKey:
+    """The batch axis (and the RESOLVED fold mode) are part of the plan
+    signature: a batched plan must never be served where an unbatched one
+    was requested, and vmap/map plans must never alias."""
+
+    def _sig(self, **kw):
+        w = jacobi_weights(StencilSpec("box", 2, 1))
+        key, _, _, _ = plan_signature(w, (16, 16), np.float32, 2,
+                                      interpret=True, **kw)
+        return key
+
+    def test_batch_changes_key(self):
+        assert self._sig() != self._sig(batch=8)
+        assert self._sig(batch=4) != self._sig(batch=8)
+
+    def test_fold_mode_changes_key(self):
+        assert self._sig(batch=8, batch_mode="map") \
+            != self._sig(batch=8, batch_mode="vmap")
+
+    def test_auto_aliases_its_resolution(self):
+        # under interpret, auto == map (one plan, not two)
+        assert self._sig(batch=8, batch_mode="auto") \
+            == self._sig(batch=8, batch_mode="map")
+        assert _resolve_batch_mode("auto", True) == "map"
+        assert _resolve_batch_mode("auto", False) == "vmap"
+        assert set(BATCH_MODES) == {"auto", "vmap", "map"}
+
+    def test_cache_hit_on_batched_replan(self):
+        clear_plan_cache()
+        w, grid, t, _ = _case(2, "box", "float32")
+        p1 = stencil_plan(w, grid, np.float32, t, batch=8)
+        p2 = stencil_plan(w, grid, np.float32, t, batch=8)
+        assert p1 is p2
+        st = plan_cache_stats()
+        assert st["hits"] == 1 and st["misses"] == 1
+
+    def test_batch_validation(self):
+        w = jacobi_weights(StencilSpec("box", 2, 1))
+        with pytest.raises(ValueError, match="batch must be >= 1"):
+            stencil_plan(w, (16, 16), np.float32, 1, batch=0)
+        with pytest.raises(ValueError, match="batch_mode"):
+            stencil_plan(w, (16, 16), np.float32, 1, batch=2,
+                         batch_mode="scan")

@@ -1,0 +1,201 @@
+"""Coalescer properties (DESIGN.md §12) as DETERMINISTIC sweeps: the
+bucketing policy is a pure function of (requests, knobs), so every
+property is checked over seeded pseudo-random request sequences instead
+of hypothesis strategies -- same coverage intent, reproducible by
+construction, and no dependency on an optional package.
+"""
+import numpy as np
+import pytest
+
+from repro.core.envutil import env_int_list
+from repro.serve import (Batch, ServeRequest, choose_bucket, coalesce,
+                         serve_buckets, serve_max_batch,
+                         serve_queue_timeout_ms, stack_batch)
+from repro.serve.coalesce import (DEFAULT_BUCKETS, DEFAULT_MAX_BATCH,
+                                  DEFAULT_QUEUE_TIMEOUT_MS)
+
+
+def _req(sig, seq, grid=(4, 4), dtype=np.float32, fill=None):
+    """A minimal ServeRequest: the coalescer only reads .signature (and
+    stack_batch only .x), so everything else can be inert."""
+    x = np.full(grid, seq if fill is None else fill, dtype=dtype)
+    return ServeRequest(x=x, weights=None, grid_shape=grid, dtype=dtype,
+                        t=1, plan_kwargs={}, signature=sig, future=None,
+                        submit_s=0.0, seq=seq)
+
+
+def _stream(rng, n, n_sigs):
+    """A seeded interleaved request stream over n_sigs signatures."""
+    return [_req(("sig", int(k)), i)
+            for i, k in enumerate(rng.integers(0, n_sigs, size=n))]
+
+
+class TestChooseBucket:
+    def test_pads_to_next_allowed(self):
+        for n, want in [(1, 1), (2, 2), (3, 4), (5, 8), (8, 8), (9, 16),
+                        (17, 32), (33, 32)]:   # 33 > ladder: largest allowed
+            assert choose_bucket(n, DEFAULT_BUCKETS, 32) == want
+
+    def test_max_batch_filters_ladder(self):
+        assert choose_bucket(7, DEFAULT_BUCKETS, 4) == 4
+        assert choose_bucket(3, (1, 2, 4, 8), 8) == 4
+
+    def test_ladder_entirely_above_cap(self):
+        # no allowed bucket at all: batches are exactly the cap
+        assert choose_bucket(3, (64, 128), 16) == 16
+
+    def test_unsorted_duplicate_ladder(self):
+        assert choose_bucket(3, (8, 2, 8, 1, 4), 32) == 4
+
+    def test_n_below_one_raises(self):
+        with pytest.raises(ValueError, match=">= 1"):
+            choose_bucket(0, DEFAULT_BUCKETS, 32)
+
+
+class TestCoalesceProperties:
+    """Each property swept over 20 seeded streams of varying shape."""
+
+    def _sweep(self):
+        for seed in range(20):
+            rng = np.random.default_rng(seed)
+            n = int(rng.integers(1, 120))
+            n_sigs = int(rng.integers(1, 6))
+            yield seed, _stream(rng, n, n_sigs)
+
+    def test_batches_never_mix_signatures(self):
+        for seed, reqs in self._sweep():
+            for b in coalesce(reqs, buckets=(1, 2, 4, 8), max_batch=8):
+                sigs = {r.signature for r in b.requests}
+                assert len(sigs) == 1 and sigs == {b.signature}, seed
+
+    def test_every_request_lands_exactly_once(self):
+        for seed, reqs in self._sweep():
+            out = coalesce(reqs, buckets=(1, 2, 4, 8), max_batch=8)
+            seen = sorted(r.seq for b in out for r in b.requests)
+            assert seen == sorted(r.seq for r in reqs), seed
+
+    def test_arrival_order_preserved_within_signature(self):
+        for seed, reqs in self._sweep():
+            out = coalesce(reqs, buckets=(1, 2, 4, 8), max_batch=8)
+            by_sig = {}
+            for b in out:
+                by_sig.setdefault(b.signature, []).extend(
+                    r.seq for r in b.requests)
+            for sig, seqs in by_sig.items():
+                assert seqs == sorted(seqs), (seed, sig)
+
+    def test_bucket_bounds_and_pad_accounting(self):
+        for seed, reqs in self._sweep():
+            for b in coalesce(reqs, buckets=(1, 2, 4, 8), max_batch=8):
+                assert 1 <= len(b.requests) <= b.bucket <= 8, seed
+                assert b.pad == b.bucket - len(b.requests)
+                assert 0.0 < b.occupancy <= 1.0
+                # padding never exceeds what the next-smaller bucket
+                # would have held -- otherwise the bucket choice is wrong
+                if b.bucket > 1:
+                    assert len(b.requests) > b.bucket // 2 \
+                        or b.bucket == 1, seed
+
+    def test_replay_determinism(self):
+        for seed, reqs in self._sweep():
+            a = coalesce(reqs, buckets=(1, 2, 4, 8), max_batch=8)
+            b = coalesce(list(reqs), buckets=(1, 2, 4, 8), max_batch=8)
+            assert [(x.signature, x.bucket,
+                     [r.seq for r in x.requests]) for x in a] \
+                == [(x.signature, x.bucket,
+                     [r.seq for r in x.requests]) for x in b], seed
+
+    def test_cap_chunks_large_groups(self):
+        reqs = [_req("s", i) for i in range(10)]
+        out = coalesce(reqs, buckets=(1, 2, 4), max_batch=4)
+        assert [len(b.requests) for b in out] == [4, 4, 2]
+        assert [b.bucket for b in out] == [4, 4, 2]
+
+
+class TestStackBatch:
+    def test_slices_bitwise_and_padding_zero(self):
+        reqs = [_req("s", i, fill=float(i + 1)) for i in range(3)]
+        b = Batch(signature="s", requests=reqs, bucket=4)
+        xb = stack_batch(b)
+        assert xb.shape == (4, 4, 4) and xb.dtype == np.float32
+        for i, r in enumerate(reqs):
+            np.testing.assert_array_equal(xb[i], r.x)
+        # the padded slot is zero grids, never garbage
+        np.testing.assert_array_equal(xb[3], np.zeros((4, 4), np.float32))
+
+    def test_dtype_follows_requests(self):
+        try:
+            import jax.numpy as jnp
+            dt = jnp.bfloat16
+        except ImportError:                    # pragma: no cover
+            pytest.skip("jax required")
+        reqs = [_req("s", 0, dtype=np.dtype(dt))]
+        xb = stack_batch(Batch(signature="s", requests=reqs, bucket=2))
+        assert xb.dtype == np.dtype(dt)
+
+
+class TestServeEnvKnobs:
+    """REPRO_SERVE_* knobs parse through envutil: defaults, overrides,
+    and actionable errors on garbage."""
+
+    def test_defaults(self, monkeypatch):
+        for var in ("REPRO_SERVE_BUCKETS", "REPRO_SERVE_MAX_BATCH",
+                    "REPRO_SERVE_QUEUE_TIMEOUT_MS"):
+            monkeypatch.delenv(var, raising=False)
+        assert serve_buckets() == DEFAULT_BUCKETS
+        assert serve_max_batch() == DEFAULT_MAX_BATCH
+        assert serve_queue_timeout_ms() == DEFAULT_QUEUE_TIMEOUT_MS
+
+    def test_overrides(self, monkeypatch):
+        monkeypatch.setenv("REPRO_SERVE_BUCKETS", "8, 2,2,16")
+        monkeypatch.setenv("REPRO_SERVE_MAX_BATCH", "16")
+        monkeypatch.setenv("REPRO_SERVE_QUEUE_TIMEOUT_MS", "0")
+        assert serve_buckets() == (2, 8, 16)   # sorted, deduped
+        assert serve_max_batch() == 16
+        assert serve_queue_timeout_ms() == 0   # 0 is legal: no linger
+
+    @pytest.mark.parametrize("var,raw,match", [
+        ("REPRO_SERVE_BUCKETS", "1,two,4", "REPRO_SERVE_BUCKETS"),
+        ("REPRO_SERVE_BUCKETS", "0,2", ">= 1"),
+        ("REPRO_SERVE_MAX_BATCH", "none", "REPRO_SERVE_MAX_BATCH"),
+        ("REPRO_SERVE_MAX_BATCH", "0", ">= 1"),
+        ("REPRO_SERVE_QUEUE_TIMEOUT_MS", "-5", ">= 0"),
+        ("REPRO_SERVE_QUEUE_TIMEOUT_MS", "fast", "integer"),
+    ])
+    def test_garbage_raises_naming_the_knob(self, monkeypatch, var, raw,
+                                            match):
+        monkeypatch.setenv(var, raw)
+        fn = {"REPRO_SERVE_BUCKETS": serve_buckets,
+              "REPRO_SERVE_MAX_BATCH": serve_max_batch,
+              "REPRO_SERVE_QUEUE_TIMEOUT_MS": serve_queue_timeout_ms}[var]
+        with pytest.raises(ValueError, match=match):
+            fn()
+
+
+class TestEnvIntList:
+    def test_unset_and_blank_use_default(self, monkeypatch):
+        monkeypatch.delenv("REPRO_TEST_LIST", raising=False)
+        assert env_int_list("REPRO_TEST_LIST", (1, 2)) == (1, 2)
+        monkeypatch.setenv("REPRO_TEST_LIST", "   ")
+        assert env_int_list("REPRO_TEST_LIST", (1, 2)) == (1, 2)
+
+    def test_blank_items_skipped(self, monkeypatch):
+        monkeypatch.setenv("REPRO_TEST_LIST", "1,,4, ,8,")
+        assert env_int_list("REPRO_TEST_LIST", ()) == (1, 4, 8)
+
+    def test_all_blank_items_fall_back_to_default(self, monkeypatch):
+        monkeypatch.setenv("REPRO_TEST_LIST", ",, ,")
+        assert env_int_list("REPRO_TEST_LIST", (3,)) == (3,)
+
+    def test_garbage_item_named_in_error(self, monkeypatch):
+        monkeypatch.setenv("REPRO_TEST_LIST", "1,x7,4")
+        with pytest.raises(ValueError, match=r"'x7'"):
+            env_int_list("REPRO_TEST_LIST", ())
+
+    def test_below_minimum_rejected(self, monkeypatch):
+        monkeypatch.setenv("REPRO_TEST_LIST", "4,-1")
+        with pytest.raises(ValueError, match=">= 1"):
+            env_int_list("REPRO_TEST_LIST", ())
+        monkeypatch.setenv("REPRO_TEST_LIST", "0")
+        with pytest.raises(ValueError, match=">= 2"):
+            env_int_list("REPRO_TEST_LIST", (), minimum=2)
