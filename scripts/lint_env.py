@@ -1,0 +1,145 @@
+#!/usr/bin/env python
+"""Lint: every REPRO_* environment READ must go through core/envutil.
+
+The repo's env knobs (REPRO_VMEM_BUDGET, REPRO_PLAN_CACHE_SIZE,
+REPRO_FAULTS, REPRO_AUDIT, ...) are parsed and validated in ONE place --
+``repro.core.envutil`` -- so malformed values fail loudly with a uniform
+message and tests can reason about caching.  A scattered
+``os.environ.get("REPRO_...")`` silently reintroduces ad-hoc parsing;
+this AST walker flags any such read outside the allowlist:
+
+  * ``core/envutil.py``     -- the accessor itself;
+  * ``kernels/guard.py``    -- the VMEM-retune context manager MUTATES
+    the var and must save/restore the raw value verbatim (round-tripping
+    through a parser would destroy malformed-but-restorable values);
+  * ``testing/faults.py``   -- the fast-path presence probe (`in
+    os.environ`) that keeps unarmed fault hooks at nanoseconds.
+
+WRITES (`os.environ[k] = v`, `.pop`, `del`) are allowed everywhere:
+the rule governs how configuration is consumed, not produced.
+
+    python scripts/lint_env.py [root]    # exit 1 on violations
+"""
+from __future__ import annotations
+
+import ast
+import os
+import sys
+
+ALLOWLIST = {
+    os.path.join("core", "envutil.py"),
+    os.path.join("kernels", "guard.py"),
+    os.path.join("testing", "faults.py"),
+}
+
+PREFIX = "REPRO_"
+
+
+def _const_str(node):
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return node.value
+    return None
+
+
+def _is_environ(node) -> bool:
+    """Matches ``os.environ`` and bare ``environ`` (from-imports)."""
+    if isinstance(node, ast.Attribute) and node.attr == "environ":
+        return True
+    return isinstance(node, ast.Name) and node.id == "environ"
+
+
+def _names_repro(tree, node) -> bool:
+    """Does this expression name a REPRO_* key?  Literal keys only --
+    the repo's env vars are all referenced by literal or by a module
+    constant whose literal value we resolve from the same file."""
+    s = _const_str(node)
+    if s is not None:
+        return s.startswith(PREFIX)
+    if isinstance(node, ast.Name):
+        val = _module_constants(tree).get(node.id)
+        return val is not None and val.startswith(PREFIX)
+    return False
+
+
+_CONST_CACHE: dict = {}
+
+
+def _module_constants(tree):
+    key = id(tree)
+    if key not in _CONST_CACHE:
+        consts = {}
+        for stmt in ast.walk(tree):
+            if isinstance(stmt, ast.Assign) and len(stmt.targets) == 1 \
+                    and isinstance(stmt.targets[0], ast.Name):
+                v = _const_str(stmt.value)
+                if v is not None:
+                    consts[stmt.targets[0].id] = v
+        _CONST_CACHE[key] = consts
+    return _CONST_CACHE[key]
+
+
+def find_violations(path: str, src: str):
+    """(line, snippet) for each direct REPRO_* env READ in ``src``."""
+    tree = ast.parse(src, filename=path)
+    out = []
+
+    def flag(node, what):
+        out.append((node.lineno, what))
+
+    for node in ast.walk(tree):
+        # os.environ.get("REPRO_X") / os.getenv("REPRO_X")
+        if isinstance(node, ast.Call):
+            f = node.func
+            if isinstance(f, ast.Attribute) and f.attr == "get" \
+                    and _is_environ(f.value) and node.args \
+                    and _names_repro(tree, node.args[0]):
+                flag(node, "os.environ.get of a REPRO_* key")
+            if isinstance(f, ast.Attribute) and f.attr == "getenv" \
+                    and node.args and _names_repro(tree, node.args[0]):
+                flag(node, "os.getenv of a REPRO_* key")
+            if isinstance(f, ast.Name) and f.id == "getenv" \
+                    and node.args and _names_repro(tree, node.args[0]):
+                flag(node, "getenv of a REPRO_* key")
+        # os.environ["REPRO_X"] in Load context (subscript reads)
+        if isinstance(node, ast.Subscript) and _is_environ(node.value) \
+                and isinstance(node.ctx, ast.Load) \
+                and _names_repro(tree, node.slice):
+            flag(node, "os.environ[...] read of a REPRO_* key")
+        # "REPRO_X" in os.environ (presence probes are reads too)
+        if isinstance(node, ast.Compare) \
+                and any(isinstance(op, (ast.In, ast.NotIn))
+                        for op in node.ops) \
+                and _names_repro(tree, node.left) \
+                and any(_is_environ(c) for c in node.comparators):
+            flag(node, "membership probe of a REPRO_* key in os.environ")
+    return out
+
+
+def main(argv=None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    root = argv[0] if argv else os.path.join(
+        os.path.dirname(os.path.abspath(__file__)), "..", "src", "repro")
+    root = os.path.abspath(root)
+    bad = 0
+    checked = 0
+    for dirpath, _dirnames, filenames in os.walk(root):
+        for fn in sorted(filenames):
+            if not fn.endswith(".py"):
+                continue
+            path = os.path.join(dirpath, fn)
+            rel = os.path.relpath(path, root)
+            if rel in ALLOWLIST:
+                continue
+            checked += 1
+            with open(path) as f:
+                src = f.read()
+            for line, what in find_violations(path, src):
+                print(f"lint_env: {rel}:{line}: {what}; route REPRO_* "
+                      "reads through repro.core.envutil")
+                bad += 1
+    print(f"lint_env: {checked} files checked, {bad} violation(s)")
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -107,6 +107,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import math
 import os
 
 import jax
@@ -799,6 +800,382 @@ def validate_tiling(shape, strip_m: int, tile_n: int, halo: int,
     _check_wrap_radius(w, r)
 
 
+#: Exact-arity all-zero index-map factories for grid-constant operands
+#: (banded weights): Pallas wants the index map's arity to match the grid
+#: rank, and the operand's block index never moves.
+_ZERO_INDEX_MAPS = {
+    1: lambda z: (lambda i: z),
+    2: lambda z: (lambda i, j: z),
+    3: lambda z: (lambda i, j, k: z),
+    4: lambda z: (lambda i, j, k, l: z),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class LaunchGeometry:
+    """Complete, introspectable description of ONE Pallas substrate launch.
+
+    Everything the launchers hand to ``pl.pallas_call`` -- the grid, the
+    input/output block shapes and their index maps, the VMEM scratch
+    shape, the mixed-radix ring decomposition that turns the last grid
+    axis into scratch write slots, the compute fire step and the
+    halo-extended read window -- lives here as data, built by
+    ``strip_launch_geometry`` / ``slab_launch_geometry`` and consumed by
+    ``_launch``.  ``repro.audit`` enumerates the SAME object statically
+    (the index maps are pure-Python closures over ints, so calling them
+    with concrete grid indices is exact enumeration, no tracing): the
+    audited geometry IS the launched geometry, never a re-derivation.
+
+    ``kind`` is one of "flat", "wholestrip", "subblocked", "coltiled",
+    "wholeslab", "slab_subblocked", "slab_coltiled".  Ring kinds (those
+    with a scratch) put the ring on the LAST grid axis; ``ring_dims`` is
+    its row-major mixed-radix shape (e.g. (nb+2, ring_w)) and
+    ``block_dims`` the matching per-ringed-axis scratch block sizes.
+    ``out_shape`` is the launch output BEFORE the remainder-path column
+    slice; ``src_shape`` the input AFTER any host-side column extension
+    (``_extend_columns_for_tiling``) -- both equal the grid shape on
+    aligned launches.
+    """
+
+    kind: str
+    grid: tuple
+    in_block: tuple
+    in_index_maps: tuple
+    out_block: tuple
+    out_index_map: object
+    out_shape: tuple
+    src_shape: tuple
+    halo: int
+    x_halo: int
+    scratch_shape: tuple = None
+    ring_dims: tuple = ()
+    block_dims: tuple = ()
+    read_bounds: tuple = ()      # per-scratch-axis (lo, hi) compute window
+    aligned: bool = True
+
+    @property
+    def ring(self) -> int:
+        """Grid steps per output cell (1 when there is no ring axis)."""
+        return math.prod(self.ring_dims) if self.ring_dims else 1
+
+    @property
+    def fire_step(self) -> int:
+        """Ring step on which compute fires: always the LAST ring step
+        (every scratch slot must be written before the halo-extended
+        read -- the invariant the scratch dependence audit proves)."""
+        return self.ring - 1
+
+    @property
+    def cells(self) -> int:
+        """Output cells in the launch (= grid size / ring length)."""
+        return math.prod(self.grid) // self.ring
+
+    def ring_indices(self, j):
+        """Row-major mixed-radix decomposition of ring step ``j`` over
+        ``ring_dims`` (last axis fastest).  Works on traced ints inside
+        the kernel and on plain ints inside the auditor."""
+        idxs = []
+        for d in reversed(self.ring_dims):
+            idxs.append(j % d)
+            j = j // d
+        return tuple(reversed(idxs))
+
+    def scratch_slot(self, j):
+        """Per-ringed-axis (start, size) scratch write slot of ring step
+        ``j``; trailing (full-width) scratch axes are not listed."""
+        return tuple((k * b, b)
+                     for k, b in zip(self.ring_indices(j), self.block_dims))
+
+
+def strip_launch_geometry(x_shape, strip_m: int, h_block: int, halo: int,
+                          w_tile: int = 0, w_block: int = 0,
+                          x_halo: int = 0) -> LaunchGeometry:
+    """Build the 2D (and lifted-1D) launch geometry: the single source of
+    truth for what ``strip_substrate_call`` launches.
+
+    ``halo=0`` -> "flat" (one load per strip, read amp exactly 1);
+    ``h_block=0`` -> "wholestrip" (3 shifted full-strip refs);
+    otherwise "subblocked" ((strip, h-block) ring into VMEM scratch);
+    ``w_tile>0`` -> "coltiled" (DESIGN.md §10, full 2-axis block ring,
+    edge-tile remainder path on non-dividing widths).
+    """
+    h, n = x_shape
+    gm = h // strip_m
+    if w_tile:
+        nb = strip_m // h_block
+        nbw = w_tile // w_block
+        ring_w = nbw + 2
+        gw = -(-n // w_tile)
+        aligned = n % w_tile == 0
+        total_h = h // h_block
+        if aligned:
+            total_w = n // w_block
+            src_shape, out_w = (h, n), n
+
+            def col_index(iw, jw):
+                return (iw * nbw + jw - 1) % total_w
+        else:
+            src_shape = (h, gw * w_tile + 2 * w_block)
+            out_w = gw * w_tile
+
+            def col_index(iw, jw):
+                return iw * nbw + jw      # the extension carries the wrap
+
+        lg = LaunchGeometry(
+            kind="coltiled",
+            grid=(gm, gw, (nb + 2) * ring_w),
+            in_block=(h_block, w_block),
+            in_index_maps=(lambda i, iw, j: (
+                (i * nb + j // ring_w - 1) % total_h,
+                col_index(iw, j % ring_w)),),
+            out_block=(strip_m, w_tile),
+            out_index_map=lambda i, iw, j: (i, iw),
+            out_shape=(h, out_w),
+            src_shape=src_shape,
+            halo=halo, x_halo=x_halo,
+            scratch_shape=(strip_m + 2 * h_block, w_tile + 2 * w_block),
+            ring_dims=(nb + 2, ring_w),
+            block_dims=(h_block, w_block),
+            read_bounds=((h_block - halo, h_block + strip_m + halo),
+                         (w_block - x_halo, w_block + w_tile + x_halo)),
+            aligned=aligned,
+        )
+    elif halo == 0:
+        # No vertical halo => no neighbor loads on either substrate
+        # (they coincide here): one load per strip, read amp exactly 1.
+        lg = LaunchGeometry(
+            kind="flat", grid=(gm,),
+            in_block=(strip_m, n),
+            in_index_maps=(lambda i: (i, 0),),
+            out_block=(strip_m, n),
+            out_index_map=lambda i: (i, 0),
+            out_shape=(h, n), src_shape=(h, n), halo=0, x_halo=x_halo,
+        )
+    elif not h_block:
+        maps = tuple(functools.partial(lambda i, di=di: ((i + di) % gm, 0))
+                     for di in NEIGHBOR_OFFSETS_STRIP)
+        lg = LaunchGeometry(
+            kind="wholestrip", grid=(gm,),
+            in_block=(strip_m, n),
+            in_index_maps=maps,
+            out_block=(strip_m, n),
+            out_index_map=lambda i: (i, 0),
+            out_shape=(h, n), src_shape=(h, n), halo=halo, x_halo=x_halo,
+        )
+    else:
+        nb = strip_m // h_block
+        total = h // h_block
+        lg = LaunchGeometry(
+            kind="subblocked", grid=(gm, nb + 2),
+            in_block=(h_block, n),
+            in_index_maps=(lambda i, j: ((i * nb + j - 1) % total, 0),),
+            out_block=(strip_m, n),
+            out_index_map=lambda i, j: (i, 0),
+            out_shape=(h, n), src_shape=(h, n), halo=halo, x_halo=x_halo,
+            scratch_shape=(strip_m + 2 * h_block, n),
+            ring_dims=(nb + 2,), block_dims=(h_block,),
+            read_bounds=((h_block - halo, h_block + strip_m + halo),
+                         (0, n)),
+        )
+    from repro.testing.faults import corrupt_geometry
+    return corrupt_geometry(lg)
+
+
+def slab_launch_geometry(x_shape, geom: SubstrateGeom, halo: int,
+                         x_halo: int = 0) -> LaunchGeometry:
+    """Build the 3D launch geometry: the single source of truth for what
+    ``slab_substrate_call`` launches ("wholeslab" / "slab_subblocked" /
+    "slab_coltiled", mirroring the 2D kinds one rank up)."""
+    z, h, n = x_shape
+    zs, sm = geom.z_slab, geom.strip_m
+    gz, gm = z // zs, h // sm
+    if geom.w_tile:
+        zb, hb, wb = geom.z_block, geom.h_block, geom.w_block
+        wt = geom.w_tile
+        nbz, nby, nbw = zs // zb, sm // hb, wt // wb
+        ring_y, ring_w = nby + 2, nbw + 2
+        gw = -(-n // wt)
+        aligned = n % wt == 0
+        total_z, total_y = z // zb, h // hb
+        if aligned:
+            total_w = n // wb
+            src_shape, out_w = (z, h, n), n
+
+            def col_index(iw, jw):
+                return (iw * nbw + jw - 1) % total_w
+        else:
+            src_shape = (z, h, gw * wt + 2 * wb)
+            out_w = gw * wt
+
+            def col_index(iw, jw):
+                return iw * nbw + jw      # the extension carries the wrap
+
+        def block_index(iz, iy, iw, j):
+            jz = j // (ring_y * ring_w)
+            jy = (j // ring_w) % ring_y
+            jw = j % ring_w
+            return ((iz * nbz + jz - 1) % total_z,
+                    (iy * nby + jy - 1) % total_y,
+                    col_index(iw, jw))
+
+        lg = LaunchGeometry(
+            kind="slab_coltiled",
+            grid=(gz, gm, gw, (nbz + 2) * ring_y * ring_w),
+            in_block=(zb, hb, wb),
+            in_index_maps=(block_index,),
+            out_block=(zs, sm, wt),
+            out_index_map=lambda iz, iy, iw, j: (iz, iy, iw),
+            out_shape=(z, h, out_w),
+            src_shape=src_shape,
+            halo=halo, x_halo=x_halo,
+            scratch_shape=(zs + 2 * zb, sm + 2 * hb, wt + 2 * wb),
+            ring_dims=(nbz + 2, ring_y, ring_w),
+            block_dims=(zb, hb, wb),
+            read_bounds=((zb - halo, zb + zs + halo),
+                         (hb - halo, hb + sm + halo),
+                         (wb - x_halo, wb + wt + x_halo)),
+            aligned=aligned,
+        )
+    elif not geom.h_block:
+        maps = tuple(
+            functools.partial(lambda iz, iy, dz=dz, dy=dy:
+                              ((iz + dz) % gz, (iy + dy) % gm, 0))
+            for dz in (-1, 0, 1) for dy in (-1, 0, 1))
+        lg = LaunchGeometry(
+            kind="wholeslab", grid=(gz, gm),
+            in_block=(zs, sm, n),
+            in_index_maps=maps,
+            out_block=(zs, sm, n),
+            out_index_map=lambda iz, iy: (iz, iy, 0),
+            out_shape=(z, h, n), src_shape=(z, h, n),
+            halo=halo, x_halo=x_halo,
+        )
+    else:
+        zb, hb = geom.z_block, geom.h_block
+        nbz, nby = zs // zb, sm // hb
+        ring_y = nby + 2
+        total_z, total_y = z // zb, h // hb
+
+        def block_index(iz, iy, j):
+            jz, jy = j // ring_y, j % ring_y
+            return ((iz * nbz + jz - 1) % total_z,
+                    (iy * nby + jy - 1) % total_y, 0)
+
+        lg = LaunchGeometry(
+            kind="slab_subblocked", grid=(gz, gm, (nbz + 2) * ring_y),
+            in_block=(zb, hb, n),
+            in_index_maps=(block_index,),
+            out_block=(zs, sm, n),
+            out_index_map=lambda iz, iy, j: (iz, iy, 0),
+            out_shape=(z, h, n), src_shape=(z, h, n),
+            halo=halo, x_halo=x_halo,
+            scratch_shape=(zs + 2 * zb, sm + 2 * hb, n),
+            ring_dims=(nbz + 2, ring_y), block_dims=(zb, hb),
+            read_bounds=((zb - halo, zb + zs + halo),
+                         (hb - halo, hb + sm + halo),
+                         (0, n)),
+        )
+    from repro.testing.faults import corrupt_geometry
+    return corrupt_geometry(lg)
+
+
+def launch_geometry(grid_shape, geom: SubstrateGeom, halo: int,
+                    x_halo: int = 0) -> LaunchGeometry:
+    """The launch geometry the substrate would build for ``grid_shape``
+    under ``geom``: rank dispatch matching the kernels exactly (1D grids
+    lift to (1, N) with strip_m=1 and zero vertical halo)."""
+    if geom.dim == 1 or len(grid_shape) == 1:
+        return strip_launch_geometry((1, grid_shape[-1]), 1, 0, 0)
+    if len(grid_shape) == 2:
+        return strip_launch_geometry(
+            grid_shape, geom.strip_m, geom.h_block, halo,
+            geom.w_tile, geom.w_block, x_halo)
+    return slab_launch_geometry(grid_shape, geom, halo, x_halo)
+
+
+def _assemble_foil(lg: LaunchGeometry, ins):
+    """In-kernel halo assembly of the scratch-free kinds: identity for
+    "flat", the 3-strip concat for "wholestrip", the 3x3 neighbor-slab
+    concat for "wholeslab" (only halo-deep edges of the neighbors are
+    ever read -- that is the foils' read amplification)."""
+    halo = lg.halo
+    if lg.kind == "flat":
+        return ins[0][...]
+    if lg.kind == "wholestrip":
+        return assemble_strip(*ins, halo)
+
+    def yrow(r_up, r_mid, r_dn):
+        return jnp.concatenate(
+            [r_up[...][:, -halo:, :], r_mid[...], r_dn[...][:, :halo, :]],
+            axis=1)
+
+    rows = [yrow(*ins[3 * i: 3 * i + 3]) for i in range(3)]
+    return jnp.concatenate(
+        [rows[0][-halo:], rows[1], rows[2][:halo]], axis=0)
+
+
+def _launch(lg: LaunchGeometry, compute, x: jax.Array, interpret: bool,
+            consts=()) -> jax.Array:
+    """Execute one launch geometry: THE place every substrate kind lowers
+    through.  Grid, BlockSpecs, scratch, ring slots, fire step and read
+    window all come from ``lg`` -- the kernel body only dispatches on
+    whether a scratch exists (foil assembly vs ring assembly)."""
+    out_dtype = x.dtype
+    rank = len(lg.grid)
+    zero_map = _ZERO_INDEX_MAPS[rank]
+    in_specs = ([pl.BlockSpec(lg.in_block, im) for im in lg.in_index_maps]
+                + [pl.BlockSpec(c.shape, zero_map((0,) * c.ndim))
+                   for c in consts])
+    src = x
+    if lg.src_shape != x.shape:
+        # Edge-tile remainder path: periodically extend + zero-pad the
+        # last axis on the host so the non-wrapping column walk is in
+        # bounds everywhere (DESIGN.md §10).
+        src = _extend_columns_for_tiling(
+            x, lg.block_dims[-1], lg.grid[-2], lg.out_block[-1])
+    n_in = len(lg.in_index_maps)
+
+    if lg.scratch_shape is None:
+        def kern(*refs):
+            ins = refs[:n_in]
+            *const_refs, out_ref = refs[n_in:]
+            cur = _assemble_foil(lg, ins).astype(jnp.float32)
+            out_ref[...] = compute(cur, *const_refs).astype(out_dtype)
+
+        extra = {}
+    else:
+        full = (slice(None),) * (len(lg.scratch_shape) - len(lg.block_dims))
+        read_ix = tuple(slice(lo, hi) for lo, hi in lg.read_bounds)
+        ring_axis = rank - 1
+        fire = lg.fire_step
+
+        def kern(blk_ref, *rest):
+            *const_refs, out_ref, scratch_ref = rest
+            j = pl.program_id(ring_axis)
+            slot = tuple(pl.ds(s, b) for s, b in lg.scratch_slot(j))
+            scratch_ref[slot + full] = blk_ref[...]
+
+            @pl.when(j == fire)
+            def _compute():
+                cur = scratch_ref[read_ix].astype(jnp.float32)
+                out_ref[...] = compute(cur, *const_refs).astype(out_dtype)
+
+        extra = {"scratch_shapes": [pltpu.VMEM(lg.scratch_shape, x.dtype)]}
+
+    y = pl.pallas_call(
+        kern,
+        grid=lg.grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec(lg.out_block, lg.out_index_map),
+        out_shape=jax.ShapeDtypeStruct(lg.out_shape, x.dtype),
+        interpret=interpret,
+        **extra,
+    )(*((src,) * n_in), *consts)
+    if lg.out_shape != x.shape:
+        y = y[..., : x.shape[-1]]
+    return y
+
+
 def strip_substrate_call(compute, x: jax.Array, strip_m: int, h_block: int,
                          halo: int, interpret: bool, consts=(),
                          w_tile: int = 0, w_block: int = 0,
@@ -836,80 +1213,9 @@ def strip_substrate_call(compute, x: jax.Array, strip_m: int, h_block: int,
     maybe_fail("compile")
     maybe_fail("vmem")
 
-    h, n = x.shape
-    gm = h // strip_m
-    out_dtype = x.dtype
-
-    def const_spec(c, n_grid_dims):
-        zeros = (0,) * c.ndim
-        if n_grid_dims == 1:
-            return pl.BlockSpec(c.shape, lambda i, z=zeros: z)
-        if n_grid_dims == 2:
-            return pl.BlockSpec(c.shape, lambda i, j, z=zeros: z)
-        return pl.BlockSpec(c.shape, lambda i, iw, j, z=zeros: z)
-
-    if w_tile:
-        return _strip_coltiled_call(compute, x, strip_m, h_block, halo,
-                                    w_tile, w_block, x_halo, interpret,
-                                    consts, const_spec)
-
-    if halo == 0:
-        # No vertical halo => no neighbor strips to fetch; one load per
-        # strip on both substrates (they coincide here).
-        def kern_flat(mid_ref, *rest):
-            *const_refs, out_ref = rest
-            cur = mid_ref[...].astype(jnp.float32)
-            out_ref[...] = compute(cur, *const_refs).astype(out_dtype)
-
-        return pl.pallas_call(
-            kern_flat,
-            grid=(gm,),
-            in_specs=[pl.BlockSpec((strip_m, n), lambda i: (i, 0))]
-            + [const_spec(c, 1) for c in consts],
-            out_specs=pl.BlockSpec((strip_m, n), lambda i: (i, 0)),
-            out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
-            interpret=interpret,
-        )(x, *consts)
-
-    if not h_block:
-        def kern_strip(top_ref, mid_ref, bot_ref, *rest):
-            *const_refs, out_ref = rest
-            cur = assemble_strip(top_ref, mid_ref, bot_ref,
-                                 halo).astype(jnp.float32)
-            out_ref[...] = compute(cur, *const_refs).astype(out_dtype)
-
-        return pl.pallas_call(
-            kern_strip,
-            grid=(gm,),
-            in_specs=strip_in_specs(strip_m, n, gm)
-            + [const_spec(c, 1) for c in consts],
-            out_specs=pl.BlockSpec((strip_m, n), lambda i: (i, 0)),
-            out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
-            interpret=interpret,
-        )(x, x, x, *consts)
-
-    nb = strip_m // h_block
-
-    def kern_sub(blk_ref, *rest):
-        *const_refs, out_ref, scratch_ref = rest
-        subblock_store(scratch_ref, blk_ref, h_block)
-
-        @pl.when(pl.program_id(1) == nb + 1)
-        def _compute():
-            cur = subblock_extended(scratch_ref, h_block, strip_m,
-                                    halo).astype(jnp.float32)
-            out_ref[...] = compute(cur, *const_refs).astype(out_dtype)
-
-    return pl.pallas_call(
-        kern_sub,
-        grid=(gm, nb + 2),
-        in_specs=[subblock_in_spec(h_block, n, nb, h // h_block)]
-        + [const_spec(c, 2) for c in consts],
-        out_specs=pl.BlockSpec((strip_m, n), lambda i, j: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
-        scratch_shapes=[pltpu.VMEM((strip_m + 2 * h_block, n), x.dtype)],
-        interpret=interpret,
-    )(x, *consts)
+    lg = strip_launch_geometry(x.shape, strip_m, h_block, halo,
+                               w_tile, w_block, x_halo)
+    return _launch(lg, compute, x, interpret, consts)
 
 
 def _extend_columns_for_tiling(x: jax.Array, w_block: int, gw: int,
@@ -929,72 +1235,6 @@ def _extend_columns_for_tiling(x: jax.Array, w_block: int, gw: int,
         pad[-1] = (0, pad_cols)
         ext = jnp.pad(ext, pad)
     return ext
-
-
-def _strip_coltiled_call(compute, x, strip_m, h_block, halo, w_tile,
-                         w_block, x_halo, interpret, consts, const_spec):
-    """The column-tiled 2D launch (DESIGN.md §10): grid
-    (strip, w-tile, ring) where the ring walks the full
-    (strip_m/h_block + 2) x (w_tile/w_block + 2) block neighborhood of
-    each (strip_m, w_tile) output tile into a VMEM scratch of
-    (strip_m + 2*h_block, w_tile + 2*w_block).  Aligned widths
-    (w_tile | W) wrap the column walk modulo W/w_block (periodic x for
-    free, like the vertical axes); other widths run the host-extended
-    remainder path (``_extend_columns_for_tiling``).
-    """
-    h, n = x.shape
-    gm = h // strip_m
-    out_dtype = x.dtype
-    nb = strip_m // h_block
-    nbw = w_tile // w_block
-    ring_w = nbw + 2
-    nj = (nb + 2) * ring_w
-    gw = -(-n // w_tile)
-    aligned = n % w_tile == 0
-    total_h = h // h_block
-
-    if aligned:
-        src, out_w = x, n
-        total_w = n // w_block
-
-        def col_index(iw, jw):
-            return (iw * nbw + jw - 1) % total_w
-    else:
-        src = _extend_columns_for_tiling(x, w_block, gw, w_tile)
-        out_w = gw * w_tile
-
-        def col_index(iw, jw):
-            return iw * nbw + jw        # the extension carries the wrap
-
-    def kern_col(blk_ref, *rest):
-        *const_refs, out_ref, scratch_ref = rest
-        j = pl.program_id(2)
-        jy, jw = j // ring_w, j % ring_w
-        scratch_ref[pl.ds(jy * h_block, h_block),
-                    pl.ds(jw * w_block, w_block)] = blk_ref[...]
-
-        @pl.when(j == nj - 1)
-        def _compute():
-            cur = scratch_ref[h_block - halo: h_block + strip_m + halo,
-                              w_block - x_halo: w_block + w_tile + x_halo
-                              ].astype(jnp.float32)
-            out_ref[...] = compute(cur, *const_refs).astype(out_dtype)
-
-    y = pl.pallas_call(
-        kern_col,
-        grid=(gm, gw, nj),
-        in_specs=[pl.BlockSpec(
-            (h_block, w_block),
-            lambda i, iw, j: ((i * nb + j // ring_w - 1) % total_h,
-                              col_index(iw, j % ring_w)))]
-        + [const_spec(c, 3) for c in consts],
-        out_specs=pl.BlockSpec((strip_m, w_tile), lambda i, iw, j: (i, iw)),
-        out_shape=jax.ShapeDtypeStruct((h, out_w), x.dtype),
-        scratch_shapes=[pltpu.VMEM((strip_m + 2 * h_block,
-                                    w_tile + 2 * w_block), x.dtype)],
-        interpret=interpret,
-    )(src, *consts)
-    return y if aligned else y[:, :n]
 
 
 def slab_substrate_call(compute, x: jax.Array, geom: SubstrateGeom,
@@ -1033,167 +1273,8 @@ def slab_substrate_call(compute, x: jax.Array, geom: SubstrateGeom,
     maybe_fail("compile")
     maybe_fail("vmem")
 
-    z, h, n = x.shape
-    zs, sm = geom.z_slab, geom.strip_m
-    gz, gm = z // zs, h // sm
-    out_dtype = x.dtype
-
-    def const_spec(c, n_grid_dims):
-        zeros = (0,) * c.ndim
-        if n_grid_dims == 2:
-            return pl.BlockSpec(c.shape, lambda i, j, zz=zeros: zz)
-        if n_grid_dims == 3:
-            return pl.BlockSpec(c.shape, lambda i, j, k, zz=zeros: zz)
-        return pl.BlockSpec(c.shape, lambda i, j, k, l, zz=zeros: zz)
-
-    if geom.w_tile:
-        return _slab_coltiled_call(compute, x, geom, halo, x_halo,
-                                   interpret, consts, const_spec)
-
-    if not geom.h_block:
-        def slab_spec(dz, dy):
-            return pl.BlockSpec(
-                (zs, sm, n),
-                functools.partial(
-                    lambda iz, iy, dz=dz, dy=dy:
-                    ((iz + dz) % gz, (iy + dy) % gm, 0)),
-            )
-
-        def kern_whole(*refs):
-            nbr = refs[:9]
-            *const_refs, out_ref = refs[9:]
-
-            def yrow(r_up, r_mid, r_dn):
-                return jnp.concatenate(
-                    [r_up[...][:, -halo:, :], r_mid[...],
-                     r_dn[...][:, :halo, :]], axis=1)
-
-            rows = [yrow(*nbr[3 * i: 3 * i + 3]) for i in range(3)]
-            cur = jnp.concatenate(
-                [rows[0][-halo:], rows[1], rows[2][:halo]],
-                axis=0).astype(jnp.float32)
-            out_ref[...] = compute(cur, *const_refs).astype(out_dtype)
-
-        return pl.pallas_call(
-            kern_whole,
-            grid=(gz, gm),
-            in_specs=[slab_spec(dz, dy)
-                      for dz in (-1, 0, 1) for dy in (-1, 0, 1)]
-            + [const_spec(c, 2) for c in consts],
-            out_specs=pl.BlockSpec((zs, sm, n), lambda iz, iy: (iz, iy, 0)),
-            out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
-            interpret=interpret,
-        )(*([x] * 9), *consts)
-
-    zb, hb = geom.z_block, geom.h_block
-    nbz, nby = zs // zb, sm // hb
-    ring_y = nby + 2
-    nj = (nbz + 2) * ring_y
-    total_z, total_y = z // zb, h // hb
-
-    def block_index(iz, iy, j):
-        jz, jy = j // ring_y, j % ring_y
-        return ((iz * nbz + jz - 1) % total_z,
-                (iy * nby + jy - 1) % total_y, 0)
-
-    def kern_sub(blk_ref, *rest):
-        *const_refs, out_ref, scratch_ref = rest
-        j = pl.program_id(2)
-        jz, jy = j // ring_y, j % ring_y
-        scratch_ref[pl.ds(jz * zb, zb), pl.ds(jy * hb, hb), :] = blk_ref[...]
-
-        @pl.when(j == nj - 1)
-        def _compute():
-            cur = scratch_ref[zb - halo: zb + zs + halo,
-                              hb - halo: hb + sm + halo,
-                              :].astype(jnp.float32)
-            out_ref[...] = compute(cur, *const_refs).astype(out_dtype)
-
-    return pl.pallas_call(
-        kern_sub,
-        grid=(gz, gm, nj),
-        in_specs=[pl.BlockSpec((zb, hb, n), block_index)]
-        + [const_spec(c, 3) for c in consts],
-        out_specs=pl.BlockSpec((zs, sm, n), lambda iz, iy, j: (iz, iy, 0)),
-        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
-        scratch_shapes=[pltpu.VMEM((zs + 2 * zb, sm + 2 * hb, n), x.dtype)],
-        interpret=interpret,
-    )(x, *consts)
-
-
-def _slab_coltiled_call(compute, x, geom, halo, x_halo, interpret, consts,
-                        const_spec):
-    """The column-tiled 3D launch (DESIGN.md §10): grid
-    (z-slab, strip, w-tile, ring) where the ring walks the full
-    (z_slab/z_block + 2) x (strip_m/h_block + 2) x (w_tile/w_block + 2)
-    block neighborhood of each (z_slab, strip_m, w_tile) output cell into
-    a VMEM scratch of (z_slab + 2*z_block, strip_m + 2*h_block,
-    w_tile + 2*w_block).  Aligned widths wrap the column walk modulo
-    W/w_block; other widths run the host-extended remainder path.
-    """
-    z, h, n = x.shape
-    zs, sm, wt = geom.z_slab, geom.strip_m, geom.w_tile
-    zb, hb, wb = geom.z_block, geom.h_block, geom.w_block
-    gz, gm = z // zs, h // sm
-    out_dtype = x.dtype
-    nbz, nby, nbw = zs // zb, sm // hb, wt // wb
-    ring_y, ring_w = nby + 2, nbw + 2
-    nj = (nbz + 2) * ring_y * ring_w
-    gw = -(-n // wt)
-    aligned = n % wt == 0
-    total_z, total_y = z // zb, h // hb
-
-    if aligned:
-        src, out_w = x, n
-        total_w = n // wb
-
-        def col_index(iw, jw):
-            return (iw * nbw + jw - 1) % total_w
-    else:
-        src = _extend_columns_for_tiling(x, wb, gw, wt)
-        out_w = gw * wt
-
-        def col_index(iw, jw):
-            return iw * nbw + jw        # the extension carries the wrap
-
-    def block_index(iz, iy, iw, j):
-        jz = j // (ring_y * ring_w)
-        jy = (j // ring_w) % ring_y
-        jw = j % ring_w
-        return ((iz * nbz + jz - 1) % total_z,
-                (iy * nby + jy - 1) % total_y,
-                col_index(iw, jw))
-
-    def kern_col(blk_ref, *rest):
-        *const_refs, out_ref, scratch_ref = rest
-        j = pl.program_id(3)
-        jz = j // (ring_y * ring_w)
-        jy = (j // ring_w) % ring_y
-        jw = j % ring_w
-        scratch_ref[pl.ds(jz * zb, zb), pl.ds(jy * hb, hb),
-                    pl.ds(jw * wb, wb)] = blk_ref[...]
-
-        @pl.when(j == nj - 1)
-        def _compute():
-            cur = scratch_ref[zb - halo: zb + zs + halo,
-                              hb - halo: hb + sm + halo,
-                              wb - x_halo: wb + wt + x_halo
-                              ].astype(jnp.float32)
-            out_ref[...] = compute(cur, *const_refs).astype(out_dtype)
-
-    y = pl.pallas_call(
-        kern_col,
-        grid=(gz, gm, gw, nj),
-        in_specs=[pl.BlockSpec((zb, hb, wb), block_index)]
-        + [const_spec(c, 4) for c in consts],
-        out_specs=pl.BlockSpec((zs, sm, wt),
-                               lambda iz, iy, iw, j: (iz, iy, iw)),
-        out_shape=jax.ShapeDtypeStruct((z, h, out_w), x.dtype),
-        scratch_shapes=[pltpu.VMEM((zs + 2 * zb, sm + 2 * hb, wt + 2 * wb),
-                                   x.dtype)],
-        interpret=interpret,
-    )(src, *consts)
-    return y if aligned else y[..., :n]
+    lg = slab_launch_geometry(x.shape, geom, halo, x_halo)
+    return _launch(lg, compute, x, interpret, consts)
 
 
 def fold_batch(run, mode: str):

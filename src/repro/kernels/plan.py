@@ -105,7 +105,8 @@ class StencilPlan:
     def __init__(self, *, spec, weights, grid_shape, dtype, t, hw, backend,
                  decision, fn, tile_m, tile_n, interpret, compute_dtype,
                  mesh=None, shard_spec=None, dist_mode=None, halo_plan=None,
-                 key=None, build_time_s=0.0, batch=None, batch_mode=None):
+                 key=None, build_time_s=0.0, batch=None, batch_mode=None,
+                 ctx=None):
         self.spec = spec
         self.weights = weights
         self.grid_shape = grid_shape
@@ -127,6 +128,14 @@ class StencilPlan:
         self.halo_plan = halo_plan
         self.key = key
         self.build_time_s = build_time_s
+        #: The registry PlanContext the plan was built from (None for
+        #: plans reconstructed without one); lets the auditor re-derive
+        #: the declared launch structure of an existing plan.
+        self.ctx = ctx
+        #: repro.audit.AuditReport attached at build time when auditing
+        #: is enabled (``stencil_plan(..., audit=True)`` / REPRO_AUDIT=1);
+        #: None otherwise.  Cached plans keep the report of their build.
+        self.audit_report = None
 
     # -- execution ------------------------------------------------------
     @property
@@ -221,7 +230,12 @@ _STATS = {"hits": 0, "misses": 0,
           # and negative-cache short-circuits.  All zero unless something
           # actually failed -- asserted by the clean-run acceptance tests.
           "build_failures": 0, "exec_failures": 0,
-          "fallbacks": 0, "negative_hits": 0}
+          "fallbacks": 0, "negative_hits": 0,
+          # static-auditor counters (repro.audit): audited plan builds
+          # and total check violations found there.  Violations never
+          # block the build -- they count, attach, and surface through
+          # plan_cache_stats so CI and the serving loop can gate on them.
+          "audits_run": 0, "audit_violations": 0}
 
 #: Negative-result registry: signature key -> {"cause", "backend", "stamp"}.
 #: A signature lands here when its build/execution failed, so the guard
@@ -475,6 +489,7 @@ def stencil_plan(
     interpret: Optional[bool] = None,
     compute_dtype=None,
     use_cache: bool = True,
+    audit: Optional[bool] = None,
 ) -> StencilPlan:
     """Build (or fetch from cache) a compiled stencil execution plan.
 
@@ -513,6 +528,12 @@ def stencil_plan(
         ("auto" = "map" under interpret, "vmap" compiled).
       interpret: Pallas interpret mode; ``None`` = off-TPU default.
       use_cache: bypass the process-wide plan cache when ``False``.
+      audit: run the static auditor (repro.audit) over the built plan and
+        attach its report as ``plan.audit_report`` (``None`` defers to the
+        ``REPRO_AUDIT`` env flag).  Violations never fail the build: they
+        bump the ``audit_violations`` counter in :func:`plan_cache_stats`
+        and surface in the attached report.  Not part of the cache key --
+        a cached plan keeps the report of the build that audited it.
     """
     key, weights, grid_shape, interpret = plan_signature(
         spec_or_weights, grid_shape, dtype, t, hw=hw, mesh=mesh,
@@ -580,7 +601,12 @@ def stencil_plan(
         build_time_s=time.perf_counter() - t0,
         batch=None if batch is None else int(batch),
         batch_mode=resolved_mode,
+        ctx=ctx,
     )
+    from repro.core.envutil import env_flag
+    if audit if audit is not None else env_flag("REPRO_AUDIT"):
+        _attach_audit(plan, ctx, exec_backend, decision, geom_px,
+                      t * spec.radius)
     if use_cache:
         with _LOCK:
             # Read (and validate) the bound BEFORE inserting: a malformed
@@ -592,6 +618,43 @@ def stencil_plan(
                 _CACHE.popitem(last=False)
             _tick_churn()
     return plan
+
+
+def _attach_audit(plan, ctx, exec_backend, decision, geom_px,
+                  priced_halo) -> None:
+    """Run the static auditor over the freshly built plan and attach the
+    report (repro.audit, DESIGN.md §13).  Never raises: violations count
+    into the plan stats and live in ``plan.audit_report``; an auditor
+    crash records itself as a violation rather than failing the build.
+    Distributed and batched plans wrap the launch in collectives /
+    batch folds the block-level auditor does not model, so they attach
+    an exempt report instead of false violations.
+    """
+    from repro import audit as _audit
+
+    try:
+        if plan.mesh is not None or plan.batch is not None:
+            report = _audit.AuditReport(
+                backend=exec_backend, grid_shape=tuple(ctx.grid_shape),
+                t=ctx.t, dtype=str(np.dtype(ctx.dtype)),
+                exempt=("distributed stepper wraps the launch in halo "
+                        "collectives" if plan.mesh is not None
+                        else "batch fold wraps the launch"))
+        else:
+            report = _audit.audit_context(ctx, exec_backend)
+            report.checks.append(_audit.audit_reason_read_amp(
+                decision.reason, tuple(ctx.grid_shape), geom_px,
+                priced_halo, np.dtype(ctx.dtype).itemsize))
+    except Exception as e:  # pragma: no cover - auditor must not break builds
+        report = _audit.AuditReport(
+            backend=exec_backend, grid_shape=tuple(ctx.grid_shape),
+            t=ctx.t, dtype=str(np.dtype(ctx.dtype)),
+            checks=[_audit.AuditCheck("audit/crashed", False,
+                                      actual=repr(e))])
+    plan.audit_report = report
+    with _LOCK:
+        _STATS["audits_run"] += 1
+        _STATS["audit_violations"] += len(report.violations)
 
 
 def _build_distributed(mesh, axis_names, dist_mode, ctx, exec_backend):

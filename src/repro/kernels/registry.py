@@ -35,12 +35,12 @@ import numpy as np
 from repro.core import perfmodel as pm
 from repro.stencil.spec import StencilSpec
 from repro.stencil.weights import fuse_weights
-from .common import (SubstrateGeom, choose_tile, resolve_substrate_geom,
-                     validate_tiling)
+from .common import (SubstrateGeom, choose_tile, launch_geometry,
+                     resolve_substrate_geom, validate_tiling)
 from . import legacy as _legacy
 from . import ref as _ref
 from .stencil_direct import stencil_direct
-from .stencil_matmul import stencil_matmul
+from .stencil_matmul import build_bands_nd, stencil_matmul
 
 
 # ---------------------------------------------------------------------------
@@ -108,6 +108,116 @@ class PlanContext:
                         geom.w_tile, geom.w_block, halo)
 
 
+# ---------------------------------------------------------------------------
+# Audit hooks: what a backend declares it will launch (repro.audit)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class LaunchAudit:
+    """One declared kernel launch of a backend, in auditable terms.
+
+    The static auditor (``repro.audit``) turns this into the
+    :class:`~repro.kernels.common.LaunchGeometry` the substrate builds for
+    it and proves the analytic model against that structure -- the hook
+    resolves geometry through the SAME ``PlanContext`` methods the builder
+    uses, so the declaration cannot drift from the built plan.
+    """
+
+    geom: SubstrateGeom
+    grid_shape: Tuple[int, ...]   # TRUE user grid (pre-lift)
+    halo: int                     # leading/vertical halo of this launch
+    x_halo: int                   # carried x-halo (column-tiled only)
+    t_inner: int                  # in-VMEM steps inside the launch
+    weights: np.ndarray           # kernel-rank operand (1D grids lifted)
+    radius: int                   # per-step x radius of ``weights``
+    engine: str                   # "direct" | "matmul"
+    tile_n: int = 0               # MXU column-chunk width
+    bands_shape: Optional[Tuple[int, ...]] = None
+    n_offsets: int = 0            # banded operand rows actually built
+
+    def launch_geometry(self):
+        """The exact structure the substrate launches for this geometry."""
+        return launch_geometry(self.grid_shape, self.geom,
+                               self.halo, self.x_halo)
+
+
+@dataclasses.dataclass(frozen=True)
+class AuditSpec:
+    """A backend's full audit declaration: its launches, in run order."""
+
+    launches: Tuple[LaunchAudit, ...] = ()
+    #: Non-None opts the backend out with a recorded reason (the seed
+    #: foils predate the substrate model; the reference oracle has no
+    #: launch structure to audit).
+    exempt: Optional[str] = None
+
+
+def _launch_audit(ctx: PlanContext, geom: SubstrateGeom, w_op, t_inner: int,
+                  engine: str) -> LaunchAudit:
+    """Describe one launch exactly as the kernels resolve it: 1D grids
+    lift the operand to (1, N) with zero vertical halo; column-tiled
+    launches carry ``t_inner * radius`` of x support."""
+    w_op = np.asarray(w_op)
+    if len(ctx.grid_shape) == 1:
+        w_op = w_op[None, :]
+    radius = (w_op.shape[-1] - 1) // 2
+    halo = t_inner * ((w_op.shape[0] - 1) // 2)
+    x_halo = t_inner * radius if geom.w_tile else 0
+    extra = {}
+    if engine == "matmul":
+        tile_n = ctx.resolve_tile_n()
+        offsets, bands = build_bands_nd(w_op.astype(np.float32), tile_n)
+        extra = dict(tile_n=tile_n, bands_shape=tuple(bands.shape),
+                     n_offsets=len(offsets))
+    return LaunchAudit(geom=geom, grid_shape=tuple(ctx.grid_shape),
+                       halo=halo, x_halo=x_halo, t_inner=t_inner,
+                       weights=w_op, radius=radius, engine=engine, **extra)
+
+
+def _audit_direct(ctx: PlanContext) -> AuditSpec:
+    l = _launch_audit(ctx, ctx.resolve_geom(ctx.radius), ctx.weights,
+                      1, "direct")
+    return AuditSpec(launches=(l,) * ctx.t)
+
+
+def _audit_fused_direct(ctx: PlanContext) -> AuditSpec:
+    l = _launch_audit(ctx, ctx.resolve_geom(ctx.t * ctx.radius), ctx.weights,
+                      ctx.t, "direct")
+    return AuditSpec(launches=(l,))
+
+
+def _audit_matmul(ctx: PlanContext) -> AuditSpec:
+    l = _launch_audit(ctx, ctx.resolve_geom(ctx.radius), ctx.weights,
+                      1, "matmul")
+    return AuditSpec(launches=(l,) * ctx.t)
+
+
+def _audit_fused_matmul(ctx: PlanContext) -> AuditSpec:
+    wf = ctx.fused_weights()
+    R = (wf.shape[0] - 1) // 2
+    l = _launch_audit(ctx, ctx.resolve_geom(R), wf, 1, "matmul")
+    return AuditSpec(launches=(l,))
+
+
+def _audit_fused_matmul_reuse(ctx: PlanContext) -> AuditSpec:
+    l = _launch_audit(ctx, ctx.resolve_geom(ctx.t * ctx.radius), ctx.weights,
+                      ctx.t, "matmul")
+    return AuditSpec(launches=(l,))
+
+
+def _wholestrip_audit(audit: Callable) -> Callable:
+    """Audit the same regime on the whole-strip substrate (h_block=0),
+    mirroring :func:`_wholestrip` exactly."""
+    def audit_ws(ctx: PlanContext) -> AuditSpec:
+        return audit(dataclasses.replace(ctx, h_block=0))
+    return audit_ws
+
+
+def _audit_exempt(reason: str) -> Callable:
+    def audit(ctx: PlanContext) -> AuditSpec:
+        return AuditSpec(exempt=reason)
+    return audit
+
+
 @dataclasses.dataclass(frozen=True)
 class BackendDef:
     name: str
@@ -121,6 +231,10 @@ class BackendDef:
     #: matmul wholestrip foils).  The reference oracle carries the largest
     #: rank so the ladder always terminates on it.
     fallback_rank: Optional[int] = None
+    #: ``audit(ctx) -> AuditSpec`` declares the backend's launches for the
+    #: static auditor (repro.audit); ``None`` means "not yet auditable"
+    #: (plug-ins), reported as exempt rather than violating.
+    audit: Optional[Callable] = None
 
 
 _REGISTRY: Dict[str, BackendDef] = {}
@@ -136,7 +250,8 @@ def generation() -> int:
 def register_backend(name: str, build: Callable, price: Callable = None,
                      description: str = "", unit: str = None,
                      overwrite: bool = False,
-                     fallback_rank: Optional[int] = None) -> BackendDef:
+                     fallback_rank: Optional[int] = None,
+                     audit: Callable = None) -> BackendDef:
     """Register an execution backend under ``name``.
 
     ``build(ctx: PlanContext) -> run(x)`` constructs the executable;
@@ -144,7 +259,9 @@ def register_backend(name: str, build: Callable, price: Callable = None,
     candidate; ``unit`` classifies it for Decision bookkeeping ("vector" or
     "matrix" -- the predicted matrix-vs-vector speedup considers only
     matrix-unit candidates); ``fallback_rank`` (optional) places it on the
-    guard layer's degradation ladder (see :func:`fallback_ladder`).
+    guard layer's degradation ladder (see :func:`fallback_ladder`);
+    ``audit(ctx) -> AuditSpec`` (optional) declares its launches for the
+    static auditor (repro.audit).
     Re-registering an existing name raises unless ``overwrite``.
     """
     global _generation
@@ -155,7 +272,7 @@ def register_backend(name: str, build: Callable, price: Callable = None,
                          "(pass overwrite=True to replace)")
     bd = BackendDef(name=name, build=build, price=price,
                     description=description, unit=unit,
-                    fallback_rank=fallback_rank)
+                    fallback_rank=fallback_rank, audit=audit)
     _REGISTRY[name] = bd
     _generation += 1
     return bd
@@ -390,28 +507,35 @@ def _price_fused_matmul_reuse(p):
 # then temporal fusion, then halo-row sub-blocking, then Pallas entirely.
 register_backend("direct", _build_direct, _price_direct,
                  "t sequential VPU kernel steps (halo r per step)",
-                 unit="vector", fallback_rank=50)
+                 unit="vector", fallback_rank=50, audit=_audit_direct)
 register_backend("fused_direct", _build_fused_direct, _price_fused_direct,
                  "one VPU kernel, t in-VMEM steps (temporal fusion)",
-                 unit="vector", fallback_rank=40)
+                 unit="vector", fallback_rank=40, audit=_audit_fused_direct)
 register_backend("matmul", _build_matmul, _price_matmul,
                  "t sequential MXU banded contractions", unit="matrix",
-                 fallback_rank=30)
+                 fallback_rank=30, audit=_audit_matmul)
 register_backend("fused_matmul", _build_fused_matmul, _price_fused_matmul,
                  "monolithic fusion: one radius-t*r banded contraction",
-                 unit="matrix", fallback_rank=20)
+                 unit="matrix", fallback_rank=20, audit=_audit_fused_matmul)
 register_backend("fused_matmul_reuse", _build_fused_matmul_reuse,
                  _price_fused_matmul_reuse,
                  "one MXU kernel, t radius-r contractions, VMEM intermediates",
-                 unit="matrix", fallback_rank=10)
+                 unit="matrix", fallback_rank=10,
+                 audit=_audit_fused_matmul_reuse)
 register_backend("reference", _build_reference,
-                 description="pure-jnp oracle (debug)", fallback_rank=1000)
+                 description="pure-jnp oracle (debug)", fallback_rank=1000,
+                 audit=_audit_exempt("pure-jnp oracle: no launch structure "
+                                     "to audit"))
 register_backend("legacy_direct", _build_legacy_direct,
                  description="seed 9-tile VPU scheme (benchmark foil)",
-                 unit="vector")
+                 unit="vector",
+                 audit=_audit_exempt("seed 9-tile foil predates the "
+                                     "substrate traffic model"))
 register_backend("legacy_matmul", _build_legacy_matmul,
                  description="seed 9-tile monolithic MXU scheme (foil)",
-                 unit="matrix")
+                 unit="matrix",
+                 audit=_audit_exempt("seed 9-tile foil predates the "
+                                     "substrate traffic model"))
 
 # Whole-strip (3-load) substrate foils: the same five regimes with halo-row
 # sub-blocking disabled, unpriced so they never win selection -- they exist
@@ -421,14 +545,17 @@ register_backend("legacy_matmul", _build_legacy_matmul,
 # penultimate rungs (DESIGN.md §11): after every sub-blocked regime has
 # failed, the 3-load substrate drops halo-row sub-blocking -- the last
 # Pallas configuration before surrendering to the reference oracle.
-for _name, _build, _unit, _rank in (
-    ("direct", _build_direct, "vector", 60),
-    ("fused_direct", _build_fused_direct, "vector", 55),
-    ("matmul", _build_matmul, "matrix", None),
-    ("fused_matmul", _build_fused_matmul, "matrix", None),
-    ("fused_matmul_reuse", _build_fused_matmul_reuse, "matrix", None),
+for _name, _build, _audit, _unit, _rank in (
+    ("direct", _build_direct, _audit_direct, "vector", 60),
+    ("fused_direct", _build_fused_direct, _audit_fused_direct, "vector", 55),
+    ("matmul", _build_matmul, _audit_matmul, "matrix", None),
+    ("fused_matmul", _build_fused_matmul, _audit_fused_matmul,
+     "matrix", None),
+    ("fused_matmul_reuse", _build_fused_matmul_reuse,
+     _audit_fused_matmul_reuse, "matrix", None),
 ):
     register_backend(f"{_name}_wholestrip", _wholestrip(_build),
                      description=f"{_name} on the whole-strip 3-load "
                                  "substrate (benchmark foil)",
-                     unit=_unit, fallback_rank=_rank)
+                     unit=_unit, fallback_rank=_rank,
+                     audit=_wholestrip_audit(_audit))

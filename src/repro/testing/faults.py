@@ -13,6 +13,12 @@ has an injection point wired through this module:
   ``GuardedPlan`` via :func:`corrupt_output`) to exercise the watchdog.
 - ``halo``: raise inside the distributed stepper's halo exchange
   (``stencil.distributed._extend``).
+- ``geometry``: corrupt the next built :class:`LaunchGeometry` (consumed
+  by the substrate's geometry builders via :func:`corrupt_geometry`) so
+  its block walk repeats the previous ring step -- the launched/audited
+  structure silently drifts from the analytic traffic model, which is
+  exactly the violation class ``repro.audit`` must catch (negative
+  tests in ISSUE 8).
 
 Faults come from two sources, checked in order:
 
@@ -39,7 +45,7 @@ from ..core.envutil import env_str
 
 ENV_VAR = "REPRO_FAULTS"
 
-KINDS = ("compile", "vmem", "nan", "halo")
+KINDS = ("compile", "vmem", "nan", "halo", "geometry")
 
 # Messages mimic the shape of real failures so ``classify_failure`` in
 # repro.kernels.guard exercises the same patterns production errors hit.
@@ -196,3 +202,28 @@ def corrupt_output(y):
             idx = (0,) * y.ndim
             return y.at[idx].set(jnp.nan)
     return y
+
+
+def corrupt_geometry(lg):
+    """If a ``geometry`` fault is due, return a copy of the launch
+    geometry whose input block walk repeats the previous last-grid-axis
+    step (step ``j`` fetches step ``j-1``'s block): a consecutive
+    duplicate that shrinks the fetched block multiset AND stores the
+    wrong global rows -- the model/code drift the static auditor exists
+    to flag.  Identity (beyond one env read) when nothing is armed, so
+    production launches never pay for the hook."""
+    if not _STACK and ENV_VAR not in os.environ:
+        return lg
+    for spec in active_faults():
+        if spec.kind == "geometry" and spec.should_fire():
+            import dataclasses
+            orig = lg.in_index_maps[0]
+
+            def warped(*ix):
+                j = ix[-1]
+                return orig(*ix[:-1], j - 1 if isinstance(j, int) and j > 0
+                            else j)
+
+            return dataclasses.replace(
+                lg, in_index_maps=(warped,) + lg.in_index_maps[1:])
+    return lg
