@@ -32,6 +32,15 @@ sizes, whole-slab foil (9x) vs sub-blocked halo planes
 ``read_bytes_step_*_{wholestrip,subblocked}`` columns and plan-timed
 us/step for the VPU and intermediate-reuse MXU paths.
 
+The sparse-compacted MXU regime (DESIGN.md §14) rides every 2D/3D case:
+``band_sparsity`` / ``kept_row_fraction`` quantify the star-vs-box
+structural sparsity of the banded operand, ``mxu_flops_step_sparse`` vs
+``mxu_flops_step_dense`` show the compacted contraction executing exactly
+S * dense MXU FLOPs (star < dense, box == dense), and
+``us_step_matmul_sparse`` / ``sparse_bitwise_equal`` time the
+``fused_sparse_matmul`` plan and prove its output bit-identical to the
+dense reuse plan -- ``scripts/verify.sh`` gates on both.
+
 The column-tiled W substrate (DESIGN.md §10) gets the wide-grid sweep
 (``cases_wide``): a grid whose FULL-WIDTH strips exceed the VMEM budget
 (REPRO_VMEM_BUDGET pinned for the case, so the auto sizing genuinely
@@ -61,7 +70,9 @@ from repro.kernels.common import (SubstrateGeom, choose_hblock,
                                   hbm_read_bytes_per_step_3d,
                                   resolve_substrate_geom,
                                   substrate_read_amp)
-from repro.kernels.stencil_matmul import build_bands, build_bands_nd
+from repro.kernels.stencil_matmul import (band_sparsity, build_bands,
+                                          build_bands_nd)
+from repro.kernels.stencil_sparse import compact_bands, kept_row_fraction
 from repro.stencil import StencilSpec, fuse_weights, make_weights
 
 N = 128            # grid edge (small: interpret-mode kernels on CPU)
@@ -82,7 +93,7 @@ DTYPE_BYTES = 4
 N3 = (16, 32, 32)      # (Z, H, W)
 SLAB3, STRIP3, TILE3 = 8, 16, 32
 CASES_3D = [(s, r, t) for s in SHAPES for r in (1, 2) for t in (1, 2)]
-QUICK_CASES_3D = [("box", 1, 2)]
+QUICK_CASES_3D = [("box", 1, 2), ("star", 1, 2)]
 #: Wide-grid column-tiled sweep (DESIGN.md §10): a width whose FULL-WIDTH
 #: strip working set exceeds the VMEM budget, so auto resolution
 #: column-tiles W.  The default 8 MB budget would need W in the hundreds
@@ -99,6 +110,29 @@ QUICK_CASES_WIDE = [("box", 1, 2)]
 JSON_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_kernels.json")
 JSON_PATH_QUICK = os.path.join(os.path.dirname(__file__), "..",
                                "BENCH_kernels.quick.json")
+
+
+def _mxu_step_flops(w, tile_n: int, width: int, m_rows: int):
+    """(dense, sparse) per-step MXU FLOPs of the radius-r banded
+    contraction over the grid: the kernels' exact chunk walk, with
+    full-width chunks compacted to the packed band rows and remainder
+    chunks dense (DESIGN.md §14).  On tile-aligned widths
+    sparse == kept_row_fraction * dense, integer-exact -- the same
+    identity ``repro.audit``'s ``flops/sparse-compaction`` proves on the
+    traced jaxpr."""
+    offsets, bands = build_bands_nd(np.asarray(w, dtype=np.float32), tile_n)
+    _, packed = compact_bands(offsets, bands)
+    r = (bands.shape[1] - bands.shape[2]) // 2
+    dense = sparse = 0
+    start = 0
+    while start < width:
+        wcur = min(tile_n, width - start)
+        d = len(offsets) * 2 * m_rows * wcur * (wcur + 2 * r)
+        dense += d
+        sparse += 2 * m_rows * wcur * packed.shape[0] \
+            if wcur == tile_n else d
+        start += wcur
+    return dense, sparse
 
 
 def _case(shape: str, r: int, t: int, x) -> dict:
@@ -133,6 +167,15 @@ def _case(shape: str, r: int, t: int, x) -> dict:
             (N, N), TILE, DTYPE_BYTES, bands_shape=bands_new,
             h_block=hb) / t,
     }
+    # Star-vs-box sparsity sweep (DESIGN.md §14): element sparsity of the
+    # banded operand, the achievable kept-row fraction S, and the per-step
+    # MXU FLOPs with/without compaction (sparse == S * dense on this
+    # tile-aligned width; star keeps only its tap rows, box keeps all).
+    dense_f, sparse_f = _mxu_step_flops(w, TILE, N, N)
+    row["band_sparsity"] = band_sparsity(w.astype(np.float32), TILE)
+    row["kept_row_fraction"] = kept_row_fraction(w, TILE)
+    row["mxu_flops_step_dense"] = dense_f
+    row["mxu_flops_step_sparse"] = sparse_f
 
     # Execution goes through compiled plans: selection/sizing/weight
     # composition happen at build (accounted separately below), the plan's
@@ -162,6 +205,10 @@ def _case(shape: str, r: int, t: int, x) -> dict:
         "us_step_matmul_subblocked": stencil_plan(
             w, x.shape, x.dtype, t, backend="fused_matmul_reuse",
             tile_m=TILE, tile_n=TILE, h_block=hb, interpret=True),
+        # sparse-compacted MXU path, same substrate pins as the reuse plan
+        "us_step_matmul_sparse": stencil_plan(
+            w, x.shape, x.dtype, t, backend="fused_sparse_matmul",
+            tile_m=TILE, tile_n=TILE, h_block=hb, interpret=True),
     }
     iters = 2 if os.environ.get("BENCH_QUICK") else 5
     for key, plan in paths.items():
@@ -170,6 +217,9 @@ def _case(shape: str, r: int, t: int, x) -> dict:
         # paid once per signature -- never part of the per-step numbers
         row[key.replace("us_step_", "plan_build_us_")] = \
             plan.build_time_s * 1e6
+    row["sparse_bitwise_equal"] = bool(np.array_equal(
+        np.asarray(paths["us_step_matmul_sparse"](x)),
+        np.asarray(paths["us_step_matmul_subblocked"](x))))
     return row
 
 
@@ -203,6 +253,11 @@ def _case3d(shape: str, r: int, t: int, x3) -> dict:
         "read_bytes_step_matmul_subblocked": hbm_read_bytes_per_step_3d(
             N3, sub, DTYPE_BYTES, bands_shape=bands) / t,
     }
+    dense_f, sparse_f = _mxu_step_flops(w, TILE3, N3[2], N3[0] * N3[1])
+    row["band_sparsity"] = band_sparsity(w.astype(np.float32), TILE3)
+    row["kept_row_fraction"] = kept_row_fraction(w, TILE3)
+    row["mxu_flops_step_dense"] = dense_f
+    row["mxu_flops_step_sparse"] = sparse_f
 
     pins = dict(tile_m=STRIP3, z_slab=SLAB3, interpret=True)
     paths = {
@@ -217,12 +272,18 @@ def _case3d(shape: str, r: int, t: int, x3) -> dict:
         "us_step_matmul_subblocked": stencil_plan(
             w, N3, x3.dtype, t, backend="fused_matmul_reuse",
             tile_n=TILE3, h_block=hb, z_block=zb, **pins),
+        "us_step_matmul_sparse": stencil_plan(
+            w, N3, x3.dtype, t, backend="fused_sparse_matmul",
+            tile_n=TILE3, h_block=hb, z_block=zb, **pins),
     }
     iters = 1 if os.environ.get("BENCH_QUICK") else 3
     for key, plan in paths.items():
         row[key] = time_us(plan, x3, iters=iters) / t
         row[key.replace("us_step_", "plan_build_us_")] = \
             plan.build_time_s * 1e6
+    row["sparse_bitwise_equal"] = bool(np.array_equal(
+        np.asarray(paths["us_step_matmul_sparse"](x3)),
+        np.asarray(paths["us_step_matmul_subblocked"](x3))))
     return row
 
 
@@ -348,7 +409,8 @@ def run() -> list[str]:
     out = ["traffic.case,loads_old/new/sub,read_amp_direct_new,"
            "read_amp_direct_sub,rdMB_step_mm_old,rdMB_step_mm_new,"
            "rdMB_step_mm_sub,us_dir_old,us_dir_new,us_dir_sub,"
-           "us_mm_old,us_mm_new,us_mm_sub"]
+           "us_mm_old,us_mm_new,us_mm_sub,us_mm_sparse,kept_S,"
+           "sparse_bitwise"]
     grid_bytes = N * N * DTYPE_BYTES
     for c in rows:
         amp_new = c["read_bytes_step_direct_new"] * c["t"] / grid_bytes
@@ -363,11 +425,13 @@ def run() -> list[str]:
             f"{c['us_step_direct_old']:.0f},{c['us_step_direct_new']:.0f},"
             f"{c['us_step_direct_subblocked']:.0f},"
             f"{c['us_step_matmul_old']:.0f},{c['us_step_matmul_new']:.0f},"
-            f"{c['us_step_matmul_subblocked']:.0f}")
+            f"{c['us_step_matmul_subblocked']:.0f},"
+            f"{c['us_step_matmul_sparse']:.0f},"
+            f"{c['kept_row_fraction']:.4f},{c['sparse_bitwise_equal']}")
 
     out.append("traffic3d.case,read_amp_whole,read_amp_sub,"
                "rdMB_step_mm_whole,rdMB_step_mm_sub,us_dir_whole,us_dir_sub,"
-               "us_mm_whole,us_mm_sub")
+               "us_mm_whole,us_mm_sub,us_mm_sparse,kept_S,sparse_bitwise")
     for c in rows3d:
         out.append(
             f"traffic3d.{c['case']},{c['read_amp_wholestrip']:.2f}x,"
@@ -377,7 +441,9 @@ def run() -> list[str]:
             f"{c['us_step_direct_wholestrip']:.0f},"
             f"{c['us_step_direct_subblocked']:.0f},"
             f"{c['us_step_matmul_wholestrip']:.0f},"
-            f"{c['us_step_matmul_subblocked']:.0f}")
+            f"{c['us_step_matmul_subblocked']:.0f},"
+            f"{c['us_step_matmul_sparse']:.0f},"
+            f"{c['kept_row_fraction']:.4f},{c['sparse_bitwise_equal']}")
 
     out.append("trafficwide.case,w_tile/w_block,read_amp_whole,"
                "read_amp_coltiled,rdMB_step_dir_whole,rdMB_step_dir_col,"

@@ -39,6 +39,8 @@ LEGS = {
     "vmem": ("vmem", {}),
     "nan": ("nan", {"REPRO_NAN_WATCHDOG": "1"}),
     "halo": ("halo", {"XLA_FLAGS": "--xla_force_host_platform_device_count=2"}),
+    "sparse": ("vmem", {}),
+    "sparse_ladder": ("compile:inf", {}),
 }
 
 
@@ -162,9 +164,51 @@ def leg_halo():
     _bitwise(y, ref, "halo")
 
 
+def leg_sparse():
+    """One VMEM overflow on the sparse-compacted rung: the degraded
+    geometry of the SAME sparse backend must survive -- bitwise vs the
+    dense MXU plan (the compaction contract, DESIGN.md §14) and allclose
+    vs the oracle (the MXU contraction orders its f32 sums differently
+    from the direct reference, so bitwise is dense-vs-sparse, not
+    MXU-vs-VPU)."""
+    import numpy as np
+    import jax.numpy as jnp
+    from repro.kernels import guarded_stencil_plan, stencil_plan
+
+    w, x, ref = _setup2d()
+    g = guarded_stencil_plan(w, x.shape, x.dtype.type, 2,
+                             backend="fused_sparse_matmul")
+    y = g(jnp.asarray(x))
+    assert g.rung == "fused_sparse_matmul+degraded", g.rung
+    assert [h["cause"] for h in g.history] == ["vmem"], g.history
+    dense = stencil_plan(w, x.shape, x.dtype.type, 2,
+                         backend="fused_matmul_reuse")
+    _bitwise(y, np.asarray(dense(jnp.asarray(x))), "sparse-vs-dense")
+    assert np.allclose(np.asarray(y), ref, rtol=1e-5, atol=1e-5), \
+        "sparse: surviving rung drifted from the reference oracle"
+
+
+def leg_sparse_ladder():
+    """Every Pallas compile fails from the sparse rung: the walk must
+    pass straight down the dense ladder and bottom out on the reference
+    oracle with cause 'compile' at every failed rung."""
+    import jax.numpy as jnp
+    from repro.kernels import guarded_stencil_plan
+
+    w, x, ref = _setup2d()
+    g = guarded_stencil_plan(w, x.shape, x.dtype.type, 2,
+                             backend="fused_sparse_matmul")
+    y = g(jnp.asarray(x))
+    assert g.backend == "reference", g.rung
+    assert g.history and all(h["cause"] == "compile" for h in g.history), \
+        g.history
+    _bitwise(y, ref, "sparse_ladder")
+
+
 def run_child(leg: str) -> None:
     fn = {"clean": leg_clean, "compile": leg_compile, "vmem": leg_vmem,
-          "nan": leg_nan, "halo": leg_halo}[leg]
+          "nan": leg_nan, "halo": leg_halo, "sparse": leg_sparse,
+          "sparse_ladder": leg_sparse_ladder}[leg]
     fn()
     print(f"PASS {leg}")
 

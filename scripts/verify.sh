@@ -72,6 +72,31 @@ for c in cases:
     assert c["read_bytes_step_direct_subblocked"] < \
         c["read_bytes_step_direct_wholestrip"], c["case"]
     assert c["read_amp_subblocked"] < c["read_amp_wholestrip"], c["case"]
+# Sparse-compaction gate (DESIGN.md §14): every 2D and 3D case records
+# the star-vs-box sparsity sweep.  The compacted contraction must be
+# bitwise-equal to the dense reuse plan everywhere; star cases must
+# execute strictly fewer MXU FLOPs per step (kept-row fraction S < 1),
+# box cases exactly the dense count (S = 1 -- no structural zeros to
+# drop).  At least one star case must survive in each rank.
+sparse2d = [c for c in data["cases"]
+            if not c.get("timed_out") and "kept_row_fraction" in c]
+sparse = sparse2d + cases
+assert any(c["shape"] == "star" for c in sparse2d), \
+    "no surviving 2D star case for the sparse sweep"
+assert any(c["shape"] == "star" for c in cases), \
+    "no surviving 3D star case for the sparse sweep"
+for c in sparse:
+    assert c["sparse_bitwise_equal"], \
+        f"sparse output diverged from dense: {c['case']}"
+    if c["shape"] == "star":
+        assert c["mxu_flops_step_sparse"] < c["mxu_flops_step_dense"], \
+            (f"star case {c['case']} did not shrink MXU FLOPs: "
+             f"{c['mxu_flops_step_sparse']} !< {c['mxu_flops_step_dense']}")
+        assert c["kept_row_fraction"] < 1.0, c["case"]
+    else:
+        assert c["mxu_flops_step_sparse"] == c["mxu_flops_step_dense"], \
+            f"box case {c['case']} changed MXU FLOPs under compaction"
+        assert c["kept_row_fraction"] == 1.0, c["case"]
 wide = [c for c in data["cases_wide"] if not c.get("timed_out")]
 assert wide, f"no (surviving) wide-grid column-tiled cases in {path}"
 for c in wide:
@@ -89,10 +114,12 @@ assert guard.get("dropped", 0) == 0, "guard event ring buffer overflowed"
 stats = data.get("plan_stats", {})
 for k in ("build_failures", "exec_failures", "fallbacks"):
     assert stats.get(k, 0) == 0, f"clean run but plan_stats[{k!r}]={stats[k]}"
+n_star = sum(c["shape"] == "star" for c in sparse)
 print(f"verify: {len(cases)} 3D traffic case(s) in {path}, "
       "sub-blocked < whole-slab; "
       f"{len(wide)} wide case(s), column-tiled < whole-width foil; "
-      "guard event log clean")
+      f"{len(sparse)} sparse case(s) bitwise-equal "
+      f"({n_star} star < dense MXU FLOPs); guard event log clean")
 EOF
 
 # Serving gate (DESIGN.md §12): the batched engine must beat per-request

@@ -23,9 +23,16 @@ checked against it:
     shrinking-region sum telescopes to exactly (1/t) sum_j prod_m
     (1 + 2*r*j/size_m).
   * ``flops/matrix-reuse-model`` -- audited MXU FLOPs per output point
-    of the reuse backend match ``(beta / S) * flops_vector`` with S the
-    measured band sparsity (``flops_matrix_reuse``); rtol 5e-2 absorbs
-    final-chunk remainders on widths not divisible by tile_n.
+    of the reuse backends match ``(beta / S) * flops_vector`` with S the
+    measured band sparsity (``flops_matrix_reuse``; the sparse-compacted
+    launch is additionally scaled by its kept-row fraction); rtol 5e-2
+    absorbs final-chunk remainders on widths not divisible by tile_n.
+  * ``flops/sparse-compaction`` -- the compacted contraction (engine
+    ``"sparse_matmul"``, DESIGN.md §14) does exactly the packed-row FLOP
+    count -- S * dense on tile-aligned widths -- integer-exact against
+    the traced jaxpr, and never exceeds the dense count.  The expectation
+    is derived from ``bands_shape`` alone, so tampered gather metadata
+    cannot hide a mis-compaction.
 
 All model lookups go through the ``perfmodel`` module attribute at check
 time so a monkeypatched (i.e. wrong) model is caught, not baked in.
@@ -159,11 +166,56 @@ def mirror_launch_flops(launch, lg):
                 dot += launch.n_offsets * 2 * m * wcur * (wcur + 2 * r)
                 vec += launch.n_offsets * m * wcur    # acc = acc + dot
                 start += wcur
+        elif launch.engine == "sparse_matmul":
+            # Compacted contraction (DESIGN.md §14): full-width chunks
+            # contract only the packed rows -- summed over offsets that
+            # is exactly 2*m*tile_n*bands_shape[0] (= S * dense) -- while
+            # remainder chunks re-expand to the dense band prefix to stay
+            # graph-identical to the dense path (bitwise equality).
+            start = 0
+            while start < n:
+                wcur = min(launch.tile_n, n - start)
+                if wcur == launch.tile_n:
+                    dot += 2 * m * wcur * launch.bands_shape[0]
+                else:
+                    dot += launch.n_offsets * 2 * m * wcur * (wcur + 2 * r)
+                vec += launch.n_offsets * m * wcur    # acc = acc + dot
+                start += wcur
         else:
             nnz = int(np.count_nonzero(w))
             vec += 2 * nnz * m * n                    # per tap: mul + add
         cur = lead + [n]
     return vec * lg.cells, dot * lg.cells, points * lg.cells
+
+
+def _sparse_dense_dots(launch, lg):
+    """(compacted, dense) MXU FLOPs of one sparse launch.
+
+    The compacted expectation is derived from ``bands_shape`` alone --
+    independent of the ``band_lo``/``band_spans`` gather metadata -- so a
+    mis-compacted packed operand surfaces as a FLOP mismatch against the
+    traced jaxpr rather than silently passing.  The dense count is the
+    same walk with the full ``wcur + 2r`` contraction depth; on widths
+    divisible by tile_n their ratio is exactly the kept-row fraction S."""
+    w = np.asarray(launch.weights)
+    r = launch.radius
+    wrap = lg.kind not in ("coltiled", "slab_coltiled")
+    cur = list(_region(lg))
+    s_dot = d_dot = 0
+    for _ in range(launch.t_inner):
+        n = cur[-1] if wrap else cur[-1] - 2 * r
+        lead = [cur[i] - (w.shape[i] - 1) for i in range(w.ndim - 1)]
+        m = math.prod(lead)
+        start = 0
+        while start < n:
+            wcur = min(launch.tile_n, n - start)
+            d = launch.n_offsets * 2 * m * wcur * (wcur + 2 * r)
+            s_dot += 2 * m * wcur * launch.bands_shape[0] \
+                if wcur == launch.tile_n else d
+            d_dot += d
+            start += wcur
+        cur = lead + [n]
+    return s_dot * lg.cells, d_dot * lg.cells
 
 
 # --------------------------------------------------------------------------
@@ -208,6 +260,24 @@ def audit_flops(ctx, audit_spec, run) -> List[AuditCheck]:
         detail="jaxpr-counted FLOPs vs the kernel-walk mirror over the "
                "audited launch geometries"))
 
+    # ---- sparse compaction: traced MXU FLOPs == packed-row expectation
+    if launches and all(l.engine == "sparse_matmul" for l in launches):
+        expected_dot = dense_dot = 0
+        for launch, lg, _ in per_launch:
+            s_d, d_d = _sparse_dense_dots(launch, lg)
+            expected_dot += s_d
+            dense_dot += d_d
+        checks.append(AuditCheck(
+            "flops/sparse-compaction",
+            traced_dot == expected_dot and expected_dot <= dense_dot,
+            expected={"dot": expected_dot, "dense_dot": dense_dot},
+            actual={"dot": traced_dot,
+                    "kept": traced_dot / dense_dot if dense_dot else None},
+            detail="traced MXU FLOPs of the compacted contraction must "
+                   "equal the packed-row expectation (S * dense on "
+                   "tile-aligned widths), integer-exact, and never exceed "
+                   "the dense count"))
+
     spec, t = ctx.spec, ctx.t
     base_nnz = int(np.count_nonzero(np.asarray(ctx.weights)))
     canonical = base_nnz == spec.num_points
@@ -249,20 +319,26 @@ def audit_flops(ctx, audit_spec, run) -> List[AuditCheck]:
             detail=f"executed points per output point, {launch.engine} "
                    f"t_inner={launch.t_inner} vs reuse_beta"))
 
-        # ---- full matrix-reuse FLOP model on the MXU reuse backend ----
-        if launch.engine == "matmul" and canonical:
+        # ---- full matrix-reuse FLOP model on the MXU reuse backends ----
+        if launch.engine in ("matmul", "sparse_matmul") and canonical:
             s_meas = band_sparsity(np.asarray(launch.weights),
                                    launch.tile_n)
             audited_per_point = mirror_dot / (lg.cells
                                               * math.prod(lg.out_block))
             model_per_point = (model_beta / s_meas) \
                 * launch.t_inner * 2 * spec.num_points
+            if launch.engine == "sparse_matmul":
+                # The compacted launch executes the kept-row fraction of
+                # the dense model (DESIGN.md §14).
+                model_per_point *= launch.bands_shape[0] / (
+                    launch.n_offsets * (launch.tile_n + 2 * launch.radius))
             checks.append(AuditCheck(
                 "flops/matrix-reuse-model",
                 math.isclose(audited_per_point, model_per_point,
                              rel_tol=5e-2),
                 expected=model_per_point, actual=audited_per_point,
                 detail="audited MXU FLOPs per output point vs "
-                       "(beta/S) * flops_vector, S measured from the "
-                       "built bands"))
+                       "(beta/S) * flops_vector (* kept-row fraction for "
+                       "the compacted launch), S measured from the built "
+                       "bands"))
     return checks

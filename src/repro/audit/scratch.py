@@ -15,6 +15,13 @@ ring step.  This module verifies, statically and per launch geometry:
   * ``scratch/fire-last``       -- compute fires on the LAST ring step,
     after every slot of the cell's ring has been written (the grid walks
     the ring axis fastest, so steps 0..ring-1 of a cell are consecutive);
+  * ``scratch/gather-window``   -- sparse-compacted launches (engine
+    ``"sparse_matmul"``, DESIGN.md §14) declare per-band gather metadata
+    (``band_lo``, ``band_spans``); every band's gathered input window
+    ``[lo, lo + tile + span)`` must lie inside the dense band support
+    (``0 <= lo``, ``lo + span <= 2*radius``) and the packed operand's
+    row count must equal ``sum(tile_n + span_p)`` -- full coverage of
+    the kept contraction rows with nothing read out of bounds;
   * ``scratch/coverage-global`` -- for each sampled output cell and every
     ring step, the fetched source block lands in the slot whose scratch
     coordinates correspond to its true global coordinates: scratch
@@ -47,12 +54,45 @@ def _sample_cells(cell_dims, limit: int = 64):
     return list(itertools.product(*axes))
 
 
+def _gather_window_check(launch) -> AuditCheck:
+    """Sparse-compacted launches: prove the per-band gather metadata
+    covers exactly the kept contraction rows inside the dense band
+    support (the compacted analogue of ``scratch/read-window``)."""
+    r, tile_n = launch.radius, launch.tile_n
+    lo, spans = launch.band_lo, launch.band_spans
+    problems = []
+    if lo is None or spans is None:
+        problems.append("missing band_lo/band_spans metadata")
+    elif not (len(lo) == len(spans) == launch.n_offsets):
+        problems.append(f"{len(lo)} band_lo / {len(spans)} band_spans "
+                        f"!= {launch.n_offsets} offsets")
+    else:
+        for p, (l, s) in enumerate(zip(lo, spans)):
+            if not (0 <= l and 0 <= s and l + s <= 2 * r):
+                problems.append(f"band {p}: window [lo={l}, lo+span={l+s}) "
+                                f"outside dense support [0, {2*r}]")
+        kept = sum(tile_n + s for s in spans)
+        if launch.bands_shape is None or kept != launch.bands_shape[0]:
+            problems.append(f"packed rows {launch.bands_shape} != "
+                            f"sum(tile_n + span) = {kept}")
+    return AuditCheck(
+        "scratch/gather-window", not problems,
+        expected="every band gathers [lo, lo + tile + span) inside the "
+                 "dense band support; packed rows == sum(tile_n + span)",
+        actual=problems or "ok",
+        detail="sparse-compacted gather metadata must cover exactly the "
+               "kept contraction rows (DESIGN.md §14)")
+
+
 def audit_scratch(lg, launch) -> List[AuditCheck]:
     """All scratch-pipeline checks for one launch geometry (empty list
-    for the scratch-free foil/flat kinds -- nothing to prove)."""
-    if lg.scratch_shape is None:
-        return []
+    for the scratch-free foil/flat kinds -- nothing to prove beyond the
+    sparse gather window, which is substrate-independent)."""
     checks: List[AuditCheck] = []
+    if launch.engine == "sparse_matmul":
+        checks.append(_gather_window_check(launch))
+    if lg.scratch_shape is None:
+        return checks
     ring = lg.ring
     n_ring_axes = len(lg.block_dims)
 

@@ -14,8 +14,13 @@ This module is the paper's primary contribution (§3--§4) in executable form:
     for by the halo-recompute factor  beta = 1 + r*(t-1)/strip_m,  giving
     I_TC,reuse^(t) = beta * t * K / (S * D)  with S evaluated at the BASE
     radius r (not t*r as in monolithic fusion),
-  * the Sparse-Tensor-Core extension (Eq. 20) -- kept analytical on TPU
-    (no sparse-MXU hardware analogue; see DESIGN.md §8).
+  * the Sparse-Tensor-Core extension (Eq. 20) -- the raised-ceiling model
+    (``perf_sparse_matrix``) plus the EXECUTED band-compaction regime
+    (``perf_sparse_banded{,_reuse}``, DESIGN.md §14): the banded operand
+    keeps only its structurally-nonzero contraction rows (kept-row
+    fraction ``kept`` = kernels.stencil_sparse.kept_row_fraction),
+    shrinking executed MXU FLOPs and the streamed K-dimension by ``kept``
+    at a small in-kernel gather overhead ``compaction_overhead(tile_n)``.
 
 Naming note: the paper says "CUDA Core" / "Tensor Core"; we use the neutral
 ``vector`` / ``matrix`` unit names so the same model covers TPU VPU / MXU.
@@ -171,6 +176,46 @@ class StencilWorkload:
         return (self.flops_matrix_reuse(sparsity, strip_m, z_slab, w_tile)
                 / self.bytes_per_output())
 
+    # ---- sparse-compacted matrix-unit execution (DESIGN.md §14)
+    def flops_sparse_matrix(self, sparsity: float, kept: float,
+                            overhead: float = 0.0) -> float:
+        """C_SpTC^(t) = kept*(1+overhead) * C_TC^(t) per output point.
+
+        ``kept`` is the compacted operand's kept-row fraction S (row
+        compaction drops exactly the all-zero contraction rows, so the
+        executed MXU FLOPs shrink by precisely this factor -- proven
+        integer-exact by repro.audit's flops/sparse-compaction check);
+        ``overhead`` the relative cost of the in-kernel input-row gather
+        (``compaction_overhead``).
+        """
+        _check_kept(kept)
+        return kept * (1.0 + overhead) * self.flops_matrix(sparsity)
+
+    def intensity_sparse_matrix(self, sparsity: float, kept: float,
+                                overhead: float = 0.0) -> float:
+        return (self.flops_sparse_matrix(sparsity, kept, overhead)
+                / self.bytes_per_output())
+
+    def flops_sparse_matrix_reuse(self, sparsity: float, kept: float,
+                                  overhead: float = 0.0, strip_m: int = 128,
+                                  z_slab: Optional[int] = None,
+                                  w_tile: Optional[int] = None) -> float:
+        """Reuse regime on the compacted operand: kept*(1+overhead) times
+        the dense reuse FLOPs (beta at the BASE radius, like the dense
+        reuse regime; ``kept`` likewise at the base radius)."""
+        _check_kept(kept)
+        return kept * (1.0 + overhead) * self.flops_matrix_reuse(
+            sparsity, strip_m, z_slab, w_tile)
+
+    def intensity_sparse_matrix_reuse(self, sparsity: float, kept: float,
+                                      overhead: float = 0.0,
+                                      strip_m: int = 128,
+                                      z_slab: Optional[int] = None,
+                                      w_tile: Optional[int] = None) -> float:
+        return (self.flops_sparse_matrix_reuse(sparsity, kept, overhead,
+                                               strip_m, z_slab, w_tile)
+                / self.bytes_per_output())
+
 
 def halo_recompute_factor(radius: int, t: int, strip_m: int = 128) -> float:
     """beta: executed rows / useful rows for the in-VMEM reuse pipeline.
@@ -251,6 +296,30 @@ def reuse_beta(spec: StencilSpec, t: int, strip_m: int = 128,
 def _check_sparsity(s: float) -> None:
     if not (0.0 < s <= 1.0):
         raise ValueError(f"sparsity factor must be in (0, 1], got {s}")
+
+
+def _check_kept(kept: float) -> None:
+    if not (0.0 < kept <= 1.0):
+        raise ValueError(f"kept-row fraction must be in (0, 1], got {kept}")
+
+
+def compaction_overhead(tile_n: int) -> float:
+    """Relative in-kernel gather cost of the compacted contraction.
+
+    Each kept contraction row is one gathered input element per output
+    row (the shifted-slab slice at ``lo``), amortized over the 2*tile_n
+    MACs that row feeds in the banded matmul:
+
+        overhead = 1 / (2 * tile_n)
+
+    -> 0 as chunks widen; ~0.4% at the default 128-wide tile.  Charged
+    multiplicatively on the executed sparse FLOPs, it is the term that
+    keeps near-dense compactions (box kernels, kept = 1) from ever
+    out-pricing the dense path.
+    """
+    if tile_n <= 0:
+        raise ValueError(f"tile_n must be positive, got {tile_n}")
+    return 1.0 / (2.0 * tile_n)
 
 
 # ---------------------------------------------------------------------------
@@ -336,6 +405,55 @@ def perf_sparse_matrix(w: StencilWorkload, hw: HardwareSpec, sparsity: float) ->
     actual = (sparsity / w.alpha) * raw
     return UnitPerf("sparse_matrix", i, raw, actual,
                     bound_state(hw.p_sparse, hw.bandwidth, i), hw.ridge_sparse)
+
+
+def _sparse_peak(hw: HardwareSpec) -> float:
+    """Ceiling of the band-compacted contraction: the sparse unit where
+    one exists (A100 SpTC), else the plain MXU -- compaction's
+    effective-FLOP reduction is real on any matrix unit (it shrinks the
+    executed K-dimension; no special hardware required)."""
+    return hw.p_matrix if hw.p_sparse is None else hw.p_sparse
+
+
+def perf_sparse_banded(w: StencilWorkload, hw: HardwareSpec, sparsity: float,
+                       kept: float, overhead: float = 0.0) -> UnitPerf:
+    """Executed band-compaction regime, monolithic fusion (DESIGN.md §14).
+
+    Executed FLOPs shrink to kept*(1+overhead) of the dense matrix path
+    (same useful work), so the useful-work deflator becomes
+    S / (alpha * kept * (1+overhead)).  Compute-bound workloads gain the
+    full 1/(kept*(1+overhead)) factor; memory-bound ones tie with the
+    dense path to first order (B*I shrinks by exactly what the deflator
+    regains), minus the overhead term -- the sparse sweet spot is the
+    compute-bound region with  kept*(1+overhead) < 1  (star stencils;
+    box kernels compact to kept = 1 and never profit).
+    """
+    _check_kept(kept)
+    peak = _sparse_peak(hw)
+    i = w.intensity_sparse_matrix(sparsity, kept, overhead)
+    raw = attainable(peak, hw.bandwidth, i)
+    actual = (sparsity / (w.alpha * kept * (1.0 + overhead))) * raw
+    return UnitPerf("sparse_banded", i, raw, actual,
+                    bound_state(peak, hw.bandwidth, i), peak / hw.bandwidth)
+
+
+def perf_sparse_banded_reuse(w: StencilWorkload, hw: HardwareSpec,
+                             sparsity: float, kept: float,
+                             overhead: float = 0.0, strip_m: int = 128,
+                             z_slab: Optional[int] = None,
+                             w_tile: Optional[int] = None) -> UnitPerf:
+    """Executed band-compaction regime with intermediate reuse: the dense
+    reuse pipeline (alpha=1, dim-aware beta) on the compacted operand.
+    ``sparsity`` and ``kept`` are both at the BASE radius r."""
+    _check_kept(kept)
+    peak = _sparse_peak(hw)
+    i = w.intensity_sparse_matrix_reuse(sparsity, kept, overhead,
+                                        strip_m, z_slab, w_tile)
+    raw = attainable(peak, hw.bandwidth, i)
+    beta = reuse_beta(w.spec, w.t, strip_m, z_slab, w_tile)
+    actual = (sparsity / (beta * kept * (1.0 + overhead))) * raw
+    return UnitPerf("sparse_banded_reuse", i, raw, actual,
+                    bound_state(peak, hw.bandwidth, i), peak / hw.bandwidth)
 
 
 # ---------------------------------------------------------------------------

@@ -202,7 +202,8 @@ class _EnvPin:
 
 
 def _start_backend(weights, grid_shape, dtype, t, hw, backend,
-                   tile_m, h_block, z_slab, z_block, w_tile, w_block):
+                   tile_m, h_block, z_slab, z_block, w_tile, w_block,
+                   use_sparse_unit=False):
     """The name the first rung executes: the override if given, else the
     selector's pick -- computed exactly as ``stencil_plan`` itself would,
     so the ladder agrees with the unguarded decision.  Returns ``None``
@@ -222,7 +223,8 @@ def _start_backend(weights, grid_shape, dtype, t, hw, backend,
             z_slab=geom.z_slab if geom.dim == 3 else None,
             z_block=geom.z_block if geom.dim == 3 else None,
             w_tile=geom.w_tile if geom.dim >= 2 else None,
-            w_block=geom.w_block if geom.dim >= 2 else None)
+            w_block=geom.w_block if geom.dim >= 2 else None,
+            use_sparse_unit=use_sparse_unit)
         return decision.backend
     except Exception:
         return None
@@ -262,7 +264,8 @@ class GuardedPlan:
             self._kwargs.get("backend"),
             self._kwargs.get("tile_m"), self._kwargs.get("h_block"),
             self._kwargs.get("z_slab"), self._kwargs.get("z_block"),
-            self._kwargs.get("w_tile"), self._kwargs.get("w_block"))
+            self._kwargs.get("w_tile"), self._kwargs.get("w_block"),
+            self._kwargs.get("use_sparse_unit", False))
 
         requested = self._kwargs.get("backend")  # None = auto
         self._rungs: List[_Rung] = [_Rung(requested, False),

@@ -16,6 +16,10 @@ Backends (see ``repro.kernels.registry``; any registered name is accepted)
   fused_matmul_reuse  one MXU kernel, t radius-r banded    (intermediate reuse:
                       contractions w/ VMEM intermediates    alpha=1, halo-recompute
                                                             beta -- DESIGN.md §4)
+  sparse_matmul /     the two regimes above with the banded (sparse-tensor-core
+  fused_sparse_matmul operand compacted to its nonzero band regime; priced only
+                      rows -- K shrinks by the kept-row     under use_sparse_unit
+                      fraction S, bitwise-equal outputs     -- DESIGN.md §14)
   reference           jnp oracle (debug)
   legacy_direct/      seed 9-tile substrate (benchmark foil)
   legacy_matmul
@@ -60,6 +64,7 @@ def stencil_apply(
     w_block: Optional[int] = None,
     interpret: Optional[bool] = None,
     compute_dtype=None,
+    use_sparse_unit: bool = False,
     guard: bool = False,
     watchdog: Optional[bool] = None,
 ) -> jax.Array:
@@ -85,6 +90,7 @@ def stencil_apply(
         tile_m=tile_m, tile_n=tile_n, h_block=h_block,
         z_slab=z_slab, z_block=z_block, w_tile=w_tile, w_block=w_block,
         interpret=interpret, compute_dtype=compute_dtype,
+        use_sparse_unit=use_sparse_unit,
     )
     if guard:
         from .guard import guarded_stencil_plan
@@ -102,6 +108,7 @@ def explain(
     z_slab: Optional[int] = None, z_block: Optional[int] = None,
     w_tile: Optional[int] = None, w_block: Optional[int] = None,
     grid_shape=None, tile_m: Optional[int] = None,
+    use_sparse_unit: bool = False,
 ) -> Decision:
     """Expose the dispatch decision (scenario, predicted speedup, reason).
 
@@ -132,4 +139,5 @@ def explain(
     return decide(spec, t, dtype_bytes, hw,
                   tile_n=tile_n, strip_m=strip_m, h_block=h_block,
                   z_slab=z_slab, z_block=z_block,
-                  w_tile=w_tile, w_block=w_block)
+                  w_tile=w_tile, w_block=w_block,
+                  use_sparse_unit=use_sparse_unit)

@@ -72,17 +72,20 @@ def decide(
     z_block: Optional[int] = None,
     w_tile: Optional[int] = None,
     w_block: Optional[int] = None,
+    use_sparse_unit: bool = False,
 ) -> Decision:
     """THE decision path: plan building, ``stencil_apply(backend="auto")``
     and ``ops.explain`` all consult this one function, so they can never
     disagree about the priced ``Decision``.  ``z_slab``/``z_block`` matter
     only for 3D specs (the halo-plane substrate's depth geometry);
     ``w_tile``/``w_block`` price the column-tiled W substrate
-    (DESIGN.md §10; ``None``/0 = full width)."""
+    (DESIGN.md §10; ``None``/0 = full width); ``use_sparse_unit`` admits
+    the sparse-compacted backends as priced candidates (DESIGN.md §14)."""
     return select_backend(spec, t, dtype_bytes=dtype_bytes, hw=hw,
                           tile_n=tile_n, strip_m=strip_m, h_block=h_block,
                           z_slab=z_slab, z_block=z_block,
-                          w_tile=w_tile, w_block=w_block)
+                          w_tile=w_tile, w_block=w_block,
+                          use_sparse_unit=use_sparse_unit)
 
 
 class StencilPlan:
@@ -403,6 +406,7 @@ def plan_signature(
     batch_mode: str = "auto",
     interpret: Optional[bool] = None,
     compute_dtype=None,
+    use_sparse_unit: bool = False,
 ) -> Tuple:
     """Validate plan arguments and return ``(key, weights, grid_shape,
     interpret)`` -- the deterministic cache signature WITHOUT building.
@@ -462,7 +466,7 @@ def plan_signature(
            shard_key, backend, tile_m, tile_n, h_block, z_slab, z_block,
            w_tile, w_block, batch_key, vmem_budget_bytes(), interpret,
            None if compute_dtype is None else _dtype_key(compute_dtype),
-           registry.generation())
+           bool(use_sparse_unit), registry.generation())
     return key, weights, grid_shape, interpret
 
 
@@ -488,6 +492,7 @@ def stencil_plan(
     batch_mode: str = "auto",
     interpret: Optional[bool] = None,
     compute_dtype=None,
+    use_sparse_unit: bool = False,
     use_cache: bool = True,
     audit: Optional[bool] = None,
 ) -> StencilPlan:
@@ -527,6 +532,9 @@ def stencil_plan(
       batch_mode: how the batch axis folds -- see :data:`BATCH_MODES`
         ("auto" = "map" under interpret, "vmap" compiled).
       interpret: Pallas interpret mode; ``None`` = off-TPU default.
+      use_sparse_unit: admit the sparse-compacted backends
+        (``sparse_matmul``/``fused_sparse_matmul``, DESIGN.md §14) as
+        priced auto candidates; part of the cache key.
       use_cache: bypass the process-wide plan cache when ``False``.
       audit: run the static auditor (repro.audit) over the built plan and
         attach its report as ``plan.audit_report`` (``None`` defers to the
@@ -541,7 +549,8 @@ def stencil_plan(
         tile_m=tile_m, tile_n=tile_n, h_block=h_block, z_slab=z_slab,
         z_block=z_block, w_tile=w_tile, w_block=w_block,
         batch=batch, batch_mode=batch_mode,
-        interpret=interpret, compute_dtype=compute_dtype)
+        interpret=interpret, compute_dtype=compute_dtype,
+        use_sparse_unit=use_sparse_unit)
     with _LOCK:
         if use_cache and key in _CACHE:
             _STATS["hits"] += 1
@@ -567,6 +576,7 @@ def stencil_plan(
         z_block=geom_px.z_block if geom_px.dim == 3 else None,
         w_tile=geom_px.w_tile if geom_px.dim >= 2 else None,
         w_block=geom_px.w_block if geom_px.dim >= 2 else None,
+        use_sparse_unit=use_sparse_unit,
     )
     exec_backend = backend if backend is not None else decision.backend
 

@@ -41,6 +41,7 @@ from . import legacy as _legacy
 from . import ref as _ref
 from .stencil_direct import stencil_direct
 from .stencil_matmul import build_bands_nd, stencil_matmul
+from .stencil_sparse import compact_bands, stencil_sparse_matmul
 
 
 # ---------------------------------------------------------------------------
@@ -129,10 +130,17 @@ class LaunchAudit:
     t_inner: int                  # in-VMEM steps inside the launch
     weights: np.ndarray           # kernel-rank operand (1D grids lifted)
     radius: int                   # per-step x radius of ``weights``
-    engine: str                   # "direct" | "matmul"
+    engine: str                   # "direct" | "matmul" | "sparse_matmul"
     tile_n: int = 0               # MXU column-chunk width
     bands_shape: Optional[Tuple[int, ...]] = None
     n_offsets: int = 0            # banded operand rows actually built
+    #: Sparse-compacted launches (engine "sparse_matmul") also declare the
+    #: per-band gather metadata: ``band_lo[p]`` the first kept contraction
+    #: row (the input-gather offset) and ``band_spans[p]`` the tap span
+    #: (kept rows = tile_n + span).  ``bands_shape`` is then the PACKED
+    #: operand's shape, whose row count proves the kept-row fraction S.
+    band_lo: Optional[Tuple[int, ...]] = None
+    band_spans: Optional[Tuple[int, ...]] = None
 
     def launch_geometry(self):
         """The exact structure the substrate launches for this geometry."""
@@ -168,6 +176,15 @@ def _launch_audit(ctx: PlanContext, geom: SubstrateGeom, w_op, t_inner: int,
         offsets, bands = build_bands_nd(w_op.astype(np.float32), tile_n)
         extra = dict(tile_n=tile_n, bands_shape=tuple(bands.shape),
                      n_offsets=len(offsets))
+    elif engine == "sparse_matmul":
+        tile_n = ctx.resolve_tile_n()
+        offsets, bands = build_bands_nd(w_op.astype(np.float32), tile_n)
+        row_index, packed = compact_bands(offsets, bands)
+        extra = dict(tile_n=tile_n, bands_shape=tuple(packed.shape),
+                     n_offsets=len(offsets),
+                     band_lo=tuple(int(ix[0]) for ix in row_index),
+                     band_spans=tuple(int(ix.size) - tile_n
+                                      for ix in row_index))
     return LaunchAudit(geom=geom, grid_shape=tuple(ctx.grid_shape),
                        halo=halo, x_halo=x_halo, t_inner=t_inner,
                        weights=w_op, radius=radius, engine=engine, **extra)
@@ -201,6 +218,18 @@ def _audit_fused_matmul(ctx: PlanContext) -> AuditSpec:
 def _audit_fused_matmul_reuse(ctx: PlanContext) -> AuditSpec:
     l = _launch_audit(ctx, ctx.resolve_geom(ctx.t * ctx.radius), ctx.weights,
                       ctx.t, "matmul")
+    return AuditSpec(launches=(l,))
+
+
+def _audit_sparse_matmul(ctx: PlanContext) -> AuditSpec:
+    l = _launch_audit(ctx, ctx.resolve_geom(ctx.radius), ctx.weights,
+                      1, "sparse_matmul")
+    return AuditSpec(launches=(l,) * ctx.t)
+
+
+def _audit_fused_sparse_matmul(ctx: PlanContext) -> AuditSpec:
+    l = _launch_audit(ctx, ctx.resolve_geom(ctx.t * ctx.radius), ctx.weights,
+                      ctx.t, "sparse_matmul")
     return AuditSpec(launches=(l,))
 
 
@@ -423,6 +452,39 @@ def _build_fused_matmul_reuse(ctx: PlanContext) -> Callable:
     return run
 
 
+def _build_sparse_matmul(ctx: PlanContext) -> Callable:
+    """t sequential sparse-compacted MXU contractions, halo r per step."""
+    w, t, r = ctx.weights, ctx.t, ctx.radius
+    geom, tile_n = ctx.resolve_geom(r), ctx.resolve_tile_n()
+    ctx.validate(geom, tile_n, r, r)
+    kw = ctx.kernel_kwargs(geom)
+    interp, cdt = ctx.interpret, ctx.compute_dtype
+
+    def run(x):
+        for _ in range(t):
+            x = stencil_sparse_matmul(x, w, t=1, tile_n=tile_n,
+                                      interpret=interp, compute_dtype=cdt,
+                                      **kw)
+        return x
+    return run
+
+
+def _build_fused_sparse_matmul(ctx: PlanContext) -> Callable:
+    """Intermediate reuse on the compacted operand: t radius-r sparse
+    contractions in one kernel, VMEM intermediates."""
+    w, t, r = ctx.weights, ctx.t, ctx.radius
+    geom, tile_n = ctx.resolve_geom(t * r), ctx.resolve_tile_n()
+    ctx.validate(geom, tile_n, t * r, r)
+    kw = ctx.kernel_kwargs(geom)
+    interp, cdt = ctx.interpret, ctx.compute_dtype
+
+    def run(x):
+        return stencil_sparse_matmul(x, w, t=t, tile_n=tile_n,
+                                     interpret=interp, compute_dtype=cdt,
+                                     **kw)
+    return run
+
+
 def _wholestrip(build: Callable) -> Callable:
     """Same regime on the whole-strip (3-load) substrate: force h_block=0."""
     def build_ws(ctx: PlanContext) -> Callable:
@@ -490,15 +552,37 @@ def _price_fused_matmul(p):
 
 
 def _price_fused_matmul_reuse(p):
-    # t=1 reuse degenerates to "matmul"; only offered at depth.  The sparse
-    # unit has no reuse analogue modeled (DESIGN.md §8).  z_slab (3D) and
-    # w_tile (column-tiled substrate) feed the dim-aware beta; both are
-    # None/0 for full-width 1D/2D workloads.
+    # t=1 reuse degenerates to "matmul"; only offered at depth.  z_slab
+    # (3D) and w_tile (column-tiled substrate) feed the dim-aware beta;
+    # both are None/0 for full-width 1D/2D workloads.
     if p.workload.t == 1:
         return None
     return pm.perf_matrix_reuse(p.workload, p.hw, p.s_reuse,
                                 p.strip_m, p.z_slab,
                                 p.w_tile or None).actual_flops
+
+
+def _price_sparse_matmul(p):
+    # Candidates only when the user opts into the sparse unit (DESIGN.md
+    # §14): compaction's effective-FLOP reduction is real on any MXU, but
+    # the selection policy treats it as the Sparse-Tensor-Core regime the
+    # paper prices, flipped on explicitly.  Priced from the COMPACTED
+    # operand: kept-row fraction * (1 + gather overhead) scales the dense
+    # matrix FLOPs.
+    if not p.use_sparse_unit or p.workload.t != 1:
+        return None
+    return pm.perf_sparse_banded(
+        p.workload, p.hw, p.s_mono, p.kept_mono,
+        pm.compaction_overhead(p.tile_n)).actual_flops
+
+
+def _price_fused_sparse_matmul(p):
+    if not p.use_sparse_unit or p.workload.t == 1:
+        return None
+    return pm.perf_sparse_banded_reuse(
+        p.workload, p.hw, p.s_reuse, p.kept_reuse,
+        pm.compaction_overhead(p.tile_n), p.strip_m, p.z_slab,
+        p.w_tile or None).actual_flops
 
 
 # Fallback ranks order the degradation ladder from most aggressive (deep
@@ -522,6 +606,17 @@ register_backend("fused_matmul_reuse", _build_fused_matmul_reuse,
                  "one MXU kernel, t radius-r contractions, VMEM intermediates",
                  unit="matrix", fallback_rank=10,
                  audit=_audit_fused_matmul_reuse)
+# Sparse-compacted pair (DESIGN.md §14): ladder rungs between the reuse
+# regime and monolithic fusion -- compaction only drops exact-zero band
+# rows, so these rungs are bitwise-safe fallbacks for box kernels too.
+register_backend("fused_sparse_matmul", _build_fused_sparse_matmul,
+                 _price_fused_sparse_matmul,
+                 "one MXU kernel, t sparse-compacted radius-r contractions, "
+                 "VMEM intermediates", unit="matrix", fallback_rank=12,
+                 audit=_audit_fused_sparse_matmul)
+register_backend("sparse_matmul", _build_sparse_matmul, _price_sparse_matmul,
+                 "t sequential sparse-compacted MXU contractions",
+                 unit="matrix", fallback_rank=16, audit=_audit_sparse_matmul)
 register_backend("reference", _build_reference,
                  description="pure-jnp oracle (debug)", fallback_rank=1000,
                  audit=_audit_exempt("pure-jnp oracle: no launch structure "
