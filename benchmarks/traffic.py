@@ -49,6 +49,19 @@ escalates), whole-width 3-load foil (3x) vs the column-tiled substrate
 (w_tile, w_block) recorded and ``scripts/verify.sh`` asserting the
 column-tiled amplification stays below the whole-width foil.
 
+Per-axis boundary modes (DESIGN.md §15) ride the sweep two ways: every
+row carries a ``boundary`` column (the legacy sweeps are all-periodic,
+the ``cases_boundary`` sweep times the sub-blocked VPU/MXU plans under
+zero/reflect/replicate/mixed specs with a mode-matched oracle check),
+and ``halo_overlap`` records the distributed overlap-vs-serialized
+timing pair: a 2-device subprocess times the ``overlap`` stepper (one
+dispatch, interior concurrent with the exchange) against the
+serialized-exchange foil (per step: exchange dispatch, host sync,
+compute dispatch -- the execution a runtime without overlap pays),
+bitwise-equal outputs, with the trace-time interleave counters
+(``interior_before_recv_consumed``) proving the interior launch never
+waited on a recv.
+
 Results also land in BENCH_kernels.json (repo root) for cross-PR
 trajectory tracking.
 """
@@ -56,7 +69,9 @@ from __future__ import annotations
 
 import json
 import os
+import subprocess
 import sys
+import textwrap
 
 import jax.numpy as jnp
 import numpy as np
@@ -74,6 +89,8 @@ from repro.kernels.stencil_matmul import (band_sparsity, build_bands,
                                           build_bands_nd)
 from repro.kernels.stencil_sparse import compact_bands, kept_row_fraction
 from repro.stencil import StencilSpec, fuse_weights, make_weights
+from repro.stencil.boundary import boundary_label, resolve_boundary
+from repro.stencil.reference import apply_stencil_steps
 
 N = 128            # grid edge (small: interpret-mode kernels on CPU)
 TILE = 32          # seed tile edge == strip height (fair per-cell VMEM)
@@ -147,6 +164,7 @@ def _case(shape: str, r: int, t: int, x) -> dict:
 
     row = {
         "case": f"{spec.name}-t{t}", "shape": shape, "r": r, "t": t,
+        "boundary": "periodic",
         "loads_per_tile_old": len(legacy.NEIGHBOR_OFFSETS_2D),
         "loads_per_tile_new": common.STRIP_NEIGHBOR_LOADS,
         "loads_per_tile_subblocked": TILE // hb + 2,
@@ -238,6 +256,7 @@ def _case3d(shape: str, r: int, t: int, x3) -> dict:
 
     row = {
         "case": f"{spec.name}-t{t}", "shape": shape, "dim": 3, "r": r, "t": t,
+        "boundary": "periodic",
         "z_slab": SLAB3, "strip_m": STRIP3, "h_block": hb, "z_block": zb,
         "loads_per_cell_wholestrip": 9,
         "loads_per_cell_subblocked": (SLAB3 // zb + 2) * (STRIP3 // hb + 2),
@@ -307,6 +326,7 @@ def _case_wide(shape: str, r: int, t: int, xw) -> dict:
 
         row = {
             "case": f"{spec.name}-t{t}-wide", "shape": shape, "r": r, "t": t,
+            "boundary": "periodic",
             "grid": list(N_WIDE), "vmem_budget": WIDE_BUDGET,
             "strip_m": geom.strip_m, "h_block": geom.h_block,
             "w_tile": geom.w_tile, "w_block": geom.w_block,
@@ -356,6 +376,135 @@ def _case_wide(shape: str, r: int, t: int, xw) -> dict:
             os.environ["REPRO_VMEM_BUDGET"] = old_budget
 
 
+#: Boundary-mode sweep (DESIGN.md §15): the sub-blocked VPU and
+#: intermediate-reuse MXU plans under each non-periodic mode (plus the
+#: periodic pin and a mixed per-axis spec), oracle-checked per row.
+CASES_BOUNDARY = ["periodic", "zero", "reflect", "replicate",
+                  ("reflect", "periodic")]
+QUICK_CASES_BOUNDARY = ["periodic", "reflect"]
+#: Overlap-vs-serialized pair geometry (2-device subprocess).
+OVERLAP_GRID, OVERLAP_T = (256, 256), 4
+
+
+def _case_boundary(mode, x) -> dict:
+    """Time the sub-blocked plans under one boundary spec; per-step
+    boundary fills are VPU row-selects, so non-periodic rows should sit
+    within noise of the periodic pin -- the column makes that claim
+    checkable across PRs."""
+    spec = StencilSpec("box", 2, 1)
+    w = make_weights(spec, seed=1)
+    t = 2
+    modes = resolve_boundary(mode, 2)
+    row = {"case": f"boundary-{boundary_label(modes)}", "shape": "box",
+           "r": 1, "t": t, "boundary": boundary_label(modes)}
+    paths = {
+        "us_step_direct_subblocked": stencil_plan(
+            w, x.shape, x.dtype, t, backend="fused_direct",
+            tile_m=TILE, boundary=mode, interpret=True),
+        "us_step_matmul_subblocked": stencil_plan(
+            w, x.shape, x.dtype, t, backend="fused_matmul_reuse",
+            tile_m=TILE, tile_n=TILE, boundary=mode, interpret=True),
+    }
+    iters = 2 if os.environ.get("BENCH_QUICK") else 5
+    for key, plan in paths.items():
+        row[key] = time_us(plan, x, iters=iters) / t
+        row[key.replace("us_step_", "plan_build_us_")] = \
+            plan.build_time_s * 1e6
+    ref = np.asarray(apply_stencil_steps(x, jnp.asarray(w, x.dtype), t,
+                                         modes))
+    row["oracle_max_err"] = max(
+        float(np.max(np.abs(np.asarray(p(x)) - ref)))
+        for p in paths.values())
+    return row
+
+
+def _case_halo_overlap() -> dict:
+    """Distributed overlap-vs-serialized timing pair (2 host devices).
+
+    The serialized-exchange foil executes each step as two dispatches
+    with a host sync between them -- the exchange must COMPLETE before
+    the compute launches, which is exactly what a runtime without
+    overlap pays.  The overlap stepper is one dispatch for all t steps
+    with the interior scheduled against the in-flight ppermute pair.
+    Runs in a subprocess because the host-device count pins at first
+    jax init (the benchmark process itself must stay single-device).
+    """
+    code = textwrap.dedent("""
+        import json, time
+        import jax, numpy as np, jax.numpy as jnp
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+        from repro.stencil import StencilSpec, make_weights
+        from repro.stencil.distributed import (
+            _extend, apply_stencil_valid, make_distributed_stepper,
+            overlap_stats, reset_overlap_stats)
+
+        (h, wdt), t, r = %(grid)s, %(t)d, 1
+        mesh = Mesh(np.array(jax.devices()), ("i",))
+        dims = ("i", None)
+        w = make_weights(StencilSpec("box", 2, r), seed=0)
+        x = np.random.default_rng(0).normal(size=(h, wdt)) \\
+              .astype(np.float32)
+        xd = jax.device_put(jnp.asarray(x), NamedSharding(mesh,
+                                                          P("i", None)))
+        spec = P("i", None)
+        wj = jnp.asarray(w)
+        ext = jax.jit(shard_map(lambda a: _extend(a, r, dims), mesh=mesh,
+                                in_specs=(spec,), out_specs=spec,
+                                check_rep=False))
+        comp = jax.jit(shard_map(lambda a: apply_stencil_valid(a, wj),
+                                 mesh=mesh, in_specs=(spec,),
+                                 out_specs=spec, check_rep=False))
+
+        def serialized(a):
+            for _ in range(t):
+                e = ext(a)
+                e.block_until_ready()      # exchange completes first
+                a = comp(e)
+            return a.block_until_ready()
+
+        reset_overlap_stats()
+        overlap = jax.jit(make_distributed_stepper(mesh, dims, w, t=t,
+                                                   mode="overlap"))
+        y_ser = serialized(xd)                       # warmup + reference
+        y_ov = overlap(xd).block_until_ready()       # traces counters
+        stats = overlap_stats()
+
+        def best_us(fn, iters=5):
+            best = float("inf")
+            for _ in range(iters):
+                t0 = time.perf_counter()
+                fn()
+                best = min(best, time.perf_counter() - t0)
+            return best * 1e6
+
+        us_ser = best_us(lambda: serialized(xd)) / t
+        us_ov = best_us(lambda: overlap(xd).block_until_ready()) / t
+        print(json.dumps({
+            "devices": len(jax.devices()), "grid": [h, wdt], "t": t,
+            "r": r, "us_step_serialized": us_ser,
+            "us_step_overlap": us_ov,
+            "overlap_faster": us_ov < us_ser,
+            "bitwise_equal": bool(jnp.all(y_ser == y_ov)),
+            "interleave_counters": stats,
+        }))
+    """) % {"grid": OVERLAP_GRID, "t": OVERLAP_T}
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+    env["PYTHONPATH"] = os.path.join(
+        os.path.dirname(os.path.abspath(__file__)), "..", "src") \
+        + os.pathsep + env.get("PYTHONPATH", "")
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, env=env, timeout=560)
+    if r.returncode != 0:
+        print(f"traffic: halo_overlap subprocess failed:\n{r.stderr}",
+              file=sys.stderr)
+        return {"case": "halo-overlap", "error": r.stderr[-2000:]}
+    row = json.loads(r.stdout.strip().splitlines()[-1])
+    row["case"] = "halo-overlap"
+    return row
+
+
 def _budgeted(fn, label: str, *args) -> dict:
     """Run one case under the per-case wall-clock budget; a blown budget
     records a ``timed_out`` row instead of wedging the whole sweep."""
@@ -385,6 +534,10 @@ def run() -> list[str]:
     rows_wide = [_budgeted(_case_wide, f"{shape}2d-r{r}-t{t}-wide",
                            shape, r, t, xw)
                  for shape, r, t in cases_wide]
+    cases_boundary = QUICK_CASES_BOUNDARY if quick else CASES_BOUNDARY
+    rows_boundary = [_budgeted(_case_boundary, f"boundary-{mode}", mode, x)
+                     for mode in cases_boundary]
+    row_overlap = _budgeted(_case_halo_overlap, "halo-overlap")
 
     with open(JSON_PATH_QUICK if quick else JSON_PATH, "w") as f:
         json.dump({"grid": N, "tile": TILE, "dtype_bytes": DTYPE_BYTES,
@@ -397,6 +550,8 @@ def run() -> list[str]:
                    "timing": "interpret-mode CPU (relative only)",
                    "cases": rows, "cases_3d": rows3d,
                    "cases_wide": rows_wide,
+                   "cases_boundary": rows_boundary,
+                   "halo_overlap": row_overlap,
                    # Guard-layer record of the sweep: empty on a clean
                    # run (asserted by scripts/verify.sh) -- any event
                    # here means a kernel failed and degraded mid-bench.
@@ -405,6 +560,7 @@ def run() -> list[str]:
     rows = [c for c in rows if not c.get("timed_out")]
     rows3d = [c for c in rows3d if not c.get("timed_out")]
     rows_wide = [c for c in rows_wide if not c.get("timed_out")]
+    rows_boundary = [c for c in rows_boundary if not c.get("timed_out")]
 
     out = ["traffic.case,loads_old/new/sub,read_amp_direct_new,"
            "read_amp_direct_sub,rdMB_step_mm_old,rdMB_step_mm_new,"
@@ -457,6 +613,25 @@ def run() -> list[str]:
             f"{c['us_step_direct_wholestrip']:.0f},"
             f"{c['us_step_direct_coltiled']:.0f},"
             f"{c['us_step_matmul_coltiled']:.0f}")
+
+    out.append("trafficboundary.case,boundary,us_dir_sub,us_mm_sub,"
+               "oracle_max_err")
+    for c in rows_boundary:
+        out.append(
+            f"trafficboundary.{c['case']},{c['boundary']},"
+            f"{c['us_step_direct_subblocked']:.0f},"
+            f"{c['us_step_matmul_subblocked']:.0f},"
+            f"{c['oracle_max_err']:.2e}")
+    if "us_step_overlap" in row_overlap:
+        c = row_overlap
+        out.append("trafficoverlap.case,devices,t,us_step_serialized,"
+                   "us_step_overlap,overlap_faster,bitwise,"
+                   "interior_before_recv")
+        out.append(
+            f"trafficoverlap.halo-overlap,{c['devices']},{c['t']},"
+            f"{c['us_step_serialized']:.0f},{c['us_step_overlap']:.0f},"
+            f"{c['overlap_faster']},{c['bitwise_equal']},"
+            f"{c['interleave_counters']['interior_before_recv_consumed']}")
     return out
 
 

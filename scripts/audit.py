@@ -43,10 +43,26 @@ MATRIX = [
      dict(w_tile=128, w_block=32)),
     ((32, 64, 128), 2, dict(dim=3, radius=1, shape="box"), {}),
     ((24, 48, 100), 2, dict(dim=3, radius=1, shape="star"), {}),
+    # Boundary-mode rows (DESIGN.md §15): non-periodic index maps swap
+    # mod-wrap for reflect-at-block; the mode-aware coverage check must
+    # hold on every rank, including a remainder width and a mixed 3D
+    # spec.  fused_matmul rejects t>1 non-periodic (ValueError ->
+    # incompatible_configs), which is itself part of the contract.
+    ((256, 512), 2, dict(dim=2, radius=1, shape="box"),
+     dict(boundary="reflect")),
+    ((256, 512), 2, dict(dim=2, radius=2, shape="star"),
+     dict(boundary=("zero", "replicate"))),
+    ((128, 300), 2, dict(dim=2, radius=1, shape="star"),
+     dict(w_tile=128, w_block=32, boundary=("reflect", "periodic"))),
+    ((1000,), 2, dict(dim=1, radius=1, shape="star"),
+     dict(boundary="replicate")),
+    ((32, 64, 128), 2, dict(dim=3, radius=1, shape="box"),
+     dict(boundary=("reflect", "periodic", "zero"))),
 ]
 
 
 def _context(grid, t, spec_kw, pinned):
+    from repro.stencil.boundary import resolve_boundary
     spec = StencilSpec(**spec_kw)
     return registry.PlanContext(
         spec=spec, weights=jacobi_weights(spec), grid_shape=grid,
@@ -54,7 +70,8 @@ def _context(grid, t, spec_kw, pinned):
         interpret=True,
         h_block=pinned.get("h_block"), z_slab=pinned.get("z_slab"),
         z_block=pinned.get("z_block"), w_tile=pinned.get("w_tile"),
-        w_block=pinned.get("w_block"))
+        w_block=pinned.get("w_block"),
+        boundary=resolve_boundary(pinned.get("boundary"), len(grid)))
 
 
 def main(argv=None) -> int:

@@ -12,6 +12,9 @@ asserts the ISSUE-6 acceptance bar:
 and the ``clean`` leg asserts the converse -- with nothing armed, the
 guard degrades NOTHING: the guarded plan IS the cached unguarded plan
 object, the event log stays empty, and outputs are bitwise identical.
+The ``boundary`` leg re-runs the halo fault on a non-periodic
+(reflect x periodic) distributed plan: degradation must preserve the
+boundary spec (DESIGN.md §15), bitwise vs the mode-matched oracle.
 
 Each leg runs in a subprocess with the fault armed via the REPRO_FAULTS
 environment variable (exactly how the CI matrix legs arm it), so plan
@@ -39,6 +42,8 @@ LEGS = {
     "vmem": ("vmem", {}),
     "nan": ("nan", {"REPRO_NAN_WATCHDOG": "1"}),
     "halo": ("halo", {"XLA_FLAGS": "--xla_force_host_platform_device_count=2"}),
+    "boundary": ("halo",
+                 {"XLA_FLAGS": "--xla_force_host_platform_device_count=2"}),
     "sparse": ("vmem", {}),
     "sparse_ladder": ("compile:inf", {}),
 }
@@ -164,6 +169,40 @@ def leg_halo():
     _bitwise(y, ref, "halo")
 
 
+def leg_boundary():
+    """A failed halo exchange on a NON-PERIODIC distributed plan
+    (DESIGN.md §15): the PR 6 ladder must degrade exactly as on the
+    periodic path -- cause 'halo' recorded, both shards landing on the
+    same rung -- and the surviving rung must still honor the boundary
+    spec, bitwise vs the mode-matched oracle."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+    from repro.stencil import StencilSpec, make_weights
+    from repro.stencil.reference import apply_stencil_steps
+    from repro.kernels import guarded_stencil_plan
+
+    assert len(jax.devices()) >= 2, "boundary leg needs a multi-device mesh"
+    mesh = Mesh(np.array(jax.devices()[:2]), ("x",))
+    w = make_weights(StencilSpec("box", 2, 1), seed=0)
+    t, n, boundary = 2, 64, ("reflect", "periodic")
+    x = np.random.default_rng(0).normal(size=(n, n)).astype(np.float32)
+    xs = jax.device_put(x, NamedSharding(mesh, P("x", None)))
+    ref = np.asarray(apply_stencil_steps(jnp.asarray(x), jnp.asarray(w), t,
+                                         boundary))
+
+    # stepwise, not fused: fused halo exchange rejects non-periodic specs
+    # (it would bake step-1 boundary values into both steps).
+    g = guarded_stencil_plan(w, (n, n), np.float32, t, mesh=mesh,
+                             shard_spec=("x", None), dist_mode="stepwise",
+                             backend="fused_direct", boundary=boundary)
+    y = g(xs)
+    assert [h["cause"] for h in g.history] == ["halo"], g.history
+    assert g.degraded
+    _bitwise(y, ref, "boundary")
+
+
 def leg_sparse():
     """One VMEM overflow on the sparse-compacted rung: the degraded
     geometry of the SAME sparse backend must survive -- bitwise vs the
@@ -207,8 +246,8 @@ def leg_sparse_ladder():
 
 def run_child(leg: str) -> None:
     fn = {"clean": leg_clean, "compile": leg_compile, "vmem": leg_vmem,
-          "nan": leg_nan, "halo": leg_halo, "sparse": leg_sparse,
-          "sparse_ladder": leg_sparse_ladder}[leg]
+          "nan": leg_nan, "halo": leg_halo, "boundary": leg_boundary,
+          "sparse": leg_sparse, "sparse_ladder": leg_sparse_ladder}[leg]
     fn()
     print(f"PASS {leg}")
 

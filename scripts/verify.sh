@@ -97,6 +97,19 @@ for c in sparse:
         assert c["mxu_flops_step_sparse"] == c["mxu_flops_step_dense"], \
             f"box case {c['case']} changed MXU FLOPs under compaction"
         assert c["kept_row_fraction"] == 1.0, c["case"]
+# Boundary-mode rows (DESIGN.md §15): every timed mode must match its
+# mode-matched oracle, and the distributed overlap pair must be
+# bitwise-equal to the serialized foil with a nonzero interleave
+# counter (the timing comparison itself is recorded, not gated -- CPU
+# wall-clock is too noisy for CI).
+bnd = [c for c in data.get("cases_boundary", []) if not c.get("timed_out")]
+assert bnd, f"no (surviving) boundary-mode cases in {path}"
+for c in bnd:
+    assert c["oracle_max_err"] < 5e-4, (c["case"], c["oracle_max_err"])
+ov = data.get("halo_overlap", {})
+if "us_step_overlap" in ov:
+    assert ov["bitwise_equal"], "overlap stepper != serialized foil"
+    assert ov["interleave_counters"]["interior_before_recv_consumed"] > 0
 wide = [c for c in data["cases_wide"] if not c.get("timed_out")]
 assert wide, f"no (surviving) wide-grid column-tiled cases in {path}"
 for c in wide:
@@ -119,7 +132,8 @@ print(f"verify: {len(cases)} 3D traffic case(s) in {path}, "
       "sub-blocked < whole-slab; "
       f"{len(wide)} wide case(s), column-tiled < whole-width foil; "
       f"{len(sparse)} sparse case(s) bitwise-equal "
-      f"({n_star} star < dense MXU FLOPs); guard event log clean")
+      f"({n_star} star < dense MXU FLOPs); "
+      f"{len(bnd)} boundary case(s) oracle-matched; guard event log clean")
 EOF
 
 # Serving gate (DESIGN.md §12): the batched engine must beat per-request

@@ -144,7 +144,9 @@ def audit_scratch(lg, launch) -> List[AuditCheck]:
         detail="compute may only fire once every slot is written"))
 
     # ---- global-coordinate coverage per sampled cell ------------------
+    from repro.kernels.common import _reflect_block
     cell_dims = lg.grid[:-1]
+    modes = lg.boundary or ()
     bad = []
     for cell in _sample_cells(cell_dims):
         for j in range(ring):
@@ -156,20 +158,33 @@ def audit_scratch(lg, launch) -> List[AuditCheck]:
                 actual = idx[ax] * b
                 # Cell-grid axes list the ringed source axes 1:1 in
                 # order for every scratch kind (subblocked, coltiled
-                # and their slab lifts), so cell[ax] feeds ring axis ax.
+                # and their slab lifts), so cell[ax] feeds ring axis ax
+                # -- and lg.boundary[ax] names its mode (DESIGN.md §15).
+                mode = modes[ax] if ax < len(modes) else "periodic"
                 last_unaligned = (ax == n_ring_axes - 1
                                   and not lg.aligned)
                 if last_unaligned:
                     # Remainder path: non-wrapping walk over the
-                    # host-extended source, shifted one block right.
+                    # host-extended source, shifted one block right
+                    # (the extension carries the boundary, any mode).
                     expect = cell[ax] * tile + ks[ax] * b
                     ok = actual == expect
-                else:
+                elif mode == "periodic":
                     extent = lg.src_shape[ax]
                     expect = (cell[ax] * tile + (ks[ax] - 1) * b) % extent
                     ok = actual % extent == expect
+                else:
+                    # Non-periodic axes must REFLECT out-of-range block
+                    # indices (never wrap, never revisit a block on
+                    # consecutive ring steps): the exact in-bounds start
+                    # the kernels' in-kernel fills assume.
+                    total = lg.src_shape[ax] // b
+                    expect = _reflect_block(
+                        cell[ax] * (tile // b) + ks[ax] - 1, total) * b
+                    ok = actual == expect
                 if not ok and len(bad) < 8:
                     bad.append({"cell": cell, "ring_step": j, "axis": ax,
+                                "mode": mode,
                                 "expected_start": expect,
                                 "actual_start": actual})
     checks.append(AuditCheck(
@@ -177,5 +192,7 @@ def audit_scratch(lg, launch) -> List[AuditCheck]:
         expected="every slot holds its true global halo block",
         actual=bad or "ok",
         detail="scratch slot k on axis ax must hold global rows "
-               "(cell*tile + (k-1)*block) mod extent"))
+               "(cell*tile + (k-1)*block) mod extent on periodic axes, "
+               "reflect_block(cell*nb + k - 1) * block on non-periodic "
+               "axes (DESIGN.md §15)"))
     return checks

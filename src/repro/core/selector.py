@@ -92,6 +92,7 @@ def select_backend(
     z_block: Optional[int] = None,
     w_tile: Optional[int] = None,
     w_block: Optional[int] = None,
+    boundary=None,
 ) -> Decision:
     """Pick the predicted-fastest backend for ``t`` fused steps of ``spec``.
 
@@ -121,6 +122,11 @@ def select_backend(
     geometry and its read factor (including the resolved ``w_tile``) are
     appended to every reason string, so ``ops.explain`` surfaces what the
     substrate costs.
+
+    ``boundary`` (DESIGN.md §15) does not move the crossover -- the
+    boundary fills are FLOP-free select/concat lanes and the fetch count
+    matches periodic's -- but a non-periodic spec is surfaced in the
+    reason string so explain() shows what the plan will honor.
     """
     global _invocations
     _invocations += 1
@@ -176,6 +182,16 @@ def select_backend(
         w_block=geom.w_block if spec.dim >= 2 else 0))
     if not candidates:
         raise RuntimeError("no registered backend priced this workload")
+    from repro.stencil.boundary import boundary_label, is_periodic
+    if t > 1 and boundary is not None and not is_periodic(boundary):
+        # Monolithic fusion bakes one boundary extension into t steps, so
+        # its build rejects non-periodic specs (DESIGN.md §15) -- never
+        # select it into a failing build.
+        candidates.pop("fused_matmul", None)
+        if not candidates:
+            raise RuntimeError(
+                "no registered backend can honor non-periodic boundaries "
+                "for this workload")
 
     vec = cmp_.vector.actual_flops
     units = candidate_units()
@@ -220,6 +236,13 @@ def select_backend(
     # (DESIGN.md §9): decide()/explain()/plan.decision all format it from
     # the same resolved numbers, so they agree verbatim.
     reason = f"{reason} | {geom.describe()}"
+    # Boundary handling is throughput-neutral (fills are FLOP-free
+    # select/concat; fetch counts match periodic's -- DESIGN.md §15), so
+    # it never changes the ranking among eligible regimes; surface it in
+    # the reason only when non-periodic to keep historical reason strings
+    # byte-identical.
+    if boundary is not None and not is_periodic(boundary):
+        reason = f"{reason} | boundary={boundary_label(boundary)}"
     return Decision(
         backend=backend,
         scenario=cmp_.scenario,

@@ -102,6 +102,32 @@ construction), so ``w_tile > 0`` requires the sub-blocked substrate.
 h_block, w_tile, w_block) geometry through plans, the selector and the
 cache keys; ``resolve_substrate_geom`` is THE shared sizing rule for
 every rank.
+
+PER-AXIS BOUNDARIES (DESIGN.md §15).  Every wrap above is the
+``periodic`` instance of a per-axis :mod:`repro.stencil.boundary` spec
+(``periodic | zero | reflect | replicate``).  Non-periodic axes change
+exactly two things, keeping the HBM traffic model (and therefore every
+``repro.audit`` block check) bit-identical to periodic:
+
+  * the index maps REFLECT out-of-range block indices at block
+    granularity instead of wrapping (``_reflect_block``: -1 -> 1,
+    total -> total-2) -- every fetch stays in bounds, no two
+    consecutive ring steps fetch the same block, and the fetch count
+    per cell is unchanged, so reads/step keep the three-factor product;
+  * the halo content those edge fetches assemble is garbage *for the
+    mode*, so the kernels re-impose the boundary IN KERNEL before every
+    fused step (``apply_boundary_fills`` / ``extend_columns``): the
+    out-of-domain depth at step s is (t-s+1)*r, and zero / replicate /
+    reflect values are rebuilt from in-domain rows with free ops only
+    (slice/flip/broadcast/select -- the jaxpr FLOP audit counts zero
+    extra FLOPs).  Re-imposing per step, not once, is what matches the
+    oracle, which re-pads every step.
+
+``_launch`` passes the kernels a per-region-axis ``edges`` tuple of
+(is_lo, is_hi) grid-edge flags (from ``pl.program_id``) so the fills
+fire only on domain-edge cells.  All-periodic specs skip both changes
+entirely -- default plans lower through the historical jaxpr bit for
+bit.
 """
 from __future__ import annotations
 
@@ -114,6 +140,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.stencil.boundary import PAD_MODE, resolve_boundary
 
 #: Vertical neighbor offsets of the whole-strip scheme (up, center, down) --
 #: the strip analogue of the seed's 9-entry 2D offset table (kernels.legacy).
@@ -215,6 +243,135 @@ def wrap_columns(x: jax.Array, halo: int) -> jax.Array:
     """
     h = halo
     return jnp.concatenate([x[..., -h:], x, x[..., :h]], axis=-1)
+
+
+def extend_columns(x: jax.Array, halo: int, mode: str = "periodic",
+                   lo_edge=True, hi_edge=True) -> jax.Array:
+    """Mode-aware last-axis halo materialization: (..., n) -> (..., n+2h).
+
+    The boundary generalization of :func:`wrap_columns` for full-width
+    kernels (every row is a complete global row, so the domain edge IS
+    the array edge).  ``periodic`` is exactly ``wrap_columns``; the other
+    modes synthesize the out-of-domain columns from in-domain ones with
+    free ops only (concat / flip / broadcast -- zero counted FLOPs).
+    Called per fused step, which is what matches the per-step re-padding
+    oracle.  ``lo_edge``/``hi_edge`` (static or traced bools) select the
+    boundary fill vs the true wrap halo -- full-width kernels own both
+    edges, so the defaults apply; the distributed stepper passes shard
+    masks.
+    """
+    if mode == "periodic":
+        return wrap_columns(x, halo)
+    h = halo
+    wrap_lo, wrap_hi = x[..., -h:], x[..., :h]
+    if mode == "zero":
+        lo = hi = jnp.zeros_like(wrap_lo)
+    elif mode == "replicate":
+        reps = (1,) * (x.ndim - 1) + (h,)
+        lo = jnp.tile(x[..., :1], reps)
+        hi = jnp.tile(x[..., -1:], reps)
+    elif mode == "reflect":
+        lo = jnp.flip(x[..., 1:h + 1], axis=-1)
+        hi = jnp.flip(x[..., -h - 1:-1], axis=-1)
+    else:
+        raise ValueError(f"unknown boundary mode {mode!r}")
+    if lo_edge is not True:
+        lo = jnp.where(lo_edge, lo, wrap_lo)
+    if hi_edge is not True:
+        hi = jnp.where(hi_edge, hi, wrap_hi)
+    return jnp.concatenate([lo, x, hi], axis=-1)
+
+
+def _reflect_block(idx, total: int):
+    """Reflect an out-of-range block index into [0, total): -1 -> 1,
+    total -> total-2 (identity in range).  The non-periodic analogue of
+    the ``% total`` wrap in the ring index maps -- chosen over clamping
+    because it never fetches the same block on consecutive ring steps,
+    so Pallas's consecutive-revisit dedup (and the audit's exact
+    grid-bytes model) sees a fetch sequence identical to periodic.  The
+    fetched edge content is then overwritten by the in-kernel boundary
+    fills.  Works on plain ints (the auditor enumerates index maps) and
+    traced ints (the launched kernel) alike; ring walks stay within one
+    block of the domain, so a single reflection suffices.
+    """
+    if total == 1:
+        return idx * 0
+    last = total - 1
+    return last - abs(last - abs(idx))
+
+
+def _axis_block_index(idx, total: int, mode: str):
+    """One ring-axis block index under its boundary mode: periodic wraps
+    (the historical map, bit for bit), every other mode reflects."""
+    return idx % total if mode == "periodic" else _reflect_block(idx, total)
+
+
+def apply_boundary_fills(cur, modes, edges, halo: int, x_pad: int = 0,
+                         x_tiled: bool = False):
+    """Re-impose non-periodic boundary values on the halo of one region.
+
+    ``cur`` is a halo-extended compute region whose axis ``ax`` carries
+    ``halo`` out-of-domain cells per side on domain-edge cells (garbage
+    as far as the mode is concerned: reflected-block fetches, stale
+    carry, or host padding).  For every non-periodic axis this rebuilds
+    those cells from the in-domain part -- zeros, the broadcast edge
+    cell, or the mirrored rows -- gated per side by ``edges[ax]``
+    (is_lo, is_hi) so interior cells keep their true fetched halo.
+    Axes fill in ascending order, so later axes mirror already-filled
+    earlier-axis halo cells: exactly ``np.pad``'s sequential corner
+    semantics, which the oracle's ``pad_boundary`` shares.
+
+    The last axis fills only when ``x_tiled`` (column-tiled kernels;
+    full-width kernels re-extend via :func:`extend_columns` instead).
+    ``x_pad`` is the remainder path's right-padding column count: the
+    last tile's domain edge sits ``x_pad`` columns INSIDE the block, so
+    its fill region shifts left by ``x_pad`` (the pad tail itself is
+    left untouched -- it only feeds output columns that are sliced off).
+    Free ops only (slice / flip / broadcast / select / concat): the
+    traced-FLOP audit must count the same FLOPs as the periodic kernel.
+    """
+    if edges is None:
+        return cur
+    ndim = cur.ndim
+
+    def sl(ax, a, b):
+        s = [slice(None)] * ndim
+        s[ax] = slice(a, b)
+        return tuple(s)
+
+    o = halo
+    for ax in range(ndim):
+        mode = modes[ax]
+        last_axis = ax == ndim - 1
+        if mode == "periodic" or o == 0 or (last_axis and not x_tiled):
+            continue
+        pad = x_pad if last_axis else 0
+        valid = cur.shape[ax] - 2 * o - pad
+        lo_flag, hi_flag = edges[ax]
+        if mode == "zero":
+            lo_fill = jnp.zeros_like(cur[sl(ax, 0, o)])
+            hi_fill = jnp.zeros_like(cur[sl(ax, valid + o, valid + 2 * o)])
+        elif mode == "replicate":
+            reps = [1] * ndim
+            reps[ax] = o
+            lo_fill = jnp.tile(cur[sl(ax, o, o + 1)], reps)
+            hi_fill = jnp.tile(cur[sl(ax, valid + o - 1, valid + o)], reps)
+        elif mode == "reflect":
+            lo_fill = jnp.flip(cur[sl(ax, o + 1, 2 * o + 1)], axis=ax)
+            hi_fill = jnp.flip(cur[sl(ax, valid - 1, valid + o - 1)],
+                               axis=ax)
+        else:
+            raise ValueError(f"unknown boundary mode {mode!r}")
+        lo = lo_fill if lo_flag is True \
+            else jnp.where(lo_flag, lo_fill, cur[sl(ax, 0, o)])
+        hi = hi_fill if hi_flag is True \
+            else jnp.where(hi_flag, hi_fill,
+                           cur[sl(ax, valid + o, valid + 2 * o)])
+        parts = [lo, cur[sl(ax, o, valid + o)], hi]
+        if pad:
+            parts.append(cur[sl(ax, valid + 2 * o, None)])
+        cur = jnp.concatenate(parts, axis=ax)
+    return cur
 
 
 def choose_tile(n: int, preferred: int = 128) -> int:
@@ -700,19 +857,46 @@ def resolve_substrate_geom(grid_shape, halo: int, dtype_bytes: int,
                          z_block=zb, w_tile=wt, w_block=wb)
 
 
-def _check_wrap_radius(w: int, r: int) -> None:
-    """THE wrap-radius guard, shared by every rank's validation branch
-    (historically copy-pasted across the 1D/2D/3D paths)."""
-    if w < r:
+def _check_wrap_radius(w: int, r: int, mode: str = "periodic") -> None:
+    """THE per-axis radius guard, shared by every rank's validation branch
+    (historically copy-pasted across the 1D/2D/3D paths).
+
+    Periodic axes wrap, so only ``w < r`` is impossible (the historical
+    check, message unchanged).  Non-periodic axes have no wrap at all:
+    a stencil whose support reaches across the whole axis (``r >= w``)
+    would read nothing but synthesized boundary cells, so it raises with
+    a mode-specific message instead of the misleading "lower the
+    radius" wrap phrasing.
+    """
+    if mode == "periodic":
+        if w < r:
+            raise ValueError(
+                f"wrap radius {r} exceeds grid width {w}; lower the radius")
+        return
+    if r >= w:
         raise ValueError(
-            f"wrap radius {r} exceeds grid width {w}; lower the radius")
+            f"stencil radius {r} spans the whole {mode!r} axis "
+            f"(extent {w}); a non-periodic axis needs extent > radius "
+            "-- enlarge the grid or use a narrower stencil")
+
+
+def _check_reflect_extent(extent: int, halo: int, axis: str,
+                          mode: str) -> None:
+    """Reflect needs ``halo`` in-domain mirror cells beyond the edge cell:
+    cell ``-k`` reads cell ``+k``, so the axis extent must exceed the
+    total (fused) halo depth."""
+    if mode == "reflect" and extent < halo + 1:
+        raise ValueError(
+            f"reflect boundary on the {axis} axis needs extent >= "
+            f"halo+1 = {halo + 1}, got {extent}; mirror cells would "
+            "fall outside the domain")
 
 
 def validate_tiling(shape, strip_m: int, tile_n: int, halo: int,
                     radius: int = None, h_block: int = None,
                     z_slab: int = None, z_block: int = None,
                     w_tile: int = None, w_block: int = None,
-                    x_halo: int = None) -> None:
+                    x_halo: int = None, boundary=None) -> None:
     """Halo-plane substrate tiling constraints (1D, 2D and 3D grids).
 
     ``strip_m`` is the strip height (rows per output block); ``tile_n`` is
@@ -729,12 +913,17 @@ def validate_tiling(shape, strip_m: int, tile_n: int, halo: int,
     sub-blocked substrate and a ``w_block`` that divides ``w_tile`` and
     covers the CARRIED x-halo ``x_halo`` (= t*r; defaults to ``halo``) --
     ``w_tile`` need NOT divide W (edge tiles run the remainder path).
+    ``boundary`` is the per-axis mode spec (DESIGN.md §15): non-periodic
+    axes swap the wrap-radius guard for the mode-specific one, and
+    reflect axes additionally need extent >= halo+1 (the mirror depth).
     """
     r = halo if radius is None else radius
     w = shape[-1]
+    modes = resolve_boundary(boundary, len(shape))
     if len(shape) == 1:
-        # Lifted-1D: no vertical support, so only the wrap radius binds.
-        _check_wrap_radius(w, r)
+        # Lifted-1D: no vertical support, so only the x-axis guard binds.
+        _check_wrap_radius(w, r, modes[-1])
+        _check_reflect_extent(w, halo, "x", modes[-1])
         return
     if len(shape) == 3:
         z, h, w = shape
@@ -797,7 +986,18 @@ def validate_tiling(shape, strip_m: int, tile_n: int, halo: int,
             raise ValueError(
                 f"carried x-halo {xh} exceeds w_block {w_block}; "
                 "enlarge w_block or lower fusion depth")
-    _check_wrap_radius(w, r)
+    _check_wrap_radius(w, r, modes[-1])
+    _check_reflect_extent(w, halo, "x", modes[-1])
+    lead = shape[:-1]
+    for extent, mode, name in zip(lead, modes[:-1],
+                                  ("z", "y")[-len(lead):]):
+        # Periodic leading axes never had a radius guard (any extent
+        # wraps -- the 1D lift runs extent 1) -- keep that bit of
+        # history; non-periodic axes get the mode-specific guards.
+        if mode == "periodic":
+            continue
+        _check_wrap_radius(extent, r, mode)
+        _check_reflect_extent(extent, halo, name, mode)
 
 
 #: Exact-arity all-zero index-map factories for grid-constant operands
@@ -852,6 +1052,12 @@ class LaunchGeometry:
     block_dims: tuple = ()
     read_bounds: tuple = ()      # per-scratch-axis (lo, hi) compute window
     aligned: bool = True
+    boundary: tuple = ()         # per-grid-axis modes; () = all periodic
+
+    @property
+    def periodic(self) -> bool:
+        """True iff every axis wraps (the historical substrate)."""
+        return all(m == "periodic" for m in self.boundary)
 
     @property
     def ring(self) -> int:
@@ -889,7 +1095,8 @@ class LaunchGeometry:
 
 def strip_launch_geometry(x_shape, strip_m: int, h_block: int, halo: int,
                           w_tile: int = 0, w_block: int = 0,
-                          x_halo: int = 0) -> LaunchGeometry:
+                          x_halo: int = 0,
+                          boundary=None) -> LaunchGeometry:
     """Build the 2D (and lifted-1D) launch geometry: the single source of
     truth for what ``strip_substrate_call`` launches.
 
@@ -898,8 +1105,14 @@ def strip_launch_geometry(x_shape, strip_m: int, h_block: int, halo: int,
     otherwise "subblocked" ((strip, h-block) ring into VMEM scratch);
     ``w_tile>0`` -> "coltiled" (DESIGN.md §10, full 2-axis block ring,
     edge-tile remainder path on non-dividing widths).
+
+    ``boundary`` is the per-axis (rows, cols) mode pair: non-periodic
+    axes reflect out-of-range block indices at block granularity
+    (``_reflect_block``) instead of wrapping -- same fetch count, all in
+    bounds, content overwritten by the kernels' in-kernel fills.
     """
     h, n = x_shape
+    by, bx = resolve_boundary(boundary, 2)
     gm = h // strip_m
     if w_tile:
         nb = strip_m // h_block
@@ -913,20 +1126,20 @@ def strip_launch_geometry(x_shape, strip_m: int, h_block: int, halo: int,
             src_shape, out_w = (h, n), n
 
             def col_index(iw, jw):
-                return (iw * nbw + jw - 1) % total_w
+                return _axis_block_index(iw * nbw + jw - 1, total_w, bx)
         else:
             src_shape = (h, gw * w_tile + 2 * w_block)
             out_w = gw * w_tile
 
             def col_index(iw, jw):
-                return iw * nbw + jw      # the extension carries the wrap
+                return iw * nbw + jw   # the extension carries the boundary
 
         lg = LaunchGeometry(
             kind="coltiled",
             grid=(gm, gw, (nb + 2) * ring_w),
             in_block=(h_block, w_block),
             in_index_maps=(lambda i, iw, j: (
-                (i * nb + j // ring_w - 1) % total_h,
+                _axis_block_index(i * nb + j // ring_w - 1, total_h, by),
                 col_index(iw, j % ring_w)),),
             out_block=(strip_m, w_tile),
             out_index_map=lambda i, iw, j: (i, iw),
@@ -939,6 +1152,7 @@ def strip_launch_geometry(x_shape, strip_m: int, h_block: int, halo: int,
             read_bounds=((h_block - halo, h_block + strip_m + halo),
                          (w_block - x_halo, w_block + w_tile + x_halo)),
             aligned=aligned,
+            boundary=(by, bx),
         )
     elif halo == 0:
         # No vertical halo => no neighbor loads on either substrate
@@ -950,10 +1164,12 @@ def strip_launch_geometry(x_shape, strip_m: int, h_block: int, halo: int,
             out_block=(strip_m, n),
             out_index_map=lambda i: (i, 0),
             out_shape=(h, n), src_shape=(h, n), halo=0, x_halo=x_halo,
+            boundary=(by, bx),
         )
     elif not h_block:
-        maps = tuple(functools.partial(lambda i, di=di: ((i + di) % gm, 0))
-                     for di in NEIGHBOR_OFFSETS_STRIP)
+        maps = tuple(functools.partial(
+            lambda i, di=di: (_axis_block_index(i + di, gm, by), 0))
+            for di in NEIGHBOR_OFFSETS_STRIP)
         lg = LaunchGeometry(
             kind="wholestrip", grid=(gm,),
             in_block=(strip_m, n),
@@ -961,6 +1177,7 @@ def strip_launch_geometry(x_shape, strip_m: int, h_block: int, halo: int,
             out_block=(strip_m, n),
             out_index_map=lambda i: (i, 0),
             out_shape=(h, n), src_shape=(h, n), halo=halo, x_halo=x_halo,
+            boundary=(by, bx),
         )
     else:
         nb = strip_m // h_block
@@ -968,7 +1185,8 @@ def strip_launch_geometry(x_shape, strip_m: int, h_block: int, halo: int,
         lg = LaunchGeometry(
             kind="subblocked", grid=(gm, nb + 2),
             in_block=(h_block, n),
-            in_index_maps=(lambda i, j: ((i * nb + j - 1) % total, 0),),
+            in_index_maps=(lambda i, j: (
+                _axis_block_index(i * nb + j - 1, total, by), 0),),
             out_block=(strip_m, n),
             out_index_map=lambda i, j: (i, 0),
             out_shape=(h, n), src_shape=(h, n), halo=halo, x_halo=x_halo,
@@ -976,17 +1194,21 @@ def strip_launch_geometry(x_shape, strip_m: int, h_block: int, halo: int,
             ring_dims=(nb + 2,), block_dims=(h_block,),
             read_bounds=((h_block - halo, h_block + strip_m + halo),
                          (0, n)),
+            boundary=(by, bx),
         )
     from repro.testing.faults import corrupt_geometry
     return corrupt_geometry(lg)
 
 
 def slab_launch_geometry(x_shape, geom: SubstrateGeom, halo: int,
-                         x_halo: int = 0) -> LaunchGeometry:
+                         x_halo: int = 0, boundary=None) -> LaunchGeometry:
     """Build the 3D launch geometry: the single source of truth for what
     ``slab_substrate_call`` launches ("wholeslab" / "slab_subblocked" /
-    "slab_coltiled", mirroring the 2D kinds one rank up)."""
+    "slab_coltiled", mirroring the 2D kinds one rank up).  ``boundary``
+    is the per-axis (z, y, x) mode triple (see
+    :func:`strip_launch_geometry`)."""
     z, h, n = x_shape
+    bz, by, bx = resolve_boundary(boundary, 3)
     zs, sm = geom.z_slab, geom.strip_m
     gz, gm = z // zs, h // sm
     if geom.w_tile:
@@ -1002,20 +1224,20 @@ def slab_launch_geometry(x_shape, geom: SubstrateGeom, halo: int,
             src_shape, out_w = (z, h, n), n
 
             def col_index(iw, jw):
-                return (iw * nbw + jw - 1) % total_w
+                return _axis_block_index(iw * nbw + jw - 1, total_w, bx)
         else:
             src_shape = (z, h, gw * wt + 2 * wb)
             out_w = gw * wt
 
             def col_index(iw, jw):
-                return iw * nbw + jw      # the extension carries the wrap
+                return iw * nbw + jw   # the extension carries the boundary
 
         def block_index(iz, iy, iw, j):
             jz = j // (ring_y * ring_w)
             jy = (j // ring_w) % ring_y
             jw = j % ring_w
-            return ((iz * nbz + jz - 1) % total_z,
-                    (iy * nby + jy - 1) % total_y,
+            return (_axis_block_index(iz * nbz + jz - 1, total_z, bz),
+                    _axis_block_index(iy * nby + jy - 1, total_y, by),
                     col_index(iw, jw))
 
         lg = LaunchGeometry(
@@ -1035,11 +1257,13 @@ def slab_launch_geometry(x_shape, geom: SubstrateGeom, halo: int,
                          (hb - halo, hb + sm + halo),
                          (wb - x_halo, wb + wt + x_halo)),
             aligned=aligned,
+            boundary=(bz, by, bx),
         )
     elif not geom.h_block:
         maps = tuple(
             functools.partial(lambda iz, iy, dz=dz, dy=dy:
-                              ((iz + dz) % gz, (iy + dy) % gm, 0))
+                              (_axis_block_index(iz + dz, gz, bz),
+                               _axis_block_index(iy + dy, gm, by), 0))
             for dz in (-1, 0, 1) for dy in (-1, 0, 1))
         lg = LaunchGeometry(
             kind="wholeslab", grid=(gz, gm),
@@ -1049,6 +1273,7 @@ def slab_launch_geometry(x_shape, geom: SubstrateGeom, halo: int,
             out_index_map=lambda iz, iy: (iz, iy, 0),
             out_shape=(z, h, n), src_shape=(z, h, n),
             halo=halo, x_halo=x_halo,
+            boundary=(bz, by, bx),
         )
     else:
         zb, hb = geom.z_block, geom.h_block
@@ -1058,8 +1283,8 @@ def slab_launch_geometry(x_shape, geom: SubstrateGeom, halo: int,
 
         def block_index(iz, iy, j):
             jz, jy = j // ring_y, j % ring_y
-            return ((iz * nbz + jz - 1) % total_z,
-                    (iy * nby + jy - 1) % total_y, 0)
+            return (_axis_block_index(iz * nbz + jz - 1, total_z, bz),
+                    _axis_block_index(iy * nby + jy - 1, total_y, by), 0)
 
         lg = LaunchGeometry(
             kind="slab_subblocked", grid=(gz, gm, (nbz + 2) * ring_y),
@@ -1074,23 +1299,35 @@ def slab_launch_geometry(x_shape, geom: SubstrateGeom, halo: int,
             read_bounds=((zb - halo, zb + zs + halo),
                          (hb - halo, hb + sm + halo),
                          (0, n)),
+            boundary=(bz, by, bx),
         )
     from repro.testing.faults import corrupt_geometry
     return corrupt_geometry(lg)
 
 
+def lift_boundary_1d(boundary) -> tuple:
+    """The (rows, cols) boundary of a 1D grid lifted through the 2D
+    substrate: the synthetic unit row axis is periodic (it has no halo at
+    all), the real axis keeps its mode."""
+    (bx,) = resolve_boundary(boundary, 1)
+    return ("periodic", bx)
+
+
 def launch_geometry(grid_shape, geom: SubstrateGeom, halo: int,
-                    x_halo: int = 0) -> LaunchGeometry:
+                    x_halo: int = 0, boundary=None) -> LaunchGeometry:
     """The launch geometry the substrate would build for ``grid_shape``
     under ``geom``: rank dispatch matching the kernels exactly (1D grids
     lift to (1, N) with strip_m=1 and zero vertical halo)."""
     if geom.dim == 1 or len(grid_shape) == 1:
-        return strip_launch_geometry((1, grid_shape[-1]), 1, 0, 0)
+        return strip_launch_geometry(
+            (1, grid_shape[-1]), 1, 0, 0,
+            boundary=lift_boundary_1d(boundary))
     if len(grid_shape) == 2:
         return strip_launch_geometry(
             grid_shape, geom.strip_m, geom.h_block, halo,
-            geom.w_tile, geom.w_block, x_halo)
-    return slab_launch_geometry(grid_shape, geom, halo, x_halo)
+            geom.w_tile, geom.w_block, x_halo, boundary=boundary)
+    return slab_launch_geometry(grid_shape, geom, halo, x_halo,
+                                boundary=boundary)
 
 
 def _assemble_foil(lg: LaunchGeometry, ins):
@@ -1114,12 +1351,36 @@ def _assemble_foil(lg: LaunchGeometry, ins):
         [rows[0][-halo:], rows[1], rows[2][:halo]], axis=0)
 
 
+def _edge_flags(lg: LaunchGeometry):
+    """Per-region-axis (is_lo, is_hi) domain-edge flags of the current
+    grid cell, traced from ``pl.program_id`` -- called INSIDE the kernel
+    body.  Cell axes are the leading grid axes (the ring, when present,
+    is the last); region axes beyond the cell axes span the full extent
+    in every cell (full-width x), so both of their flags are statically
+    True.  Non-periodic kernels gate their boundary fills on these."""
+    has_ring = lg.scratch_shape is not None
+    cell_axes = len(lg.grid) - (1 if has_ring else 0)
+    flags = []
+    for ax in range(len(lg.out_block)):
+        if ax < cell_axes:
+            pid = pl.program_id(ax)
+            flags.append((pid == 0, pid == lg.grid[ax] - 1))
+        else:
+            flags.append((True, True))
+    return tuple(flags)
+
+
 def _launch(lg: LaunchGeometry, compute, x: jax.Array, interpret: bool,
             consts=()) -> jax.Array:
     """Execute one launch geometry: THE place every substrate kind lowers
     through.  Grid, BlockSpecs, scratch, ring slots, fire step and read
     window all come from ``lg`` -- the kernel body only dispatches on
-    whether a scratch exists (foil assembly vs ring assembly)."""
+    whether a scratch exists (foil assembly vs ring assembly).
+
+    ``compute(cur, edges, *const_refs)`` receives the f32 halo-extended
+    region and the per-axis domain-edge flags (``None`` on all-periodic
+    launches, where no fill can ever fire -- keeping the default jaxpr
+    bit-identical to the historical substrate)."""
     out_dtype = x.dtype
     rank = len(lg.grid)
     zero_map = _ZERO_INDEX_MAPS[rank]
@@ -1128,19 +1389,22 @@ def _launch(lg: LaunchGeometry, compute, x: jax.Array, interpret: bool,
                    for c in consts])
     src = x
     if lg.src_shape != x.shape:
-        # Edge-tile remainder path: periodically extend + zero-pad the
-        # last axis on the host so the non-wrapping column walk is in
-        # bounds everywhere (DESIGN.md §10).
+        # Edge-tile remainder path: boundary-extend + zero-pad the last
+        # axis on the host so the non-wrapping column walk is in bounds
+        # everywhere (DESIGN.md §10).
         src = _extend_columns_for_tiling(
-            x, lg.block_dims[-1], lg.grid[-2], lg.out_block[-1])
+            x, lg.block_dims[-1], lg.grid[-2], lg.out_block[-1],
+            mode=lg.boundary[-1] if lg.boundary else "periodic")
     n_in = len(lg.in_index_maps)
+    edged = lg.boundary and not lg.periodic
 
     if lg.scratch_shape is None:
         def kern(*refs):
             ins = refs[:n_in]
             *const_refs, out_ref = refs[n_in:]
+            edges = _edge_flags(lg) if edged else None
             cur = _assemble_foil(lg, ins).astype(jnp.float32)
-            out_ref[...] = compute(cur, *const_refs).astype(out_dtype)
+            out_ref[...] = compute(cur, edges, *const_refs).astype(out_dtype)
 
         extra = {}
     else:
@@ -1154,11 +1418,15 @@ def _launch(lg: LaunchGeometry, compute, x: jax.Array, interpret: bool,
             j = pl.program_id(ring_axis)
             slot = tuple(pl.ds(s, b) for s, b in lg.scratch_slot(j))
             scratch_ref[slot + full] = blk_ref[...]
+            # program_id must be read at kernel top level: the interpret
+            # path only substitutes it outside pl.when bodies.
+            edges = _edge_flags(lg) if edged else None
 
             @pl.when(j == fire)
             def _compute():
                 cur = scratch_ref[read_ix].astype(jnp.float32)
-                out_ref[...] = compute(cur, *const_refs).astype(out_dtype)
+                out_ref[...] = compute(cur, edges,
+                                       *const_refs).astype(out_dtype)
 
         extra = {"scratch_shapes": [pltpu.VMEM(lg.scratch_shape, x.dtype)]}
 
@@ -1179,15 +1447,18 @@ def _launch(lg: LaunchGeometry, compute, x: jax.Array, interpret: bool,
 def strip_substrate_call(compute, x: jax.Array, strip_m: int, h_block: int,
                          halo: int, interpret: bool, consts=(),
                          w_tile: int = 0, w_block: int = 0,
-                         x_halo: int = 0) -> jax.Array:
+                         x_halo: int = 0, boundary=None) -> jax.Array:
     """Launch ``compute`` over every output strip, on any halo substrate.
 
     The ONE place both strip kernels lower through -- substrate changes
     (semantics, buffering, a third scheme) happen here, never per kernel.
-    ``compute(cur, *const_refs)`` receives the f32 halo-extended region
-    plus one VMEM ref per ``consts`` operand (operands constant across
-    the grid, e.g. banded weights) and returns the output region; the
-    launcher casts back to ``x.dtype``.  ``h_block=0`` runs the
+    ``compute(cur, edges, *const_refs)`` receives the f32 halo-extended
+    region, the per-axis domain-edge flags (``None`` on all-periodic
+    launches) plus one VMEM ref per ``consts`` operand (operands
+    constant across the grid, e.g. banded weights) and returns the
+    output region; the launcher casts back to ``x.dtype``.  ``boundary``
+    is the per-axis mode pair threaded into the launch geometry
+    (DESIGN.md §15).  ``h_block=0`` runs the
     whole-strip 3-load pipeline; otherwise the sub-blocked
     (strip, h-block) grid with VMEM scratch assembly (module docstring).
     ``halo=0`` (the lifted-1D case: no vertical support at all) drops
@@ -1214,21 +1485,35 @@ def strip_substrate_call(compute, x: jax.Array, strip_m: int, h_block: int,
     maybe_fail("vmem")
 
     lg = strip_launch_geometry(x.shape, strip_m, h_block, halo,
-                               w_tile, w_block, x_halo)
+                               w_tile, w_block, x_halo, boundary=boundary)
     return _launch(lg, compute, x, interpret, consts)
 
 
 def _extend_columns_for_tiling(x: jax.Array, w_block: int, gw: int,
-                               w_tile: int) -> jax.Array:
-    """Edge-tile remainder path's host-side input: periodically extend the
+                               w_tile: int,
+                               mode: str = "periodic") -> jax.Array:
+    """Edge-tile remainder path's host-side input: boundary-extend the
     last axis by one w_block per side (so the non-wrapping column walk
-    still finds true periodic halo columns at both grid edges), then
-    zero-pad on the right up to ``gw * w_tile + 2 * w_block`` columns so
-    every fetched block is in bounds.  The pad region is only ever read
-    by output columns beyond W, which the launcher slices off.
+    still finds halo columns at both grid edges), then zero-pad on the
+    right up to ``gw * w_tile + 2 * w_block`` columns so every fetched
+    block is in bounds.  The pad region is only ever read by output
+    columns beyond W, which the launcher slices off.
+
+    ``mode`` generalizes the historical "periodic host extension" to a
+    boundary host extension (DESIGN.md §15): non-periodic modes extend
+    with their pad values -- though step-1 values are all the extension
+    could supply, and the kernels re-impose the boundary in kernel at
+    EVERY fused step anyway, so the non-periodic extension only has to
+    be finite and in-bounds.
     """
     n = x.shape[-1]
-    ext = jnp.concatenate([x[..., -w_block:], x, x[..., :w_block]], axis=-1)
+    if mode == "periodic":
+        ext = jnp.concatenate([x[..., -w_block:], x, x[..., :w_block]],
+                              axis=-1)
+    else:
+        pad = [(0, 0)] * x.ndim
+        pad[-1] = (w_block, w_block)
+        ext = jnp.pad(x, pad, mode=PAD_MODE[mode])
     pad_cols = gw * w_tile - n
     if pad_cols:
         pad = [(0, 0)] * x.ndim
@@ -1239,12 +1524,13 @@ def _extend_columns_for_tiling(x: jax.Array, w_block: int, gw: int,
 
 def slab_substrate_call(compute, x: jax.Array, geom: SubstrateGeom,
                         halo: int, interpret: bool, consts=(),
-                        x_halo: int = 0) -> jax.Array:
+                        x_halo: int = 0, boundary=None) -> jax.Array:
     """Launch ``compute`` over every (z-slab, strip) output cell of a 3D
     grid, on either halo-plane substrate (module docstring, DESIGN.md §9).
 
     The 3D analogue of ``strip_substrate_call`` -- and like it, the ONE
-    place the 3D kernels lower through.  ``compute(cur, *const_refs)``
+    place the 3D kernels lower through.
+    ``compute(cur, edges, *const_refs)``
     receives the (z_slab + 2*halo, strip_m + 2*halo, W) f32 halo-extended
     slab (periodic in z and y via the modulo index maps; the x-wrap is the
     kernels' own in-VMEM job) and returns the (z_slab, strip_m, W) output
@@ -1273,7 +1559,8 @@ def slab_substrate_call(compute, x: jax.Array, geom: SubstrateGeom,
     maybe_fail("compile")
     maybe_fail("vmem")
 
-    lg = slab_launch_geometry(x.shape, geom, halo, x_halo)
+    lg = slab_launch_geometry(x.shape, geom, halo, x_halo,
+                              boundary=boundary)
     return _launch(lg, compute, x, interpret, consts)
 
 

@@ -286,7 +286,10 @@ class GuardedPlan:
         if rung.degraded:
             # Degraded geometry: drop explicit pins so the shared N-D rule
             # (resolve_substrate_geom) re-sizes everything under the
-            # halved budget pinned by _EnvPin.
+            # halved budget pinned by _EnvPin.  ``boundary`` is NOT in this
+            # list: it is semantics, not geometry -- every rung (and the
+            # checked reference re-run) must honor the plan's boundary
+            # modes or the ladder would silently change the answer.
             for g in ("tile_m", "tile_n", "h_block", "z_slab", "z_block",
                       "w_tile", "w_block"):
                 kw[g] = None

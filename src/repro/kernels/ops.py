@@ -67,6 +67,7 @@ def stencil_apply(
     use_sparse_unit: bool = False,
     guard: bool = False,
     watchdog: Optional[bool] = None,
+    boundary=None,
 ) -> jax.Array:
     """Advance the grid ``t`` time steps with the selected backend.
 
@@ -84,13 +85,18 @@ def stencil_apply(
     down the fallback ladder instead of raising, and ``watchdog``
     (None = the ``REPRO_NAN_WATCHDOG`` env flag) arms the NaN/Inf check
     with a checked re-run.  On a clean run both paths execute the
-    identical cached plan."""
+    identical cached plan.
+
+    ``boundary`` selects the per-axis global edge mode (DESIGN.md §15):
+    ``None``/``"periodic"`` is the historical wrap bit for bit; a string
+    applies to every axis, a tuple names each axis, e.g.
+    ``boundary=("reflect", "periodic")``."""
     kw = dict(
         hw=hw, backend=None if backend == "auto" else backend,
         tile_m=tile_m, tile_n=tile_n, h_block=h_block,
         z_slab=z_slab, z_block=z_block, w_tile=w_tile, w_block=w_block,
         interpret=interpret, compute_dtype=compute_dtype,
-        use_sparse_unit=use_sparse_unit,
+        use_sparse_unit=use_sparse_unit, boundary=boundary,
     )
     if guard:
         from .guard import guarded_stencil_plan
@@ -109,6 +115,7 @@ def explain(
     w_tile: Optional[int] = None, w_block: Optional[int] = None,
     grid_shape=None, tile_m: Optional[int] = None,
     use_sparse_unit: bool = False,
+    boundary=None,
 ) -> Decision:
     """Expose the dispatch decision (scenario, predicted speedup, reason).
 
@@ -136,8 +143,11 @@ def explain(
         z_block = geom.z_block if geom.dim == 3 else None
         w_tile = geom.w_tile if geom.dim >= 2 else None
         w_block = geom.w_block if geom.dim >= 2 else None
+    if boundary is not None:
+        from repro.stencil.boundary import resolve_boundary
+        boundary = resolve_boundary(boundary, spec.dim)
     return decide(spec, t, dtype_bytes, hw,
                   tile_n=tile_n, strip_m=strip_m, h_block=h_block,
                   z_slab=z_slab, z_block=z_block,
                   w_tile=w_tile, w_block=w_block,
-                  use_sparse_unit=use_sparse_unit)
+                  use_sparse_unit=use_sparse_unit, boundary=boundary)

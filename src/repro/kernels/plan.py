@@ -43,6 +43,8 @@ import numpy as np
 
 from repro.core import perfmodel as pm
 from repro.core.selector import Decision, select_backend
+from repro.stencil.boundary import (BoundaryLike, boundary_label,
+                                    is_periodic, resolve_boundary)
 from repro.stencil.spec import StencilSpec
 from repro.stencil.weights import jacobi_weights
 from . import registry
@@ -73,6 +75,7 @@ def decide(
     w_tile: Optional[int] = None,
     w_block: Optional[int] = None,
     use_sparse_unit: bool = False,
+    boundary: BoundaryLike = None,
 ) -> Decision:
     """THE decision path: plan building, ``stencil_apply(backend="auto")``
     and ``ops.explain`` all consult this one function, so they can never
@@ -80,12 +83,15 @@ def decide(
     only for 3D specs (the halo-plane substrate's depth geometry);
     ``w_tile``/``w_block`` price the column-tiled W substrate
     (DESIGN.md §10; ``None``/0 = full width); ``use_sparse_unit`` admits
-    the sparse-compacted backends as priced candidates (DESIGN.md §14)."""
+    the sparse-compacted backends as priced candidates (DESIGN.md §14);
+    ``boundary`` (DESIGN.md §15) is recorded in the decision's reason --
+    the in-kernel fills are FLOP-free, so it never moves the pricing."""
     return select_backend(spec, t, dtype_bytes=dtype_bytes, hw=hw,
                           tile_n=tile_n, strip_m=strip_m, h_block=h_block,
                           z_slab=z_slab, z_block=z_block,
                           w_tile=w_tile, w_block=w_block,
-                          use_sparse_unit=use_sparse_unit)
+                          use_sparse_unit=use_sparse_unit,
+                          boundary=boundary)
 
 
 class StencilPlan:
@@ -109,10 +115,13 @@ class StencilPlan:
                  decision, fn, tile_m, tile_n, interpret, compute_dtype,
                  mesh=None, shard_spec=None, dist_mode=None, halo_plan=None,
                  key=None, build_time_s=0.0, batch=None, batch_mode=None,
-                 ctx=None):
+                 ctx=None, boundary=None):
         self.spec = spec
         self.weights = weights
         self.grid_shape = grid_shape
+        #: Resolved per-axis boundary modes (DESIGN.md §15); ``None`` =
+        #: all periodic (the historical plans).
+        self.boundary = boundary
         self.batch = batch
         self.batch_mode = batch_mode
         self.dtype = dtype
@@ -187,12 +196,17 @@ class StencilPlan:
             "  candidates (effective FLOP/s): "
             + ", ".join(f"{k}={v:.3g}" for k, v in d.candidates.items()),
         ]
+        if self.boundary is not None and not is_periodic(self.boundary):
+            lines.insert(2, f"  boundary : {boundary_label(self.boundary)}")
         if self.halo_plan is not None:
             hp = self.halo_plan
-            lines.append(
-                f"  halo plan: mode={hp['mode']} depth={hp['halo_depth']} "
-                f"exchanges/call={hp['exchanges_per_call']} "
-                f"bytes/shard/call={hp['halo_bytes_per_call']}")
+            line = (f"  halo plan: mode={hp['mode']} depth={hp['halo_depth']} "
+                    f"exchanges/call={hp['exchanges_per_call']} "
+                    f"bytes/shard/call={hp['halo_bytes_per_call']}")
+            if "interior_fraction" in hp:
+                line += (" overlap: interior_fraction="
+                         f"{hp['interior_fraction']:.3f}")
+            lines.append(line)
         return "\n".join(lines)
 
     def __repr__(self) -> str:
@@ -407,6 +421,7 @@ def plan_signature(
     interpret: Optional[bool] = None,
     compute_dtype=None,
     use_sparse_unit: bool = False,
+    boundary: BoundaryLike = None,
 ) -> Tuple:
     """Validate plan arguments and return ``(key, weights, grid_shape,
     interpret)`` -- the deterministic cache signature WITHOUT building.
@@ -445,6 +460,10 @@ def plan_signature(
         raise ValueError(
             f"grid rank {len(grid_shape)} != kernel rank {weights.ndim}; "
             "the plan's grid_shape must match the stencil dimensionality")
+    # Resolved per-axis modes land in the key: a reflect×periodic plan
+    # must never alias the periodic plan of the same geometry.  Unknown
+    # modes / length mismatches raise here, in the caller's frame.
+    boundary_key = resolve_boundary(boundary, len(grid_shape))
     if interpret is None:
         interpret = _default_interpret()
     # The RESOLVED fold mode lands in the key (pure: a function of the
@@ -466,7 +485,7 @@ def plan_signature(
            shard_key, backend, tile_m, tile_n, h_block, z_slab, z_block,
            w_tile, w_block, batch_key, vmem_budget_bytes(), interpret,
            None if compute_dtype is None else _dtype_key(compute_dtype),
-           bool(use_sparse_unit), registry.generation())
+           bool(use_sparse_unit), boundary_key, registry.generation())
     return key, weights, grid_shape, interpret
 
 
@@ -495,6 +514,7 @@ def stencil_plan(
     use_sparse_unit: bool = False,
     use_cache: bool = True,
     audit: Optional[bool] = None,
+    boundary: BoundaryLike = None,
 ) -> StencilPlan:
     """Build (or fetch from cache) a compiled stencil execution plan.
 
@@ -510,8 +530,10 @@ def stencil_plan(
       mesh / shard_spec: when given, the plan drives the distributed
         halo-exchange stepper; ``shard_spec`` names one mesh axis per grid
         dim (``None`` entries = unsharded dims).  ``dist_mode`` is
-        ``"fused"`` (one depth-``t*r`` exchange per invocation) or
-        ``"stepwise"`` (``t`` depth-``r`` exchanges).
+        ``"fused"`` (one depth-``t*r`` exchange per invocation),
+        ``"stepwise"`` (``t`` depth-``r`` exchanges) or ``"overlap"``
+        (stepwise's schedule with the interior update overlapping each
+        in-flight exchange; needs exactly one sharded dim).
       backend: override the selector's choice with any registered backend
         name (``repro.kernels.registry.registered_backends()``).
       tile_m/tile_n: explicit strip height / column-tile width (``None`` =
@@ -535,6 +557,11 @@ def stencil_plan(
       use_sparse_unit: admit the sparse-compacted backends
         (``sparse_matmul``/``fused_sparse_matmul``, DESIGN.md §14) as
         priced auto candidates; part of the cache key.
+      boundary: per-axis boundary modes (DESIGN.md §15) -- one of
+        ``periodic | zero | reflect | replicate`` per grid axis (a bare
+        string applies to every axis; ``None`` entries and ``None``
+        itself mean periodic, the historical behavior bit for bit), e.g.
+        ``boundary=("reflect", "periodic")``.  Part of the cache key.
       use_cache: bypass the process-wide plan cache when ``False``.
       audit: run the static auditor (repro.audit) over the built plan and
         attach its report as ``plan.audit_report`` (``None`` defers to the
@@ -550,7 +577,8 @@ def stencil_plan(
         z_block=z_block, w_tile=w_tile, w_block=w_block,
         batch=batch, batch_mode=batch_mode,
         interpret=interpret, compute_dtype=compute_dtype,
-        use_sparse_unit=use_sparse_unit)
+        use_sparse_unit=use_sparse_unit, boundary=boundary)
+    modes = resolve_boundary(boundary, len(grid_shape))
     with _LOCK:
         if use_cache and key in _CACHE:
             _STATS["hits"] += 1
@@ -577,6 +605,7 @@ def stencil_plan(
         w_tile=geom_px.w_tile if geom_px.dim >= 2 else None,
         w_block=geom_px.w_block if geom_px.dim >= 2 else None,
         use_sparse_unit=use_sparse_unit,
+        boundary=modes,
     )
     exec_backend = backend if backend is not None else decision.backend
 
@@ -585,6 +614,7 @@ def stencil_plan(
         dtype=np.dtype(dtype), t=t, tile_m=tile_m, tile_n=tile_n,
         interpret=interpret, compute_dtype=compute_dtype, h_block=h_block,
         z_slab=z_slab, z_block=z_block, w_tile=w_tile, w_block=w_block,
+        boundary=modes,
     )
 
     halo_plan = None
@@ -611,7 +641,7 @@ def stencil_plan(
         build_time_s=time.perf_counter() - t0,
         batch=None if batch is None else int(batch),
         batch_mode=resolved_mode,
-        ctx=ctx,
+        ctx=ctx, boundary=modes,
     )
     from repro.core.envutil import env_flag
     if audit if audit is not None else env_flag("REPRO_AUDIT"):
@@ -693,20 +723,33 @@ def _build_distributed(mesh, axis_names, dist_mode, ctx, exec_backend):
         tile_m=ctx.tile_m, tile_n=ctx.tile_n, h_block=ctx.h_block,
         z_slab=ctx.z_slab, z_block=ctx.z_block,
         w_tile=ctx.w_tile, w_block=ctx.w_block)
+    # The LOCAL plan stays periodic whatever ctx.boundary says: the global
+    # boundary is realized in the halo extension (mode pads + edge-shard
+    # masks), and the kernel's modulo wrap only pollutes the discarded
+    # halo ring (DESIGN.md §15).
     stepper = make_distributed_stepper(
         mesh, axis_names, ctx.weights, t=ctx.t, mode=dist_mode,
-        local_apply=local)
+        local_apply=local, boundary=ctx.boundary)
     sharding = NamedSharding(mesh, P(*axis_names))
     fn = jax.jit(stepper, in_shardings=sharding, out_shardings=sharding)
 
     r = ctx.radius
     halo_plan = {
         "mode": dist_mode,
-        "halo_depth": r if dist_mode == "stepwise" else r * ctx.t,
-        "exchanges_per_call": ctx.t if dist_mode == "stepwise" else 1,
+        "halo_depth": r * ctx.t if dist_mode == "fused" else r,
+        "exchanges_per_call": 1 if dist_mode == "fused" else ctx.t,
         "halo_bytes_per_call": halo_bytes_per_step(
             local_shape, axis_names, r, ctx.t, dist_mode,
             np.dtype(ctx.dtype).itemsize),
         "local_shape": local_shape,
     }
+    if dist_mode == "overlap":
+        # Fraction of the local block whose update is computed while the
+        # exchange is in flight -- the latency-hiding headroom explain()
+        # surfaces.
+        frac = 1.0
+        for m, ax in zip(local_shape, axis_names):
+            if ax is not None:
+                frac *= max(m - 2 * r, 0) / m
+        halo_plan["interior_fraction"] = frac
     return fn, halo_plan

@@ -8,20 +8,26 @@ from repro.stencil.reference import apply_stencil, apply_stencil_steps
 from repro.stencil.weights import fuse_weights
 
 
-def stencil_direct_ref(x: jax.Array, weights, t: int = 1) -> jax.Array:
-    """Oracle for kernels.stencil_direct: t periodic stencil steps."""
-    return apply_stencil_steps(x, jnp.asarray(weights, x.dtype), t, "periodic")
+def stencil_direct_ref(x: jax.Array, weights, t: int = 1,
+                       boundary=None) -> jax.Array:
+    """Oracle for kernels.stencil_direct: t boundary-aware stencil steps
+    (``boundary`` per-axis, ``None`` = periodic)."""
+    b = "periodic" if boundary is None else boundary
+    return apply_stencil_steps(x, jnp.asarray(weights, x.dtype), t, b)
 
 
-def stencil_matmul_ref(x: jax.Array, weights) -> jax.Array:
-    """Oracle for kernels.stencil_matmul: one periodic step of ``weights``
-    (which may itself be a fused kernel)."""
-    return apply_stencil(x, jnp.asarray(weights, x.dtype), "periodic")
+def stencil_matmul_ref(x: jax.Array, weights, boundary=None) -> jax.Array:
+    """Oracle for kernels.stencil_matmul: one boundary-aware step of
+    ``weights`` (which may itself be a fused kernel)."""
+    b = "periodic" if boundary is None else boundary
+    return apply_stencil(x, jnp.asarray(weights, x.dtype), b)
 
 
-def stencil_fused_matmul_ref(x: jax.Array, weights, t: int) -> jax.Array:
+def stencil_fused_matmul_ref(x: jax.Array, weights, t: int,
+                             boundary=None) -> jax.Array:
     """Oracle for the fused-matmul path: t steps == one fused-kernel step."""
-    return apply_stencil_steps(x, jnp.asarray(weights, x.dtype), t, "periodic")
+    b = "periodic" if boundary is None else boundary
+    return apply_stencil_steps(x, jnp.asarray(weights, x.dtype), t, b)
 
 
 def fused_kernel(weights, t: int):

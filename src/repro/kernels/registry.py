@@ -33,6 +33,7 @@ from typing import Callable, Dict, Optional, Tuple
 import numpy as np
 
 from repro.core import perfmodel as pm
+from repro.stencil.boundary import is_periodic, resolve_boundary
 from repro.stencil.spec import StencilSpec
 from repro.stencil.weights import fuse_weights
 from .common import (SubstrateGeom, choose_tile, launch_geometry,
@@ -65,6 +66,9 @@ class PlanContext:
     z_block: Optional[int] = None   # 3D grids: halo-plane block (None = auto)
     w_tile: Optional[int] = None    # None = auto, 0 = full width (fast path)
     w_block: Optional[int] = None   # column halo block (None = auto)
+    #: Per-axis boundary spec (DESIGN.md §15), resolved by the plan layer
+    #: to one mode per grid axis; ``None`` = all periodic (historical).
+    boundary: Optional[Tuple[str, ...]] = None
 
     @property
     def radius(self) -> int:
@@ -94,7 +98,8 @@ class PlanContext:
 
     def kernel_kwargs(self, geom: SubstrateGeom) -> dict:
         """The substrate-geometry kwargs both strip kernels accept."""
-        kw = dict(tile_m=geom.strip_m, h_block=geom.h_block)
+        kw = dict(tile_m=geom.strip_m, h_block=geom.h_block,
+                  boundary=self.boundary)
         if geom.dim >= 2:
             kw.update(w_tile=geom.w_tile, w_block=geom.w_block)
         if geom.dim == 3:
@@ -106,7 +111,8 @@ class PlanContext:
         validate_tiling(self.grid_shape, geom.strip_m, tile_n, halo, radius,
                         geom.h_block,
                         geom.z_slab if geom.dim == 3 else None, geom.z_block,
-                        geom.w_tile, geom.w_block, halo)
+                        geom.w_tile, geom.w_block, halo,
+                        boundary=self.boundary)
 
 
 # ---------------------------------------------------------------------------
@@ -141,11 +147,15 @@ class LaunchAudit:
     #: operand's shape, whose row count proves the kept-row fraction S.
     band_lo: Optional[Tuple[int, ...]] = None
     band_spans: Optional[Tuple[int, ...]] = None
+    #: Per-axis boundary modes at the TRUE grid rank (``None`` = periodic);
+    #: ``launch_geometry`` lifts 1D grids exactly as the kernels do.
+    boundary: Optional[Tuple[str, ...]] = None
 
     def launch_geometry(self):
         """The exact structure the substrate launches for this geometry."""
         return launch_geometry(self.grid_shape, self.geom,
-                               self.halo, self.x_halo)
+                               self.halo, self.x_halo,
+                               boundary=self.boundary)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -187,7 +197,10 @@ def _launch_audit(ctx: PlanContext, geom: SubstrateGeom, w_op, t_inner: int,
                                       for ix in row_index))
     return LaunchAudit(geom=geom, grid_shape=tuple(ctx.grid_shape),
                        halo=halo, x_halo=x_halo, t_inner=t_inner,
-                       weights=w_op, radius=radius, engine=engine, **extra)
+                       weights=w_op, radius=radius, engine=engine,
+                       boundary=resolve_boundary(ctx.boundary,
+                                                 len(ctx.grid_shape)),
+                       **extra)
 
 
 def _audit_direct(ctx: PlanContext) -> AuditSpec:
@@ -372,10 +385,10 @@ def fallback_ladder(after: Optional[str] = None) -> Tuple[str, ...]:
 # plan execution re-derives nothing.
 # ---------------------------------------------------------------------------
 def _build_reference(ctx: PlanContext) -> Callable:
-    w, t = ctx.weights, ctx.t
+    w, t, b = ctx.weights, ctx.t, ctx.boundary
 
     def run(x):
-        return _ref.stencil_direct_ref(x, w, t)
+        return _ref.stencil_direct_ref(x, w, t, boundary=b)
     return run
 
 
@@ -425,6 +438,15 @@ def _build_matmul(ctx: PlanContext) -> Callable:
 
 def _build_fused_matmul(ctx: PlanContext) -> Callable:
     """Monolithic fusion: ONE contraction of the composed radius-t*r kernel."""
+    if ctx.t > 1 and not is_periodic(ctx.boundary):
+        # One application of the composed kernel sees ONE boundary
+        # extension at depth t*r, but every non-periodic mode re-applies
+        # per step (DESIGN.md §15) -- the regime cannot represent that.
+        raise ValueError(
+            "fused_matmul (monolithic fusion) cannot honor non-periodic "
+            f"boundaries at t={ctx.t}: the composed radius-t*r kernel "
+            "bakes a single boundary extension into all t steps; use "
+            "fused_matmul_reuse (per-step fills) or t=1")
     wf = ctx.fused_weights()
     R = (wf.shape[0] - 1) // 2
     geom, tile_n = ctx.resolve_geom(R), ctx.resolve_tile_n()
@@ -498,6 +520,12 @@ def _require_2d(ctx: PlanContext, name: str) -> None:
             f"backend {name!r} is the seed 2D 9-tile foil and supports only "
             f"2D grids, got rank {len(ctx.grid_shape)}; use the halo-plane "
             "substrate regimes (direct/matmul families) for 1D/3D")
+    if not is_periodic(ctx.boundary):
+        raise ValueError(
+            f"backend {name!r} is the seed periodic-only foil and does not "
+            f"support boundary={ctx.boundary!r}; use the halo-plane "
+            "substrate regimes (direct/matmul families) for non-periodic "
+            "boundaries (DESIGN.md §15)")
 
 
 def _build_legacy_direct(ctx: PlanContext) -> Callable:

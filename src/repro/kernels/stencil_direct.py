@@ -40,32 +40,47 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .common import (resolve_substrate_geom, slab_substrate_call,
-                     strip_substrate_call, validate_tiling, wrap_columns)
+from .common import (apply_boundary_fills, extend_columns, lift_boundary_1d,
+                     resolve_substrate_geom, slab_substrate_call,
+                     strip_substrate_call, validate_tiling)
+from repro.stencil.boundary import resolve_boundary
 
 
-def _stencil_steps(cur: jax.Array, weights, t: int, radius: int,
-                   wrap_x: bool = True) -> jax.Array:
+def _stencil_steps(cur: jax.Array, edges, weights, t: int, radius: int,
+                   modes, wrap_x: bool = True, x_pad: int = 0) -> jax.Array:
     """``t`` unrolled tap-sum updates on a halo-extended f32 region.
 
     N-D: ``weights`` has ``cur.ndim`` axes; each step consumes the
     per-axis kernel extent on every leading axis.  ``wrap_x`` (the
     full-width substrates, where every row is a complete global row)
-    re-wraps the last axis at ``radius`` per step; ``wrap_x=False`` (the
-    column-tiled substrate, DESIGN.md §10 -- rows are partial, no wrap
-    exists) instead CONSUMES the carried x-halo like a leading axis,
-    shrinking the last dim by 2*radius per step.  The barrier keeps XLA
-    from fusing the region assembly (refs concatenated by the whole
-    substrates, a scratch slice for the sub-blocked ones) into the tap
-    sum -- assembly-dependent FMA formation would otherwise perturb the
-    last ulp, and the substrates are asserted BIT-for-bit equal
-    (tests/test_substrate_strips.py).
+    re-extends the last axis at ``radius`` per step under its boundary
+    mode (periodic = the historical wrap); ``wrap_x=False`` (the
+    column-tiled substrate, DESIGN.md §10 -- rows are partial, no
+    re-extension is possible) instead CONSUMES the carried x-halo like a
+    leading axis, shrinking the last dim by 2*radius per step.
+
+    Non-periodic launches (``edges`` is not None) re-impose every
+    non-periodic axis's boundary values on the current out-of-domain
+    halo depth BEFORE each step -- the depth shrinks with the region,
+    ``(t-k)*radius`` at step ``k`` -- matching the oracle, which
+    re-pads the *updated* field every step (DESIGN.md §15); ``x_pad``
+    is the remainder path's right-padding column count, shifting the
+    last tile's x fill (the pad tail only feeds sliced-off columns).
+
+    The barrier keeps XLA from fusing the region assembly (refs
+    concatenated by the whole substrates, a scratch slice for the
+    sub-blocked ones) into the tap sum -- assembly-dependent FMA
+    formation would otherwise perturb the last ulp, and the substrates
+    are asserted BIT-for-bit equal (tests/test_substrate_strips.py).
     """
     cur = jax.lax.optimization_barrier(cur)
     wshape = weights.shape
-    for _ in range(t):
+    for k in range(t):
+        if edges is not None:
+            cur = apply_boundary_fills(cur, modes, edges, (t - k) * radius,
+                                       x_pad=x_pad, x_tiled=not wrap_x)
         if wrap_x:
-            z = wrap_columns(cur, radius)     # (..., n + 2r), periodic
+            z = extend_columns(cur, radius, modes[-1])  # (..., n + 2r)
             n = cur.shape[-1]
         else:
             z = cur                           # halo carried in the region
@@ -96,9 +111,13 @@ def stencil_direct(
     w_tile: int = None,
     w_block: int = None,
     interpret: bool = False,
+    boundary=None,
 ) -> jax.Array:
-    """``t`` fused time steps of an N-D stencil, periodic boundary.
+    """``t`` fused time steps of an N-D stencil, per-axis boundaries.
 
+    ``boundary`` is a per-axis mode spec (DESIGN.md §15: ``periodic`` |
+    ``zero`` | ``reflect`` | ``replicate``; ``None`` = all periodic,
+    the historical behavior bit for bit).
     ``weights``: host-side (2r+1)^d ndarray (zeros outside support); the
     grid rank must match ``weights.ndim`` (1, 2 or 3).  ``tile_m`` is the
     strip height and ``h_block`` the halo sub-block height; 3D grids add
@@ -121,12 +140,15 @@ def stencil_direct(
         # The lifted (1, N) grid admits exactly two h_blocks (0 = foil,
         # 1 = sub-blocked) and never column-tiles; coerce like
         # resolve_substrate_geom's dim-1 rule so kernel-level and
-        # plan-level pins can never disagree.
+        # plan-level pins can never disagree.  The synthetic row axis is
+        # periodic (it has no halo); the real axis keeps its mode.
         hb = h_block if h_block in (None, 0) else 1
         y = stencil_direct(x[None, :], w[None, :], t=t, tile_m=1,
-                           h_block=hb, w_tile=0, interpret=interpret)
+                           h_block=hb, w_tile=0, interpret=interpret,
+                           boundary=lift_boundary_1d(boundary))
         return y[0]
 
+    modes = resolve_boundary(boundary, x.ndim)
     radius = (w.shape[-1] - 1) // 2
     halo = t * ((w.shape[0] - 1) // 2)        # 0 for the lifted-1D kernel
     wid = x.shape[-1]
@@ -136,15 +158,19 @@ def stencil_direct(
                                   w_tile, w_block, x_halo)
     validate_tiling(x.shape, geom.strip_m, wid, halo, radius, geom.h_block,
                     geom.z_slab if x.ndim == 3 else None, geom.z_block,
-                    geom.w_tile, geom.w_block, x_halo)
+                    geom.w_tile, geom.w_block, x_halo, boundary=modes)
+    x_pad = (-wid) % geom.w_tile if geom.w_tile else 0  # remainder path
 
-    def compute(cur):
-        return _stencil_steps(cur, w, t, radius, wrap_x=not geom.w_tile)
+    def compute(cur, edges):
+        return _stencil_steps(cur, edges, w, t, radius, modes,
+                              wrap_x=not geom.w_tile, x_pad=x_pad)
 
     if x.ndim == 3:
         return slab_substrate_call(compute, x, geom, halo, interpret,
-                                   x_halo=x_halo if geom.w_tile else 0)
+                                   x_halo=x_halo if geom.w_tile else 0,
+                                   boundary=modes)
     return strip_substrate_call(compute, x, geom.strip_m, geom.h_block,
                                 halo, interpret, w_tile=geom.w_tile,
                                 w_block=geom.w_block,
-                                x_halo=x_halo if geom.w_tile else 0)
+                                x_halo=x_halo if geom.w_tile else 0,
+                                boundary=modes)

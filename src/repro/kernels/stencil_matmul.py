@@ -54,9 +54,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .common import (choose_tile, resolve_substrate_geom,
+from .common import (apply_boundary_fills, choose_tile, extend_columns,
+                     lift_boundary_1d, resolve_substrate_geom,
                      slab_substrate_call, strip_substrate_call,
-                     validate_tiling, wrap_columns)
+                     validate_tiling)
+from repro.stencil.boundary import resolve_boundary
 
 
 def build_bands(weights: np.ndarray, tile_n: int) -> np.ndarray:
@@ -125,7 +127,7 @@ def band_sparsity(weights: np.ndarray, tile_n: int) -> float:
 
 def _banded_step(z: jax.Array, bands_ref, offsets, lead_extents,
                  radius: int, tile_n: int, compute_dtype,
-                 wrap_x: bool = True) -> jax.Array:
+                 wrap_x: bool = True, mode_x: str = "periodic") -> jax.Array:
     """One radius-r banded contraction, any rank.
 
     ``z``: (..., n) rows; ``offsets`` the host-side leading shift tuples
@@ -137,15 +139,16 @@ def _banded_step(z: jax.Array, bands_ref, offsets, lead_extents,
     to rows and contracted against its banded operand.
 
     ``wrap_x`` (full-width substrates: rows are complete global rows)
-    wraps the periodic x-halo in-VMEM; ``wrap_x=False`` (the
-    column-tiled substrate, DESIGN.md §10) consumes the CARRIED x-halo
-    instead, shrinking the last axis by 2*radius.  A final chunk
-    narrower than ``tile_n`` (widths not divisible by the tile -- the
-    choose_tile cap policy) contracts against the leading submatrix of
-    the banded operand, which is exactly the narrower band.
+    materializes the x-halo in-VMEM under ``mode_x`` (periodic = the
+    historical wrap); ``wrap_x=False`` (the column-tiled substrate,
+    DESIGN.md §10) consumes the CARRIED x-halo instead, shrinking the
+    last axis by 2*radius.  A final chunk narrower than ``tile_n``
+    (widths not divisible by the tile -- the choose_tile cap policy)
+    contracts against the leading submatrix of the banded operand,
+    which is exactly the narrower band.
     """
     if wrap_x:
-        zw = wrap_columns(z, radius)                   # (..., n + 2r)
+        zw = extend_columns(z, radius, mode_x)         # (..., n + 2r)
         n_out = z.shape[-1]
     else:
         zw = z                                         # halo carried
@@ -178,16 +181,21 @@ def _banded_step(z: jax.Array, bands_ref, offsets, lead_extents,
     return out.reshape(lead + (n_out,))
 
 
-def _banded_steps(cur: jax.Array, bands_ref, offsets, lead_extents, t: int,
-                  radius: int, tile_n: int, compute_dtype,
-                  wrap_x: bool = True) -> jax.Array:
+def _banded_steps(cur: jax.Array, edges, bands_ref, offsets, lead_extents,
+                  t: int, radius: int, tile_n: int, compute_dtype, modes,
+                  wrap_x: bool = True, x_pad: int = 0) -> jax.Array:
     # Barrier between region assembly and contraction: keeps the
     # substrates' compute graphs identical so their outputs stay bit-for-bit
-    # equal (see stencil_direct._stencil_steps).
+    # equal (see stencil_direct._stencil_steps).  Non-periodic launches
+    # re-impose the boundary on the shrinking out-of-domain halo before
+    # every step, exactly like the VPU kernel (DESIGN.md §15).
     cur = jax.lax.optimization_barrier(cur)
-    for _ in range(t):
+    for k in range(t):
+        if edges is not None:
+            cur = apply_boundary_fills(cur, modes, edges, (t - k) * radius,
+                                       x_pad=x_pad, x_tiled=not wrap_x)
         cur = _banded_step(cur, bands_ref, offsets, lead_extents, radius,
-                           tile_n, compute_dtype, wrap_x)
+                           tile_n, compute_dtype, wrap_x, modes[-1])
     return cur
 
 
@@ -204,8 +212,12 @@ def stencil_matmul(
     w_block: int = None,
     interpret: bool = False,
     compute_dtype=None,
+    boundary=None,
 ) -> jax.Array:
-    """``t`` stencil steps via banded MXU contractions, periodic boundary.
+    """``t`` stencil steps via banded MXU contractions, per-axis boundaries.
+
+    ``boundary`` is a per-axis mode spec (DESIGN.md §15; ``None`` = all
+    periodic, the historical behavior bit for bit).
 
     N-D: 2D and 3D grids contract their flattened leading shift tuples
     against per-row banded operands; 1D grids route through the 2D
@@ -239,9 +251,11 @@ def stencil_matmul(
         hb = h_block if h_block in (None, 0) else 1
         y = stencil_matmul(x[None, :], w[None, :], t=t, tile_m=1,
                            tile_n=tile_n, h_block=hb, w_tile=0,
-                           interpret=interpret, compute_dtype=compute_dtype)
+                           interpret=interpret, compute_dtype=compute_dtype,
+                           boundary=lift_boundary_1d(boundary))
         return y[0]
 
+    modes = resolve_boundary(boundary, x.ndim)
     radius = (w.shape[-1] - 1) // 2
     halo = t * ((w.shape[0] - 1) // 2)        # 0 for the lifted-1D kernel
     wid = x.shape[-1]
@@ -252,24 +266,28 @@ def stencil_matmul(
     tile_n = choose_tile(wid) if tile_n is None else min(tile_n, wid)
     validate_tiling(x.shape, geom.strip_m, tile_n, halo, radius,
                     geom.h_block, geom.z_slab if x.ndim == 3 else None,
-                    geom.z_block, geom.w_tile, geom.w_block, x_halo)
+                    geom.z_block, geom.w_tile, geom.w_block, x_halo,
+                    boundary=modes)
     if compute_dtype is None:
         compute_dtype = x.dtype
+    x_pad = (-wid) % geom.w_tile if geom.w_tile else 0  # remainder path
 
     offsets, bands_np = build_bands_nd(w.astype(np.float32), tile_n)
     bands = jnp.asarray(bands_np)
     lead_extents = w.shape[:-1]
 
-    def compute(cur, bands_ref):
-        return _banded_steps(cur, bands_ref, offsets, lead_extents, t,
-                             radius, tile_n, compute_dtype,
-                             wrap_x=not geom.w_tile)
+    def compute(cur, edges, bands_ref):
+        return _banded_steps(cur, edges, bands_ref, offsets, lead_extents,
+                             t, radius, tile_n, compute_dtype, modes,
+                             wrap_x=not geom.w_tile, x_pad=x_pad)
 
     if x.ndim == 3:
         return slab_substrate_call(compute, x, geom, halo, interpret,
                                    consts=(bands,),
-                                   x_halo=x_halo if geom.w_tile else 0)
+                                   x_halo=x_halo if geom.w_tile else 0,
+                                   boundary=modes)
     return strip_substrate_call(compute, x, geom.strip_m, geom.h_block,
                                 halo, interpret, consts=(bands,),
                                 w_tile=geom.w_tile, w_block=geom.w_block,
-                                x_halo=x_halo if geom.w_tile else 0)
+                                x_halo=x_halo if geom.w_tile else 0,
+                                boundary=modes)

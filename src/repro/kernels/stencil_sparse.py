@@ -43,10 +43,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .common import (choose_tile, resolve_substrate_geom,
+from .common import (apply_boundary_fills, choose_tile, extend_columns,
+                     lift_boundary_1d, resolve_substrate_geom,
                      slab_substrate_call, strip_substrate_call,
-                     validate_tiling, wrap_columns)
+                     validate_tiling)
 from .stencil_matmul import build_bands_nd
+from repro.stencil.boundary import resolve_boundary
 
 
 def compact_bands(offsets, bands: np.ndarray):
@@ -121,7 +123,8 @@ def kept_row_fraction(weights, tile_n: int) -> float:
 
 def _sparse_banded_step(z: jax.Array, packed_ref, offsets, row_meta,
                         lead_extents, radius: int, tile_n: int,
-                        compute_dtype, wrap_x: bool = True) -> jax.Array:
+                        compute_dtype, wrap_x: bool = True,
+                        mode_x: str = "periodic") -> jax.Array:
     """One radius-r compacted banded contraction, any rank.
 
     Mirrors ``stencil_matmul._banded_step`` exactly, except each offset
@@ -136,7 +139,7 @@ def _sparse_banded_step(z: jax.Array, packed_ref, offsets, row_meta,
     comes from the full-width chunks, which dominate.
     """
     if wrap_x:
-        zw = wrap_columns(z, radius)                   # (..., n + 2r)
+        zw = extend_columns(z, radius, mode_x)         # (..., n + 2r)
         n_out = z.shape[-1]
     else:
         zw = z                                         # halo carried
@@ -175,17 +178,23 @@ def _sparse_banded_step(z: jax.Array, packed_ref, offsets, row_meta,
     return out.reshape(lead + (n_out,))
 
 
-def _sparse_banded_steps(cur: jax.Array, packed_ref, offsets, row_meta,
-                         lead_extents, t: int, radius: int, tile_n: int,
-                         compute_dtype, wrap_x: bool = True) -> jax.Array:
+def _sparse_banded_steps(cur: jax.Array, edges, packed_ref, offsets,
+                         row_meta, lead_extents, t: int, radius: int,
+                         tile_n: int, compute_dtype, modes,
+                         wrap_x: bool = True, x_pad: int = 0) -> jax.Array:
     # Same assembly/compute barrier as the dense banded kernel: keeps the
     # substrates' compute graphs identical so outputs stay bit-for-bit
-    # equal across substrate choices.
+    # equal across substrate choices.  Non-periodic launches re-impose
+    # the boundary on the shrinking out-of-domain halo before every
+    # step, exactly like the dense kernels (DESIGN.md §15).
     cur = jax.lax.optimization_barrier(cur)
-    for _ in range(t):
+    for k in range(t):
+        if edges is not None:
+            cur = apply_boundary_fills(cur, modes, edges, (t - k) * radius,
+                                       x_pad=x_pad, x_tiled=not wrap_x)
         cur = _sparse_banded_step(cur, packed_ref, offsets, row_meta,
                                   lead_extents, radius, tile_n,
-                                  compute_dtype, wrap_x)
+                                  compute_dtype, wrap_x, modes[-1])
     return cur
 
 
@@ -202,6 +211,7 @@ def stencil_sparse_matmul(
     w_block: int = None,
     interpret: bool = False,
     compute_dtype=None,
+    boundary=None,
 ) -> jax.Array:
     """``t`` stencil steps via sparse-compacted MXU contractions.
 
@@ -221,9 +231,11 @@ def stencil_sparse_matmul(
         y = stencil_sparse_matmul(x[None, :], w[None, :], t=t, tile_m=1,
                                   tile_n=tile_n, h_block=hb, w_tile=0,
                                   interpret=interpret,
-                                  compute_dtype=compute_dtype)
+                                  compute_dtype=compute_dtype,
+                                  boundary=lift_boundary_1d(boundary))
         return y[0]
 
+    modes = resolve_boundary(boundary, x.ndim)
     radius = (w.shape[-1] - 1) // 2
     halo = t * ((w.shape[0] - 1) // 2)        # 0 for the lifted-1D kernel
     wid = x.shape[-1]
@@ -234,9 +246,11 @@ def stencil_sparse_matmul(
     tile_n = choose_tile(wid) if tile_n is None else min(tile_n, wid)
     validate_tiling(x.shape, geom.strip_m, tile_n, halo, radius,
                     geom.h_block, geom.z_slab if x.ndim == 3 else None,
-                    geom.z_block, geom.w_tile, geom.w_block, x_halo)
+                    geom.z_block, geom.w_tile, geom.w_block, x_halo,
+                    boundary=modes)
     if compute_dtype is None:
         compute_dtype = x.dtype
+    x_pad = (-wid) % geom.w_tile if geom.w_tile else 0  # remainder path
 
     offsets, bands_np = build_bands_nd(w.astype(np.float32), tile_n)
     row_index, packed_np = compact_bands(offsets, bands_np)
@@ -244,16 +258,19 @@ def stencil_sparse_matmul(
     packed = jnp.asarray(packed_np)
     lead_extents = w.shape[:-1]
 
-    def compute(cur, packed_ref):
-        return _sparse_banded_steps(cur, packed_ref, offsets, row_meta,
-                                    lead_extents, t, radius, tile_n,
-                                    compute_dtype, wrap_x=not geom.w_tile)
+    def compute(cur, edges, packed_ref):
+        return _sparse_banded_steps(cur, edges, packed_ref, offsets,
+                                    row_meta, lead_extents, t, radius,
+                                    tile_n, compute_dtype, modes,
+                                    wrap_x=not geom.w_tile, x_pad=x_pad)
 
     if x.ndim == 3:
         return slab_substrate_call(compute, x, geom, halo, interpret,
                                    consts=(packed,),
-                                   x_halo=x_halo if geom.w_tile else 0)
+                                   x_halo=x_halo if geom.w_tile else 0,
+                                   boundary=modes)
     return strip_substrate_call(compute, x, geom.strip_m, geom.h_block,
                                 halo, interpret, consts=(packed,),
                                 w_tile=geom.w_tile, w_block=geom.w_block,
-                                x_halo=x_halo if geom.w_tile else 0)
+                                x_halo=x_halo if geom.w_tile else 0,
+                                boundary=modes)

@@ -1,4 +1,6 @@
 """Stencil problem domain: specs, weights, references, distribution."""
+from .boundary import MODES as BOUNDARY_MODES
+from .boundary import BoundarySpec, is_periodic, resolve_boundary
 from .spec import StencilSpec, box, star
 from .weights import make_weights, jacobi_weights, fuse_weights, fused_num_points, alpha
 
@@ -11,4 +13,8 @@ __all__ = [
     "fuse_weights",
     "fused_num_points",
     "alpha",
+    "BOUNDARY_MODES",
+    "BoundarySpec",
+    "is_periodic",
+    "resolve_boundary",
 ]

@@ -1,13 +1,15 @@
 """Pure-jnp reference implementations (oracles) for stencil computation.
 
-Two boundary conditions are supported:
-  * ``periodic`` -- toroidal wrap (matches the distributed halo-exchange
-    runtime, which uses a ppermute ring);
-  * ``zero``     -- zero padding outside the domain.
+Boundary conditions follow :mod:`repro.stencil.boundary`: per-axis
+``periodic`` (toroidal wrap, matching the distributed halo-exchange
+ppermute ring), ``zero``, ``reflect`` and ``replicate``, passed either
+as one mode string for every axis or a per-axis tuple such as
+``("reflect", "periodic")``.
 
-``apply_stencil`` is the shift-and-accumulate oracle: O(K) rolls, trivially
-correct, used to validate every other execution path (Pallas kernels, the
-conv-based fast path, and the distributed runtime).
+``apply_stencil`` is the shift-and-accumulate oracle: O(K) rolls (or
+mode-padded slices), trivially correct, used to validate every other
+execution path (Pallas kernels, the conv-based fast path, and the
+distributed runtime).
 """
 from __future__ import annotations
 
@@ -20,6 +22,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .boundary import PAD_MODE, BoundaryLike, is_periodic, resolve_boundary
 from .spec import StencilSpec
 
 
@@ -33,15 +36,31 @@ def _offsets(radius: int, dim: int):
     return list(itertools.product(rng, repeat=dim))
 
 
+def pad_boundary(x: jax.Array, radius: int, modes) -> jax.Array:
+    """Pad ``radius`` cells per side with each axis's boundary mode.
+
+    Axes pad sequentially in ascending order, so a later axis's halo is
+    built from the already-padded earlier axes -- exactly ``np.pad``'s
+    corner semantics, and the contract the in-kernel fills reproduce.
+    """
+    xp = x
+    for ax, m in enumerate(modes):
+        pad = [(0, 0)] * x.ndim
+        pad[ax] = (radius, radius)
+        xp = jnp.pad(xp, pad, mode=PAD_MODE[m])
+    return xp
+
+
 def apply_stencil(
     x: jax.Array,
     weights: jax.Array,
-    boundary: str = "periodic",
+    boundary: BoundaryLike = "periodic",
 ) -> jax.Array:
     """One stencil update:  y[i] = sum_o w[o] * x[i+o].
 
     ``weights`` is a dense ``(2R+1,)*d`` kernel (zeros outside support);
     its radius R may exceed the base spec's r (fused kernels).
+    ``boundary`` is one mode for every axis or a per-axis tuple.
     """
     dim = weights.ndim
     if x.ndim != dim:
@@ -49,18 +68,14 @@ def apply_stencil(
     radius = (weights.shape[0] - 1) // 2
     w = jnp.asarray(weights, dtype=x.dtype)
 
-    if boundary == "zero":
-        pad = [(radius, radius)] * dim
-        xp = jnp.pad(x, pad)
-    elif boundary == "periodic":
-        xp = None
-    else:
-        raise ValueError(f"unknown boundary {boundary!r}")
+    modes = resolve_boundary(boundary, dim)
+    periodic = is_periodic(modes)
+    xp = None if periodic else pad_boundary(x, radius, modes)
 
     y = jnp.zeros_like(x)
     for off in _offsets(radius, dim):
         widx = tuple(o + radius for o in off)
-        if boundary == "periodic":
+        if periodic:
             shifted = jnp.roll(x, shift=tuple(-o for o in off), axis=tuple(range(dim)))
         else:
             sl = tuple(slice(radius + o, radius + o + n) for o, n in zip(off, x.shape))
@@ -73,7 +88,7 @@ def apply_stencil_steps(
     x: jax.Array,
     weights: jax.Array,
     t: int,
-    boundary: str = "periodic",
+    boundary: BoundaryLike = "periodic",
 ) -> jax.Array:
     """``t`` sequential stencil updates (the un-fused ground truth)."""
     def body(carry, _):
@@ -86,7 +101,7 @@ def apply_stencil_steps(
 def apply_stencil_conv(
     x: jax.Array,
     weights: jax.Array,
-    boundary: str = "periodic",
+    boundary: BoundaryLike = "periodic",
 ) -> jax.Array:
     """Fast path via ``lax.conv_general_dilated`` (XLA-optimized oracle #2).
 
@@ -104,9 +119,12 @@ def apply_stencil_conv(
         pad = [(radius, radius)] * dim
         xin = jnp.pad(x, pad, mode="wrap")
         padding = "VALID"
-    else:
+    elif boundary == "zero":
         xin = x
         padding = "SAME"
+    else:
+        xin = pad_boundary(x, radius, resolve_boundary(boundary, dim))
+        padding = "VALID"
     lhs = xin[jnp.newaxis, jnp.newaxis]          # NC + spatial
     rhs = jnp.asarray(weights, x.dtype)[jnp.newaxis, jnp.newaxis]  # OI + spatial
     spatial = "".join(

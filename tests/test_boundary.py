@@ -1,0 +1,437 @@
+"""Per-axis BoundarySpec (DESIGN.md §15): resolution, kernel correctness
+across modes/backends/ranks, the default-periodic bitwise pin, plan-cache
+key distinctness, validation error paths, auditor mode-awareness (with
+tamper-negatives), serve pass-through, and the distributed stepper's
+boundary + overlap behavior (subprocess, multi-device).
+"""
+import dataclasses
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import audit
+from repro.kernels import clear_plan_cache, explain, stencil_apply, \
+    stencil_plan
+from repro.kernels import registry
+from repro.kernels.common import _check_reflect_extent, _check_wrap_radius, \
+    validate_tiling
+from repro.kernels.plan import plan_signature
+from repro.stencil import BOUNDARY_MODES, StencilSpec, is_periodic, \
+    jacobi_weights, make_weights, resolve_boundary
+from repro.stencil.boundary import boundary_label
+from repro.stencil.reference import apply_stencil_steps, pad_boundary
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+RNG = np.random.default_rng(7)
+
+
+@pytest.fixture(autouse=True)
+def _hygiene():
+    clear_plan_cache()
+    yield
+    clear_plan_cache()
+
+
+def _x(shape):
+    return jnp.asarray(RNG.normal(size=shape).astype(np.float32))
+
+
+def _oracle(x, w, t, boundary):
+    return apply_stencil_steps(x, jnp.asarray(w, x.dtype), t, boundary)
+
+
+# ---------------------------------------------------------------------------
+# Spec resolution
+# ---------------------------------------------------------------------------
+class TestResolve:
+    def test_defaults_and_forms(self):
+        assert resolve_boundary(None, 2) == ("periodic", "periodic")
+        assert resolve_boundary("reflect", 3) == ("reflect",) * 3
+        assert resolve_boundary(("zero", None), 2) == ("zero", "periodic")
+        assert is_periodic(None) and is_periodic(("periodic",) * 2)
+        assert not is_periodic(("periodic", "reflect"))
+        assert boundary_label(("reflect", "periodic")) == "reflect×periodic"
+        assert set(BOUNDARY_MODES) == {"periodic", "zero", "reflect",
+                                       "replicate"}
+
+    def test_rejections(self):
+        with pytest.raises(ValueError, match="unknown boundary mode"):
+            resolve_boundary("mirror", 2)
+        with pytest.raises(ValueError, match="unknown boundary mode"):
+            resolve_boundary(("periodic", "mirror"), 2)
+        with pytest.raises(ValueError, match="1 entries for a 2-D grid"):
+            resolve_boundary(("periodic",), 2)
+
+    def test_pad_boundary_matches_np_pad(self):
+        x = _x((5, 6))
+        for mode, np_mode in [("zero", "constant"), ("reflect", "reflect"),
+                              ("replicate", "edge"), ("periodic", "wrap")]:
+            got = pad_boundary(x, 2, (mode, "periodic"))
+            want = np.pad(np.asarray(x), ((2, 2), (0, 0)), mode=np_mode)
+            want = np.pad(want, ((0, 0), (2, 2)), mode="wrap")
+            assert np.array_equal(np.asarray(got), want), mode
+
+
+# ---------------------------------------------------------------------------
+# Mixed-mode grids vs padded oracle (satellite: the full small matrix)
+# ---------------------------------------------------------------------------
+class TestMixedModeGrids:
+    @pytest.mark.parametrize("wid", [257, 300])
+    @pytest.mark.parametrize("t", [1, 2])
+    @pytest.mark.parametrize("shape,r", [("box", 1), ("box", 2),
+                                         ("star", 1), ("star", 2)])
+    def test_2d_periodic_x_reflect_y(self, shape, r, t, wid):
+        """periodic-x × reflect-y on remainder widths, both unit families."""
+        w = make_weights(StencilSpec(shape, 2, r), seed=r)
+        x = _x((64, wid))
+        ref = _oracle(x, w, t, ("reflect", "periodic"))
+        for backend in ("direct", "fused_matmul_reuse"):
+            y = stencil_apply(x, w, t, backend=backend,
+                              boundary=("reflect", "periodic"),
+                              interpret=True)
+            err = float(jnp.max(jnp.abs(y - ref)))
+            assert err < 5e-4, (backend, shape, r, t, wid, err)
+
+    def test_3d_mixed_modes(self):
+        w = make_weights(StencilSpec("star", 3, 1), seed=1)
+        x = _x((8, 16, 128))
+        b = ("replicate", "reflect", "periodic")
+        ref = _oracle(x, w, 2, b)
+        for backend in ("fused_direct", "fused_matmul_reuse"):
+            y = stencil_apply(x, w, 2, backend=backend, boundary=b,
+                              interpret=True)
+            err = float(jnp.max(jnp.abs(y - ref)))
+            assert err < 5e-4, (backend, err)
+
+
+# ---------------------------------------------------------------------------
+# Every mode, every backend family (one geometry), 1D lift included
+# ---------------------------------------------------------------------------
+class TestAllModesAllBackends:
+    BACKENDS = ("direct", "fused_direct", "matmul", "fused_matmul_reuse",
+                "sparse_matmul", "fused_sparse_matmul")
+
+    @pytest.mark.parametrize("mode", ["zero", "reflect", "replicate"])
+    def test_uniform_mode_2d(self, mode):
+        w = make_weights(StencilSpec("star", 2, 2), seed=2)
+        x = _x((64, 128))
+        ref = _oracle(x, w, 2, mode)
+        for backend in self.BACKENDS:
+            y = stencil_apply(x, w, 2, backend=backend, boundary=mode,
+                              interpret=True)
+            err = float(jnp.max(jnp.abs(y - ref)))
+            assert err < 5e-4, (backend, mode, err)
+
+    @pytest.mark.parametrize("mode", ["zero", "reflect", "replicate"])
+    def test_uniform_mode_1d(self, mode):
+        w = make_weights(StencilSpec("box", 1, 2), seed=3)
+        x = _x((512,))
+        ref = _oracle(x, w, 2, mode)
+        for backend in ("direct", "fused_direct", "fused_matmul_reuse"):
+            y = stencil_apply(x, w, 2, backend=backend, boundary=mode,
+                              interpret=True)
+            err = float(jnp.max(jnp.abs(y - ref)))
+            assert err < 5e-4, (backend, mode, err)
+
+    def test_monolithic_fusion_rejects_nonperiodic_multistep(self):
+        """fused_matmul bakes ONE boundary extension into t steps -- it
+        must refuse rather than silently drift from the per-step oracle."""
+        w = jacobi_weights(StencilSpec("box", 2, 1))
+        with pytest.raises(ValueError, match="monolithic fusion"):
+            stencil_plan(w, (64, 128), np.float32, 2, backend="fused_matmul",
+                         boundary="zero", interpret=True)
+        # t=1: the composed kernel IS one step -- every mode is legal.
+        x = _x((64, 128))
+        y = stencil_apply(x, w, 1, backend="fused_matmul", boundary="zero",
+                          interpret=True)
+        err = float(jnp.max(jnp.abs(y - _oracle(x, w, 1, "zero"))))
+        assert err < 5e-4
+
+    def test_auto_selection_avoids_monolithic_on_nonperiodic(self):
+        w = jacobi_weights(StencilSpec("box", 2, 1))
+        p = stencil_plan(w, (256, 512), np.float32, 4, boundary="reflect",
+                         interpret=True)
+        assert p.backend != "fused_matmul"
+        x = _x((256, 512))
+        err = float(jnp.max(jnp.abs(p(x) - _oracle(x, w, 4, "reflect"))))
+        assert err < 5e-4
+
+
+# ---------------------------------------------------------------------------
+# Default-periodic pin: bitwise + cache-key + reason-string invariance
+# ---------------------------------------------------------------------------
+class TestPeriodicPin:
+    def test_default_bitwise_and_shared_cache_entry(self):
+        w = jacobi_weights(StencilSpec("box", 2, 1))
+        grid = (64, 128)
+        k_none = plan_signature(w, grid, np.float32, 2)[0]
+        k_str = plan_signature(w, grid, np.float32, 2, boundary="periodic")[0]
+        k_tup = plan_signature(w, grid, np.float32, 2,
+                               boundary=("periodic", "periodic"))[0]
+        assert k_none == k_str == k_tup
+        p0 = stencil_plan(w, grid, np.float32, 2, interpret=True)
+        p1 = stencil_plan(w, grid, np.float32, 2, boundary="periodic",
+                          interpret=True)
+        assert p1 is p0, "all-periodic spellings must share one cached plan"
+        x = _x(grid)
+        assert bool(jnp.all(p0(x) == p1(x)))
+
+    def test_nonperiodic_keys_distinct(self):
+        w = jacobi_weights(StencilSpec("box", 2, 1))
+        grid = (64, 128)
+        keys = {plan_signature(w, grid, np.float32, 2, boundary=b)[0]
+                for b in [None, "zero", "reflect", "replicate",
+                          ("reflect", "periodic"), ("periodic", "reflect")]}
+        assert len(keys) == 6, "every distinct spec needs its own plan"
+
+    def test_reason_string_only_changes_when_nonperiodic(self):
+        w = jacobi_weights(StencilSpec("box", 2, 1))
+        base = explain(w, 2, grid_shape=(256, 512))
+        again = explain(w, 2, grid_shape=(256, 512), boundary="periodic")
+        assert base.reason == again.reason
+        assert "boundary=" not in base.reason
+        refl = explain(w, 2, grid_shape=(256, 512),
+                       boundary=("reflect", "periodic"))
+        assert "boundary=reflect×periodic" in refl.reason
+
+    def test_explain_lists_boundary_line(self):
+        w = jacobi_weights(StencilSpec("box", 2, 1))
+        p = stencil_plan(w, (64, 128), np.float32, 2,
+                         boundary=("reflect", "periodic"), interpret=True)
+        assert "boundary : reflect×periodic" in p.explain()
+        p0 = stencil_plan(w, (64, 128), np.float32, 2, interpret=True)
+        assert "boundary" not in p0.explain()
+
+
+# ---------------------------------------------------------------------------
+# Validation error paths (satellite: 1D/2D/3D mode-specific guards)
+# ---------------------------------------------------------------------------
+class TestValidationErrorPaths:
+    def test_wrap_radius_messages(self):
+        # periodic keeps the historical message (and w == r stays legal)
+        _check_wrap_radius(2, 2, "periodic")
+        with pytest.raises(ValueError, match="wrap radius .* lower the"):
+            _check_wrap_radius(1, 2, "periodic")
+        # non-periodic: r >= w is degenerate, mode named in the message
+        for mode in ("zero", "reflect", "replicate"):
+            with pytest.raises(ValueError, match=f"whole {mode!r} axis"):
+                _check_wrap_radius(2, 2, mode)
+            _check_wrap_radius(3, 2, mode)
+
+    def test_reflect_extent_guard(self):
+        with pytest.raises(ValueError, match="mirror cells"):
+            _check_reflect_extent(2, 2, "x", "reflect")
+        _check_reflect_extent(3, 2, "x", "reflect")
+        _check_reflect_extent(2, 2, "x", "zero")  # only reflect needs depth
+
+    def test_1d_error_path(self):
+        w = jacobi_weights(StencilSpec("box", 1, 2))
+        with pytest.raises(ValueError, match="whole 'zero' axis"):
+            stencil_plan(w, (2,), np.float32, 1, backend="direct",
+                         boundary="zero", interpret=True)
+        # reflect mirror-depth binds when the FUSED halo t*r exceeds the
+        # per-step radius: extent 4 > r=2 but < halo+1 = 5
+        with pytest.raises(ValueError, match="mirror cells"):
+            stencil_plan(w, (4,), np.float32, 2, backend="fused_direct",
+                         boundary="reflect", interpret=True)
+
+    def test_2d_error_path(self):
+        # rows axis: reflect needs extent >= halo+1
+        with pytest.raises(ValueError, match="mirror cells"):
+            validate_tiling((2, 128), 2, 128, 2, radius=1,
+                            boundary=("reflect", "periodic"))
+        # same shape, periodic rows: the historical no-guard behavior
+        validate_tiling((2, 128), 2, 128, 2, radius=1)
+        # columns axis: r >= w on a non-periodic axis
+        w = jacobi_weights(StencilSpec("box", 2, 2))
+        with pytest.raises(ValueError, match="whole 'replicate' axis"):
+            stencil_plan(w, (64, 2), np.float32, 1, backend="direct",
+                         boundary=("periodic", "replicate"), interpret=True)
+
+    def test_3d_error_path(self):
+        with pytest.raises(ValueError, match="whole 'replicate' axis"):
+            validate_tiling((2, 64, 128), 64, 128, 2, radius=2,
+                            boundary=("replicate", "periodic", "periodic"))
+        with pytest.raises(ValueError, match="mirror cells"):
+            validate_tiling((2, 64, 128), 64, 128, 2, radius=1,
+                            boundary=("reflect", "periodic", "periodic"))
+        validate_tiling((2, 64, 128), 64, 128, 2, radius=2)
+
+
+# ---------------------------------------------------------------------------
+# Auditor: mode-aware coverage, positive + tamper-negative
+# ---------------------------------------------------------------------------
+def _ctx(grid, t=2, boundary=None, shape="box", r=1):
+    spec = StencilSpec(shape, len(grid), r)
+    w = make_weights(spec, seed=r)
+    return registry.PlanContext(
+        spec=spec, weights=w, grid_shape=tuple(grid),
+        dtype=np.dtype(np.float32), t=t, tile_m=None, tile_n=None,
+        interpret=True, h_block=None, z_slab=None, z_block=None,
+        w_tile=None, w_block=None,
+        boundary=resolve_boundary(boundary, len(grid)))
+
+
+class TestAuditorBoundary:
+    @pytest.mark.parametrize("mode", ["periodic", "zero", "reflect",
+                                      "replicate"])
+    def test_coverage_passes_every_mode(self, mode):
+        for backend in ("fused_direct", "fused_matmul_reuse"):
+            rep = audit.audit_context(_ctx((256, 512), boundary=mode),
+                                      backend)
+            assert rep.ok, (mode, backend, rep.summary())
+
+    def test_mixed_mode_3d_audit(self):
+        rep = audit.audit_context(
+            _ctx((32, 64, 128), boundary=("reflect", "periodic", "zero")),
+            "fused_direct")
+        assert rep.ok, rep.summary()
+
+    def test_tamper_periodic_maps_declared_reflect_is_caught(self):
+        """Wrong-mode index maps (periodic mod-wrap under a declared
+        reflect axis) must fail scratch/coverage-global -- the halo
+        off-by-one class this check exists for."""
+        launch = registry.get_backend("fused_direct").audit(
+            _ctx((256, 512))).launches[0]
+        lg = launch.launch_geometry()      # periodic maps
+        bad = dataclasses.replace(lg, boundary=("reflect", "periodic"))
+        checks = audit.audit_scratch(bad, launch)
+        viol = {c.name for c in checks if not c.passed and not c.skipped}
+        assert "scratch/coverage-global" in viol
+
+    def test_tamper_reflect_maps_declared_periodic_is_caught(self):
+        launch = registry.get_backend("fused_direct").audit(
+            _ctx((256, 512), boundary=("reflect", "periodic"))).launches[0]
+        lg = launch.launch_geometry()      # reflect maps
+        bad = dataclasses.replace(lg, boundary=("periodic", "periodic"))
+        checks = audit.audit_scratch(bad, launch)
+        viol = {c.name for c in checks if not c.passed and not c.skipped}
+        assert "scratch/coverage-global" in viol
+
+
+# ---------------------------------------------------------------------------
+# Serve: boundary rides the plan signature through submit()
+# ---------------------------------------------------------------------------
+class TestServeBoundary:
+    def test_submit_with_boundary_matches_oracle(self):
+        from repro.serve import StencilServer
+        w = jacobi_weights(StencilSpec("box", 2, 1))
+        x = RNG.normal(size=(8, 8)).astype(np.float32)
+        ref = np.asarray(_oracle(jnp.asarray(x), w, 2,
+                                 ("reflect", "periodic")))
+        with StencilServer(max_batch=4, queue_timeout_ms=20) as server:
+            per = server.submit(w, x, t=2).result(timeout=60)
+            got = server.submit(w, x, t=2,
+                                boundary=("reflect", "periodic")) \
+                        .result(timeout=60)
+        assert np.allclose(got, ref, rtol=1e-5, atol=1e-5)
+        assert not np.allclose(per, got), \
+            "boundary must change the served result (distinct plan key)"
+
+
+# ---------------------------------------------------------------------------
+# Distributed: stepwise honors modes; overlap is bitwise + interleaved
+# ---------------------------------------------------------------------------
+def _run_with_devices(n, code):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n}"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       capture_output=True, text=True, env=env, timeout=560)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    return r.stdout
+
+
+class TestDistributedBoundary:
+    def test_stepwise_modes_and_overlap_bitwise(self):
+        out = _run_with_devices(4, """
+            import jax, numpy as np, jax.numpy as jnp
+            from jax.sharding import Mesh
+            from repro.stencil import StencilSpec, make_weights
+            from repro.stencil.reference import apply_stencil_steps
+            from repro.stencil.distributed import (
+                make_distributed_stepper, overlap_stats,
+                reset_overlap_stats, overlap_independence_report)
+            mesh = Mesh(np.array(jax.devices()), ("i",))
+            w = make_weights(StencilSpec("star", 2, 1), seed=4)
+            x = jnp.asarray(np.random.default_rng(5)
+                            .normal(size=(64, 96)).astype(np.float32))
+            for t in (1, 3):
+                for b in (None, ("reflect", "periodic"),
+                          ("zero", "replicate")):
+                    ref = apply_stencil_steps(
+                        x, jnp.asarray(w), t,
+                        "periodic" if b is None else b)
+                    sw = make_distributed_stepper(
+                        mesh, ("i", None), w, t=t, mode="stepwise",
+                        boundary=b)
+                    ov = make_distributed_stepper(
+                        mesh, ("i", None), w, t=t, mode="overlap",
+                        boundary=b)
+                    ysw, yov = sw(x), ov(x)
+                    assert float(jnp.max(jnp.abs(ysw - ref))) < 5e-5, (t, b)
+                    # overlap re-schedules, never re-orders: bit for bit
+                    assert bool(jnp.all(ysw == yov)), (t, b)
+            # trace-time interleave: interior constructed before any recv
+            reset_overlap_stats()
+            step = make_distributed_stepper(mesh, ("i", None), w, t=2,
+                                            mode="overlap")
+            step(x)
+            st = overlap_stats()
+            assert st["interior_before_recv_consumed"] >= 2, st
+            assert st["edge_launches"] == 2 * st["overlap_steps"], st
+            # jaxpr taint proof: the reassembly concat's interior operand
+            # never touches a ppermute result
+            rep = overlap_independence_report(mesh, ("i", None), w, x)
+            assert rep["interior_independent"], rep
+            assert rep["ppermute_eqns"] == 2, rep
+            # fused + non-periodic must refuse
+            try:
+                make_distributed_stepper(mesh, ("i", None), w, t=2,
+                                         mode="fused", boundary="reflect")
+                raise SystemExit("fused accepted a non-periodic spec")
+            except ValueError:
+                pass
+            # overlap needs exactly one sharded dim
+            try:
+                make_distributed_stepper(
+                    Mesh(np.array(jax.devices()).reshape(2, 2),
+                         ("i", "j")), ("i", "j"), w, mode="overlap")
+                raise SystemExit("overlap accepted two sharded dims")
+            except ValueError:
+                pass
+            print("OK")
+        """)
+        assert "OK" in out
+
+    def test_plan_level_overlap_halo_plan(self):
+        out = _run_with_devices(2, """
+            import jax, numpy as np, jax.numpy as jnp
+            from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+            from repro.kernels import stencil_plan
+            from repro.stencil import StencilSpec, jacobi_weights
+            from repro.stencil.reference import apply_stencil_steps
+            mesh = Mesh(np.array(jax.devices()), ("x",))
+            w = jacobi_weights(StencilSpec("box", 2, 1))
+            x = np.random.default_rng(6).normal(size=(64, 64)) \
+                  .astype(np.float32)
+            xs = jax.device_put(x, NamedSharding(mesh, P("x", None)))
+            p = stencil_plan(w, (64, 64), np.float32, 2, mesh=mesh,
+                             shard_spec=("x", None), dist_mode="overlap",
+                             backend="fused_direct",
+                             boundary=("reflect", "periodic"))
+            hp = p.halo_plan
+            assert hp["mode"] == "overlap" and hp["exchanges_per_call"] == 2
+            assert 0 < hp["interior_fraction"] < 1
+            assert "interior_fraction" in p.explain()
+            ref = apply_stencil_steps(jnp.asarray(x), jnp.asarray(w), 2,
+                                      ("reflect", "periodic"))
+            assert float(jnp.max(jnp.abs(p(xs) - ref))) < 5e-5
+            print("OK")
+        """)
+        assert "OK" in out
